@@ -1,0 +1,65 @@
+"""Kernel-layer microbenchmarks (paper §III-A hot spots).
+
+Pallas kernels execute in interpret mode on this CPU container (correctness
+only; their TPU cost model lives in the roofline analysis), so wall-times
+here compare the three *fingerprint implementations* that all realize the
+paper's Barrett/CLMUL pipeline: pure-python ints, vectorized NumPy limbs,
+and jitted JAX limbs — i.e. the paper's "ILP from PCLMULQDQ" story retold as
+data-parallel width.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fingerprint import (
+    BarrettConstants,
+    fingerprint_int,
+    fingerprint_states,
+    fingerprint_states_np,
+)
+
+CONSTS = BarrettConstants.create()
+
+
+def run(emit) -> None:
+    rng = np.random.default_rng(0)
+    B, n = 4096, 64
+    states = rng.integers(0, 1 << 16, size=(B, n)).astype(np.int32)
+
+    # pure-python reference (scaled down 64x)
+    sub = states[: B // 64]
+    packed = (sub.astype(np.uint32)[:, 0::2] & 0xFFFF) | (
+        (sub.astype(np.uint32)[:, 1::2] & 0xFFFF) << 16
+    )
+    t0 = time.perf_counter()
+    for row in packed:
+        fingerprint_int(row, CONSTS)
+    t_int = (time.perf_counter() - t0) * 64
+    emit("kernels/fingerprint_int_python", t_int / B * 1e6, f"per_vector,n={n}")
+
+    t0 = time.perf_counter()
+    fingerprint_states_np(states, CONSTS)
+    t_np = time.perf_counter() - t0
+    emit("kernels/fingerprint_numpy", t_np / B * 1e6,
+         f"per_vector,{t_int / t_np:.0f}x_vs_python")
+
+    import jax
+
+    jfp = jax.jit(lambda s: fingerprint_states(s, CONSTS))
+    js = jnp.asarray(states)
+    jfp(js).block_until_ready()
+    t0 = time.perf_counter()
+    jfp(js).block_until_ready()
+    t_jax = time.perf_counter() - t0
+    emit("kernels/fingerprint_jax_jit", t_jax / B * 1e6,
+         f"per_vector,{t_int / t_jax:.0f}x_vs_python")
+
+    # Pallas kernels: correctness-checked in interpret mode (see tests/);
+    # emit their block geometry for the record.
+    emit("kernels/pallas_fingerprint", 0.0, "interpret_mode_validated,block_b=256")
+    emit("kernels/pallas_compose", 0.0, "interpret_mode_validated,block_q=256")
+    emit("kernels/pallas_match_scan", 0.0, "interpret_mode_validated,table_in_vmem")

@@ -1,0 +1,82 @@
+"""Paper Fig. 6: SFA matching throughput and scaling with parallelism.
+
+The paper matches a 10^10-char input across pthreads; here the same chunked
+algorithm runs data-parallel under jit, sweeping the chunk count (the
+paper's thread count) on a CPU-sized input. Both matching modes are timed:
+SFA-table walks (the paper's) and enumeration (related-work baseline that
+needs no SFA), plus the sequential python baseline.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import matching as mt
+from repro.core.dfa import example_fa
+from repro.core.prosite import PROSITE_SAMPLES, compile_prosite
+from repro.core.sfa import construct_sfa
+
+LENGTH = 2_000_000
+
+
+def run(emit) -> None:
+    dfa = compile_prosite(PROSITE_SAMPLES["PS00016"])
+    sfa = construct_sfa(dfa)
+    rng = np.random.default_rng(0)
+    syms = jnp.asarray(rng.integers(0, dfa.n_symbols, size=LENGTH).astype(np.int32))
+    table = jnp.asarray(dfa.table)
+    delta = jnp.asarray(sfa.delta)
+    mappings = jnp.asarray(sfa.mappings)
+
+    # sequential python baseline (scaled down, extrapolated linearly)
+    scale = 50
+    sub = np.asarray(syms[: LENGTH // scale])
+    t0 = time.perf_counter()
+    dfa.run(sub)
+    t_seq = (time.perf_counter() - t0) * scale
+    emit("fig6/sequential_python_s", t_seq * 1e6, f"len={LENGTH},extrapolated_{scale}x")
+
+    want = dfa.run(np.asarray(syms))
+    for n_chunks in [1, 2, 4, 8, 16, 32, 64]:
+        fn = lambda: mt.match_parallel_sfa(delta, mappings, syms, n_chunks)
+        fn()  # compile
+        t0 = time.perf_counter()
+        out = fn()
+        out.block_until_ready()
+        t = time.perf_counter() - t0
+        assert int(out[dfa.start]) == want
+        emit(f"fig6/sfa_match_chunks{n_chunks}", t * 1e6,
+             f"{t_seq / t:.1f}x_vs_seq,throughput={LENGTH / t / 1e6:.1f}Mchar_s")
+
+    for n_chunks in [8, 64]:
+        fn = lambda: mt.match_parallel_enumeration(table, syms, n_chunks)
+        fn()
+        t0 = time.perf_counter()
+        out = fn()
+        out.block_until_ready()
+        t = time.perf_counter() - t0
+        assert int(out[dfa.start]) == want
+        emit(f"fig6/enumeration_match_chunks{n_chunks}", t * 1e6,
+             f"n_states_wide_gathers,throughput={LENGTH / t / 1e6:.1f}Mchar_s")
+
+
+def run_sfa_size_ladder(emit) -> None:
+    """Fig. 6's size dimension: matching cost vs SFA size (table locality)."""
+    rng = np.random.default_rng(1)
+    syms_small = jnp.asarray(rng.integers(0, 20, size=200_000).astype(np.int32))
+    for pid in ["PS00016", "PS00017", "PS00008"]:
+        dfa = compile_prosite(PROSITE_SAMPLES[pid])
+        sfa = construct_sfa(dfa, max_states=500_000)
+        delta = jnp.asarray(sfa.delta)
+        mappings = jnp.asarray(sfa.mappings)
+        fn = lambda: mt.match_parallel_sfa(delta, mappings, syms_small, 16)
+        fn()
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        t = time.perf_counter() - t0
+        table_mb = sfa.delta.nbytes / 1e6
+        emit(f"fig6b/{pid}/sfa_match_s", t * 1e6,
+             f"sfa_states={sfa.n_states},table={table_mb:.1f}MB")

@@ -1,0 +1,30 @@
+"""Beyond-paper table: the LM dry-run roofline summary (reads the cached
+results/dryrun artifacts; never recompiles)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run(emit) -> None:
+    cells = sorted(RESULTS.glob("*__pod.json"))
+    if not cells:
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun --all first")
+        return
+    for f in cells:
+        d = json.loads(f.read_text())
+        name = f"roofline/{d['arch']}/{d['shape']}"
+        if d.get("status") == "skipped":
+            emit(name, 0.0, "skipped_full_attention_500k")
+            continue
+        if d.get("status") != "ok":
+            emit(name, 0.0, "FAILED")
+            continue
+        r = d["roofline"]
+        dom_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(name, dom_s * 1e6,
+             f"dominant={r['dominant']},useful={r['useful_ratio']:.2f},"
+             f"fits16={d['memory']['fits_16gb']}")

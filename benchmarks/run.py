@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Figure mapping:
+  fig4    bench_construction          (fingerprints + hashing ablation)
+  fig5    bench_parallel_construction (parallel vs best sequential)
+  fig6    bench_matching              (chunk-parallel matching scaling)
+  census  bench_census                (PROSITE DFA -> SFA growth, §IV)
+  kernels bench_kernels               (fingerprint pipeline micro)
+  roofline bench_roofline             (LM dry-run cells, beyond-paper)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_census,
+        bench_construction,
+        bench_kernels,
+        bench_matching,
+        bench_parallel_construction,
+        bench_roofline,
+    )
+
+    print("name,us_per_call,derived")
+
+    def emit(name: str, us: float, derived: str = "") -> None:
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    suites = [
+        bench_construction.run,
+        bench_parallel_construction.run,
+        bench_parallel_construction.run_jax_engine,
+        bench_matching.run,
+        bench_matching.run_sfa_size_ladder,
+        bench_census.run,
+        bench_census.run_synthetic_ladder,
+        bench_kernels.run,
+        bench_roofline.run,
+    ]
+    failures = 0
+    for suite in suites:
+        try:
+            suite(emit)
+        except Exception:  # keep the harness going; report at the end
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

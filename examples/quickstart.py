@@ -1,0 +1,39 @@
+"""Quickstart: the paper's pipeline in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Compile a PROSITE pattern to a minimal DFA, construct its SFA (Rabin
+fingerprints + bulk dedup), and match a protein string in parallel chunks —
+verifying against the sequential matcher.
+"""
+
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import (
+    accepts_parallel,
+    compile_prosite,
+    construct_sfa,
+    synthetic_protein,
+)
+
+# The P-loop NTP-binding motif: [AG]-x(4)-G-K-[ST]
+dfa = compile_prosite("[AG]-x(4)-G-K-[ST]")
+print(f"DFA: {dfa.n_states} states over {dfa.n_symbols} symbols")
+
+sfa = construct_sfa(dfa, engine="vectorized")
+print(f"SFA: {sfa.n_states} states "
+      f"({sfa.stats.candidates} candidates fingerprinted, "
+      f"{sfa.stats.exact_compares} exact compares, "
+      f"{sfa.stats.wall_time_s * 1e3:.1f} ms)")
+
+protein = synthetic_protein(100_000, seed=42)
+protein = protein[:50_000] + "AGGGGGKT" + protein[50_008:]  # plant a P-loop
+
+par = accepts_parallel(dfa, protein, n_chunks=16, sfa=sfa)
+seq = dfa.accepts(protein)
+print(f"parallel match: {par}   sequential match: {seq}")
+assert par == seq == True
+print("OK — chunk-parallel SFA matching agrees with the sequential DFA.")

@@ -1,0 +1,65 @@
+"""Batched serving demo: continuous batching over a small LM.
+
+    PYTHONPATH=src python examples/serve_lm.py [--requests 8] [--slots 4]
+
+Submits a queue of variable-length prompts; the engine prefills each into a
+free slot and decodes all live slots in lockstep (one token per step across
+the batch) — throughput stays flat as requests come and go.
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.config import HOST_MESH, ModelConfig, RunConfig, ShapeConfig
+from repro.models.model import build_model
+from repro.serve.engine import Request, ServeEngine
+from repro.sharding.rules import Dist
+
+TINY = ModelConfig(
+    name="serve_demo", family="dense", n_layers=4, d_model=128, n_heads=8,
+    n_kv_heads=4, d_ff=256, vocab_size=512, head_dim=16, remat="none",
+    tie_embeddings=True,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    run = RunConfig(model=TINY, shape=ShapeConfig("serve", 128, args.slots, "decode"),
+                    mesh=HOST_MESH)
+    engine = ServeEngine(model, run, Dist(), params, n_slots=args.slots,
+                         max_len=128, temperature=args.temperature)
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        L = int(rng.integers(4, 24))
+        engine.submit(Request(
+            prompt=rng.integers(1, TINY.vocab_size, size=L).astype(np.int32),
+            max_new_tokens=args.max_new, rid=i,
+        ))
+    done = engine.run_until_done()
+    dt = time.perf_counter() - t0
+
+    total_tokens = sum(len(r.out_tokens) for r in done)
+    print(f"served {len(done)} requests / {total_tokens} tokens "
+          f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s) on {args.slots} slots")
+    for r in sorted(done, key=lambda r: r.rid)[:4]:
+        print(f"  req {r.rid}: prompt {len(r.prompt)} toks -> {r.out_tokens[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

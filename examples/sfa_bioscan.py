@@ -1,0 +1,61 @@
+"""ScanProsite-style bulk scan (paper §IV): a batch of PROSITE signatures
+matched over a synthetic protein database, chunk-parallel, with timing and
+match localization.
+
+    PYTHONPATH=src python examples/sfa_bioscan.py [--db-size 200] [--len 2000]
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PROSITE_SAMPLES, compile_prosite, construct_sfa, synthetic_protein
+from repro.core import matching as mt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--db-size", type=int, default=200)
+    ap.add_argument("--len", dest="length", type=int, default=2000)
+    ap.add_argument("--patterns", nargs="*",
+                    default=["PS00016", "PS00005", "PS00006", "PS00017"])
+    args = ap.parse_args()
+
+    print(f"building database: {args.db_size} proteins x {args.length} residues")
+    db = [synthetic_protein(args.length, seed=i) for i in range(args.db_size)]
+
+    for pid in args.patterns:
+        pat = PROSITE_SAMPLES[pid]
+        dfa = compile_prosite(pat)
+        t0 = time.perf_counter()
+        sfa = construct_sfa(dfa, max_states=500_000)
+        t_build = time.perf_counter() - t0
+
+        table = jnp.asarray(dfa.table)
+        accepting = jnp.asarray(dfa.accepting)
+        t0 = time.perf_counter()
+        hits = []
+        for i, prot in enumerate(db):
+            syms = jnp.asarray(dfa.encode(prot))
+            L = (len(prot) // 16) * 16
+            flags = mt.find_matches_parallel(table, accepting, syms[:L], dfa.start, 16)
+            if bool(flags.any()):
+                hits.append((i, int(np.argmax(np.asarray(flags)))))
+        t_scan = time.perf_counter() - t0
+        chars = args.db_size * args.length
+        print(f"{pid}  {pat}")
+        print(f"  dfa={dfa.n_states} sfa={sfa.n_states} built in {t_build*1e3:.0f} ms")
+        print(f"  scanned {chars/1e6:.1f} Mchar in {t_scan:.2f} s "
+              f"({chars/t_scan/1e6:.1f} Mchar/s), {len(hits)} proteins hit")
+        if hits:
+            i, pos = hits[0]
+            print(f"  first: protein {i} match ending at {pos}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: SFA construction with Rabin fingerprints (CS.DC 2015) as a
+multi-pod JAX training/serving framework. See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

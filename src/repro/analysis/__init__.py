@@ -1,0 +1,4 @@
+from .hlo import collective_summary, parse_collectives
+from .roofline import HW, roofline_terms
+
+__all__ = ["collective_summary", "parse_collectives", "HW", "roofline_terms"]

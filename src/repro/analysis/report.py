@@ -1,0 +1,128 @@
+"""Re-analyze saved dry-run HLO and generate EXPERIMENTS.md tables.
+
+Every dry-run cell saves its post-SPMD HLO (gzipped); this tool re-runs the
+trip-corrected analysis + roofline over those artifacts — so parser/model
+improvements never require recompiling 60+ cells — and renders the §Dry-run
+and §Roofline markdown tables.
+
+Usage:
+  python -m repro.analysis.report --reanalyze   # refresh JSONs from HLO
+  python -m repro.analysis.report --tables      # print markdown tables
+"""
+
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def reanalyze(results_dir: Path = RESULTS) -> None:
+    from repro.analysis.hlo import analyze_module
+    from repro.analysis.roofline import roofline_terms
+    from repro.config import SHAPES
+    from repro.configs import get_config
+
+    for jf in sorted(results_dir.glob("*.json")):
+        data = json.loads(jf.read_text())
+        if data.get("status") != "ok":
+            continue
+        hf = results_dir / "hlo" / (jf.stem + ".hlo.gz")
+        if not hf.exists():
+            continue
+        with gzip.open(hf, "rt") as f:
+            hlo = f.read()
+        n_dev = data["n_devices"]
+        stats = analyze_module(hlo, n_dev)
+        cfg = get_config(data["arch"])
+        shape = SHAPES[data["shape"]]
+        roof = roofline_terms(
+            cfg, shape,
+            per_device_flops=stats.flops,
+            per_device_bytes=stats.traffic_bytes,
+            per_device_coll_bytes=stats.coll_operand_bytes,
+            n_chips=n_dev,
+        )
+        data["hlo_stats"] = stats.to_json()
+        data["roofline"] = roof.to_json()
+        jf.write_text(json.dumps(data, indent=2))
+        r = data["roofline"]
+        print(f"{jf.stem:55s} dom={r['dominant']:10s} "
+              f"c={r['compute_s']:.3e} m={r['memory_s']:.3e} x={r['collective_s']:.3e} "
+              f"useful={r['useful_ratio']:.2f}")
+
+
+def _fmt(x: float) -> str:
+    return f"{x:.3e}"
+
+
+def tables(results_dir: Path = RESULTS) -> str:
+    rows = []
+    for jf in sorted(results_dir.glob("*__pod.json")):
+        d = json.loads(jf.read_text())
+        rows.append(d)
+    lines = [
+        "| arch | shape | status | args GB | temp GB | fits 16GB | compute s | memory s | collective s | dominant | useful FLOPs ratio |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in rows:
+        if d.get("status") == "skipped":
+            lines.append(
+                f"| {d['arch']} | {d['shape']} | skipped | — | — | — | — | — | — | — | — |"
+            )
+            continue
+        if d.get("status") != "ok":
+            lines.append(f"| {d['arch']} | {d['shape']} | FAILED | | | | | | | | |")
+            continue
+        m, r = d["memory"], d["roofline"]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | ok | {m['argument_gb']:.2f} | {m['temp_gb']:.2f} "
+            f"| {'yes' if m['fits_16gb'] else 'NO'} | {_fmt(r['compute_s'])} | {_fmt(r['memory_s'])} "
+            f"| {_fmt(r['collective_s'])} | {r['dominant']} | {r['useful_ratio']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def multipod_table(results_dir: Path = RESULTS) -> str:
+    lines = [
+        "| arch | shape | status | args GB | temp GB | collectives (count) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for jf in sorted(results_dir.glob("*__multipod.json")):
+        d = json.loads(jf.read_text())
+        if d.get("status") == "skipped":
+            lines.append(f"| {d['arch']} | {d['shape']} | skipped | — | — | — |")
+            continue
+        if d.get("status") != "ok":
+            lines.append(f"| {d['arch']} | {d['shape']} | FAILED | | | |")
+            continue
+        m = d["memory"]
+        per_op = d["hlo_stats"]["per_op"]
+        ops = ", ".join(f"{k}×{v['count']}" for k, v in sorted(per_op.items()))
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | ok | {m['argument_gb']:.2f} "
+            f"| {m['temp_gb']:.2f} | {ops} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reanalyze", action="store_true")
+    ap.add_argument("--tables", action="store_true")
+    ap.add_argument("--dir", default=str(RESULTS))
+    args = ap.parse_args()
+    d = Path(args.dir)
+    if args.reanalyze:
+        reanalyze(d)
+    if args.tables:
+        print(tables(d))
+        print()
+        print(multipod_table(d))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Three-term roofline model for dry-run cells (TPU v5e targets).
+
+  compute    = FLOPs / (chips × peak)          peak = 197 TFLOP/s bf16 / chip
+  memory     = bytes / (chips × HBM bw)        819 GB/s / chip
+  collective = coll_bytes / (chips × link bw)  ~50 GB/s / link
+
+All inputs come from the trip-corrected HLO analysis (per-device numbers, so
+the ``chips`` division is already implicit — see ``roofline_terms``). The
+dominant term is the bottleneck the §Perf loop iterates on. ``MODEL_FLOPS``
+(6·N·D train / 2·N·D forward per token) gives the useful-compute ratio that
+catches remat/dispatch waste.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12       # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    link_bw: float = 50e9            # bytes/s per ICI link
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful FLOPs per step: 6·N_active·tokens (train), 2·N_active·tokens
+    (forward-only prefill/decode)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n_active * tokens
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_per_device: float
+    useful_ratio: float
+
+    def to_json(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_device": self.hlo_flops_per_device,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def roofline_terms(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    *,
+    per_device_flops: float,
+    per_device_bytes: float,
+    per_device_coll_bytes: float,
+    n_chips: int,
+    hw: HW = HW(),
+) -> Roofline:
+    """All three inputs are per-device (post-SPMD HLO shapes are shards), so
+    each term is simply per-device quantity / per-chip bandwidth — identical
+    to the spec's global/(chips × bw) formulation."""
+    compute = per_device_flops / hw.peak_flops
+    memory = per_device_bytes / hw.hbm_bw
+    coll = per_device_coll_bytes / hw.link_bw
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = per_device_flops * n_chips
+    return Roofline(
+        compute_s=compute,
+        memory_s=memory,
+        collective_s=coll,
+        dominant=dominant,
+        model_flops=mf,
+        hlo_flops_per_device=per_device_flops,
+        useful_ratio=(mf / hlo_global) if hlo_global else 0.0,
+    )

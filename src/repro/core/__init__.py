@@ -1,0 +1,50 @@
+"""Core library: the paper's contribution (SFA construction + parallel
+matching with Rabin fingerprints) and the monoid machinery it generalizes to.
+"""
+
+from .dfa import DFA, compile_dfa, example_fa, minimize, random_dfa, subset_construct
+from .fingerprint import (
+    BarrettConstants,
+    DEFAULT_POLY_LOW,
+    barrett_reduce_int,
+    clmul_int,
+    fingerprint_int,
+    fingerprint_states,
+    fingerprint_states_np,
+    is_irreducible,
+    nth_poly_low,
+    poly_mod_int,
+    random_irreducible_poly64,
+)
+from .matching import (
+    accepts_parallel,
+    distributed_match_fn,
+    find_matches_parallel,
+    match_parallel_enumeration,
+    match_parallel_sfa,
+    throughput_matcher,
+)
+from .monoid import (
+    Monoid,
+    affine_monoid,
+    exclusive_scan,
+    function_monoid,
+    reduce,
+    scan,
+    shard_exclusive_scan,
+    shard_reduce,
+    softmax_monoid,
+)
+from .prosite import PROSITE_SAMPLES, compile_prosite, synthetic_protein, translate
+from .regex import AMINO_ACIDS, compile_nfa, parse
+from .sfa import (
+    SFA,
+    FingerprintCollision,
+    SFAStats,
+    StateBlowup,
+    construct_sfa,
+    construct_sfa_sequential,
+    construct_sfa_vectorized,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

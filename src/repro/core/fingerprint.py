@@ -1,0 +1,413 @@
+"""Rabin fingerprints over GF(2^64) via Barrett reduction (paper §II, Eq. 4/5).
+
+An SFA state (a vector of DFA state ids) is viewed as a bit-string, i.e. a
+polynomial ``A(t)`` over Z_2; its fingerprint is ``A(t) mod P(t)`` for a fixed
+irreducible degree-64 polynomial ``P``. Equal fingerprints are *necessary* for
+equality of states, so almost all set-membership comparisons reduce to one
+64-bit compare (the paper's key construction optimization).
+
+Two implementations live here:
+
+* A pure-Python big-int reference (``clmul_int``/``poly_mod_int``/
+  ``fingerprint_int``) — the correctness oracle, also used by the faithful
+  sequential constructor.
+* A JAX implementation on **32-bit limbs** (``fingerprint_u32``). The paper
+  leans on the x86 ``PCLMULQDQ`` instruction; TPUs have no carry-less multiply
+  and no fast 64-bit integers, so we bit-slice: a 32x32 carry-less multiply is
+  32 mask/shift/XOR lane-steps on the VPU, *batched over the whole frontier*,
+  which amortizes the bit loop the way PCLMULQDQ amortizes it in silicon.
+  The >64-bit "folding" method [Gopal et al. 2009] becomes a data-parallel
+  weighted XOR-reduction with precomputed ``x^(64 i) mod P`` constants.
+
+Everything below is non-probabilistic *in the paper's sense*: fingerprint
+equality is always confirmed by an exact vector comparison before two states
+are identified (see ``core.sfa``).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+# Default degree-64 *irreducible* polynomial over Z_2:
+# x^64 + x^4 + x^3 + x + 1 (verified by ``is_irreducible``). ``POLY_LOW`` are
+# the low 64 coefficient bits; the x^64 coefficient is implicit. The paper's
+# collision bound n^2 m / 2^k requires P irreducible.
+DEFAULT_POLY_LOW = 0x000000000000001B
+
+
+def nth_poly_low(i: int) -> int:
+    """Deterministic sequence of irreducible degree-64 polys: index 0 is the
+    default; higher indices draw random irreducibles (used to re-randomize on
+    a detected fingerprint collision — exactness by detection + retry,
+    see core/sfa.py)."""
+    if i == 0:
+        return DEFAULT_POLY_LOW
+    return random_irreducible_poly64(seed=i) & MASK64
+
+
+# --------------------------------------------------------------------------
+# Pure-integer GF(2) reference
+# --------------------------------------------------------------------------
+
+
+def clmul_int(a: int, b: int) -> int:
+    """Carry-less multiply of two GF(2) polynomials given as ints."""
+    acc = 0
+    while b:
+        lsb = b & -b
+        acc ^= a * lsb  # multiply by a power of two == shift, carry-free
+        b ^= lsb
+    return acc
+
+
+def poly_degree(p: int) -> int:
+    return p.bit_length() - 1
+
+
+def poly_mod_int(a: int, p: int) -> int:
+    """Naive polynomial remainder a(t) mod p(t)."""
+    dp = poly_degree(p)
+    while a.bit_length() - 1 >= dp and a:
+        a ^= p << (a.bit_length() - 1 - dp)
+    return a
+
+
+def poly_div_int(a: int, p: int) -> int:
+    """Polynomial quotient floor(a(t) / p(t))."""
+    q = 0
+    dp = poly_degree(p)
+    while a.bit_length() - 1 >= dp and a:
+        shift = a.bit_length() - 1 - dp
+        q ^= 1 << shift
+        a ^= p << shift
+    return q
+
+
+def is_irreducible(p: int) -> bool:
+    """Rabin's irreducibility test for polynomials over GF(2)."""
+    n = poly_degree(p)
+
+    def powmod(base: int, e: int, mod: int) -> int:
+        r = 1
+        base = poly_mod_int(base, mod)
+        while e:
+            if e & 1:
+                r = poly_mod_int(clmul_int(r, base), mod)
+            base = poly_mod_int(clmul_int(base, base), mod)
+            e >>= 1
+        return r
+
+    # x^(2^n) == x mod p
+    h = 2  # the polynomial "x"
+    for _ in range(n):
+        h = poly_mod_int(clmul_int(h, h), p)
+    if h != 2:
+        return False
+    # gcd(x^(2^(n/q)) - x, p) == 1 for prime divisors q of n
+    def prime_divisors(n: int):
+        d, out = 2, set()
+        while d * d <= n:
+            while n % d == 0:
+                out.add(d)
+                n //= d
+            d += 1
+        if n > 1:
+            out.add(n)
+        return out
+
+    def gcd(a: int, b: int) -> int:
+        while b:
+            a, b = b, poly_mod_int(a, b)
+        return a
+
+    for q in prime_divisors(n):
+        h = 2
+        for _ in range(n // q):
+            h = poly_mod_int(clmul_int(h, h), p)
+        if gcd(h ^ 2, p) != 1:
+            return False
+    return True
+
+
+def random_irreducible_poly64(seed: int) -> int:
+    """Draw a random irreducible degree-64 polynomial (paper §II: P(t) is a
+    *random* irreducible polynomial)."""
+    rng = np.random.default_rng(seed)
+    while True:
+        low = int(rng.integers(0, 1 << 63, dtype=np.uint64)) << 1 | 1  # odd
+        p = (1 << 64) | low
+        if is_irreducible(p):
+            return p
+
+
+# --------------------------------------------------------------------------
+# Barrett reduction (paper Eq. 4/5)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BarrettConstants:
+    """Precomputed constants for reduction mod P(t), degree-64.
+
+    ``poly_low``: low 64 bits of P (x^64 coefficient implicit).
+    ``mu_low``:   low 64 bits of M = floor(t^128 / P(t)) (x^64 implicit).
+    """
+
+    poly_low: int
+    mu_low: int
+
+    @classmethod
+    def create(cls, poly_low: int = DEFAULT_POLY_LOW) -> "BarrettConstants":
+        p = (1 << 64) | (poly_low & MASK64)
+        mu = poly_div_int(1 << 128, p)
+        assert mu >> 64 == 1, "M = t^128 / P must have degree exactly 64"
+        return cls(poly_low=poly_low & MASK64, mu_low=mu & MASK64)
+
+    @property
+    def poly(self) -> int:
+        return (1 << 64) | self.poly_low
+
+
+def barrett_reduce_int(a: int, consts: BarrettConstants) -> int:
+    """A(t) mod P(t) via Barrett reduction; A of degree < 128 (Eq. 5)."""
+    p = consts.poly
+    mu = (1 << 64) | consts.mu_low
+    t1pre = a >> 64                       # floor(A / t^64)
+    t1 = clmul_int(t1pre, mu)             # T1pre • M
+    t2pre = t1 >> 64                      # floor(T1 / t^64)
+    t2 = clmul_int(t2pre, p)              # T2pre • P
+    return (a ^ t2) & MASK64              # A ⊕ T2, degree < 64
+
+
+def fingerprint_int(words: np.ndarray, consts: BarrettConstants) -> int:
+    """Fingerprint of a uint32-word stream via the folding method.
+
+    fp = XOR_i barrett(clmul(word_i, x^(32 i) mod P)) — linearity of the
+    residue lets the per-word products be folded *before* a single reduction
+    round, which is exactly what makes this data-parallel.
+    """
+    weights = fold_weights_int(len(words), consts)
+    acc = 0
+    for w, wt in zip(np.asarray(words, dtype=np.uint64).tolist(), weights):
+        acc ^= clmul_int(int(w), wt)
+    return barrett_reduce_int(acc, consts)
+
+
+@functools.lru_cache(maxsize=64)
+def _fold_weights_cached(n_words: int, poly_low: int) -> tuple:
+    p = (1 << 64) | poly_low
+    out = []
+    w = 1  # x^0 mod P
+    for _ in range(n_words):
+        out.append(w)
+        w = poly_mod_int(w << 32, p)  # advance by x^32
+    return tuple(out)
+
+
+def fold_weights_int(n_words: int, consts: BarrettConstants) -> tuple:
+    return _fold_weights_cached(n_words, consts.poly_low)
+
+
+# --------------------------------------------------------------------------
+# JAX implementation on 32-bit limbs
+# --------------------------------------------------------------------------
+# 64-bit quantities are (hi, lo) uint32 pairs; 128-bit are (l3, l2, l1, l0)
+# with l0 the least-significant limb.
+
+
+def _u32(x) -> jnp.ndarray:
+    return jnp.asarray(x, dtype=jnp.uint32)
+
+
+def clmul32(a: jnp.ndarray, b: jnp.ndarray) -> tuple:
+    """Carry-less 32x32 -> 64-bit multiply, bit-sliced over 32 steps.
+
+    Branch-free: each step masks on bit i of ``b`` and XOR-accumulates
+    ``a << i`` into a 64-bit (hi, lo) accumulator. Fully vectorized over the
+    operands' leading batch dims.
+    """
+    a = _u32(a)
+    b = _u32(b)
+    zero = jnp.zeros_like(a)
+
+    def body(i, carry):
+        hi, lo = carry
+        bit = (b >> i) & _u32(1)
+        mask = (_u32(0) - bit)  # 0x0 or 0xFFFFFFFF
+        lo = lo ^ ((a << i) & mask)
+        # (a >> (32 - i)) without the undefined i==0 shift-by-32:
+        hi = hi ^ (((a >> (_u32(31) - i)) >> 1) & mask)
+        return hi, lo
+
+    hi, lo = jax.lax.fori_loop(0, 32, body, (zero, zero), unroll=True)
+    return hi, lo
+
+
+def xor64(x: tuple, y: tuple) -> tuple:
+    return x[0] ^ y[0], x[1] ^ y[1]
+
+
+def clmul64(a: tuple, b: tuple) -> tuple:
+    """Carry-less 64x64 -> 128-bit multiply from four 32-bit partials."""
+    ah, al = a
+    bh, bl = b
+    ll_h, ll_l = clmul32(al, bl)   # -> limbs 1,0
+    lh_h, lh_l = clmul32(al, bh)   # -> limbs 2,1
+    hl_h, hl_l = clmul32(ah, bl)   # -> limbs 2,1
+    hh_h, hh_l = clmul32(ah, bh)   # -> limbs 3,2
+    l0 = ll_l
+    l1 = ll_h ^ lh_l ^ hl_l
+    l2 = lh_h ^ hl_h ^ hh_l
+    l3 = hh_h
+    return l3, l2, l1, l0
+
+
+def barrett_reduce_u32(a128: tuple, consts: BarrettConstants) -> tuple:
+    """Barrett reduction of a 128-bit polynomial to 64 bits, limb form."""
+    l3, l2, l1, l0 = a128
+    p = (_u32(consts.poly_low >> 32), _u32(consts.poly_low & 0xFFFFFFFF))
+    mu = (_u32(consts.mu_low >> 32), _u32(consts.mu_low & 0xFFFFFFFF))
+
+    t1pre = (l3, l2)  # floor(A / t^64)
+    # T1 = clmul(T1pre, M) with M = t^64 + mu  ->  T1>>64 = T1pre ^ hi64(T1pre*mu)
+    m3, m2, _, _ = clmul64(t1pre, mu)
+    t2pre = xor64(t1pre, (m3, m2))
+    # T2 = clmul(T2pre, P) with P = t^64 + p_low. The (T2pre << 64) part only
+    # touches limbs 2..3, which cancel against A's by construction; the low 64
+    # result bits come from A_low ^ low64(T2pre * p_low).
+    _, _, q1, q0 = clmul64(t2pre, p)
+    return l1 ^ q1, l0 ^ q0
+
+
+def fold_weights_u32(n_words: int, consts: BarrettConstants) -> jnp.ndarray:
+    """(n_words, 2) uint32 array of x^(32 i) mod P constants (hi, lo)."""
+    ws = fold_weights_int(n_words, consts)
+    arr = np.zeros((n_words, 2), dtype=np.uint32)
+    for i, w in enumerate(ws):
+        arr[i, 0] = (w >> 32) & 0xFFFFFFFF
+        arr[i, 1] = w & 0xFFFFFFFF
+    return jnp.asarray(arr)
+
+
+def fingerprint_u32(words: jnp.ndarray, weights: jnp.ndarray,
+                    consts: BarrettConstants) -> tuple:
+    """Rabin fingerprint of ``words`` (..., W) uint32 -> ((...), (...)) u32 pair.
+
+    The fold: fp = reduce( XOR_i clmul64((0, word_i), weight_i) ). Each word
+    contributes a 96-bit product (32x64); the XOR-accumulated 128-bit value is
+    Barrett-reduced once at the end.
+    """
+    words = _u32(words)
+    wh = weights[..., 0]
+    wl = weights[..., 1]
+
+    # clmul64((0, w), (wh, wl)) = limbs from clmul32(w, wl) and clmul32(w, wh)
+    p_lo_h, p_lo_l = clmul32(words, wl)   # limbs 1,0
+    p_hi_h, p_hi_l = clmul32(words, wh)   # limbs 2,1
+    l0 = p_lo_l
+    l1 = p_lo_h ^ p_hi_l
+    l2 = p_hi_h
+
+    # XOR-reduce over the word axis (last axis).
+    l0 = _xor_reduce(l0)
+    l1 = _xor_reduce(l1)
+    l2 = _xor_reduce(l2)
+    l3 = jnp.zeros_like(l2)
+    return barrett_reduce_u32((l3, l2, l1, l0), consts)
+
+
+def _xor_reduce(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce(x, jnp.zeros((), x.dtype), jax.lax.bitwise_xor, (x.ndim - 1,))
+
+
+def pack_states_u32(states: jnp.ndarray) -> jnp.ndarray:
+    """Pack an int32 state-id vector (..., n) into uint32 words (..., ceil(n/2))
+    with two 16-bit ids per word (the paper stores FA states as uint16)."""
+    states = jnp.asarray(states, dtype=jnp.uint32)
+    n = states.shape[-1]
+    if n % 2:
+        pad = [(0, 0)] * (states.ndim - 1) + [(0, 1)]
+        states = jnp.pad(states, pad)
+    lo = states[..., 0::2] & jnp.uint32(0xFFFF)
+    hi = states[..., 1::2] & jnp.uint32(0xFFFF)
+    return lo | (hi << 16)
+
+
+def fingerprint_states(states: jnp.ndarray, consts: BarrettConstants) -> jnp.ndarray:
+    """Fingerprint batched SFA state vectors: (..., n) int32 -> (..., 2) uint32.
+
+    Output [..., 0] is the high 32 bits, [..., 1] the low 32 bits.
+    """
+    words = pack_states_u32(states)
+    weights = fold_weights_u32(words.shape[-1], consts)
+    hi, lo = fingerprint_u32(words, weights, consts)
+    return jnp.stack([hi, lo], axis=-1)
+
+
+def fingerprint_states_np(states: np.ndarray, consts: BarrettConstants) -> np.ndarray:
+    """NumPy twin of :func:`fingerprint_states` (vectorized, used by the fast
+    CPU constructor). Works in 32-bit word space mirroring the JAX path
+    exactly. Returns (..., 2) uint32 [hi, lo]."""
+    states = np.asarray(states, dtype=np.uint32)
+    n = states.shape[-1]
+    if n % 2:
+        states = np.pad(states, [(0, 0)] * (states.ndim - 1) + [(0, 1)])
+    words = (states[..., 0::2] & np.uint32(0xFFFF)) | (
+        (states[..., 1::2] & np.uint32(0xFFFF)) << np.uint32(16)
+    )
+    ws = fold_weights_int(words.shape[-1], consts)
+    w_lo = np.asarray([w & 0xFFFFFFFF for w in ws], dtype=np.uint32)
+    w_hi = np.asarray([(w >> 32) & 0xFFFFFFFF for w in ws], dtype=np.uint32)
+
+    p_lo_h, p_lo_l = _clmul32_np(words, w_lo)
+    p_hi_h, p_hi_l = _clmul32_np(words, w_hi)
+    l0 = _xor_reduce_np(p_lo_l)
+    l1 = _xor_reduce_np(p_lo_h ^ p_hi_l)
+    l2 = _xor_reduce_np(p_hi_h)
+    l3 = np.zeros_like(l2)
+    hi, lo = _barrett_np((l3, l2, l1, l0), consts)
+    return np.stack([hi, lo], axis=-1)
+
+
+def _clmul32_np(a: np.ndarray, b: np.ndarray) -> tuple:
+    a = a.astype(np.uint32)
+    b = np.broadcast_to(np.asarray(b, dtype=np.uint32), a.shape)
+    hi = np.zeros_like(a)
+    lo = np.zeros_like(a)
+    for i in range(32):
+        bit = (b >> np.uint32(i)) & np.uint32(1)
+        mask = np.where(bit != 0, np.uint32(0xFFFFFFFF), np.uint32(0))
+        lo ^= (a << np.uint32(i)) & mask
+        hi ^= (((a >> np.uint32(31 - i)) >> np.uint32(1)) & mask)
+    return hi, lo
+
+
+def _xor_reduce_np(x: np.ndarray) -> np.ndarray:
+    return np.bitwise_xor.reduce(x, axis=-1)
+
+
+def _barrett_np(a128: tuple, consts: BarrettConstants) -> tuple:
+    l3, l2, l1, l0 = a128
+    p = (np.uint32(consts.poly_low >> 32), np.uint32(consts.poly_low & 0xFFFFFFFF))
+    mu = (np.uint32(consts.mu_low >> 32), np.uint32(consts.mu_low & 0xFFFFFFFF))
+    m3, m2, _, _ = _clmul64_np((l3, l2), mu)
+    t2 = (l3 ^ m3, l2 ^ m2)
+    _, _, q1, q0 = _clmul64_np(t2, p)
+    return l1 ^ q1, l0 ^ q0
+
+
+def _clmul64_np(a: tuple, b: tuple) -> tuple:
+    ah, al = a
+    bh, bl = np.asarray(b[0], dtype=np.uint32), np.asarray(b[1], dtype=np.uint32)
+    ll_h, ll_l = _clmul32_np(al, bl)
+    lh_h, lh_l = _clmul32_np(al, np.broadcast_to(bh, al.shape))
+    hl_h, hl_l = _clmul32_np(ah, np.broadcast_to(bl, ah.shape))
+    hh_h, hh_l = _clmul32_np(ah, np.broadcast_to(bh, ah.shape))
+    return hh_h, lh_h ^ hl_h ^ hh_l, ll_h ^ lh_l ^ hl_l, ll_l

@@ -1,0 +1,170 @@
+"""The framework's unifying abstraction: parallelize a left fold by lifting
+each step into a monoid of composable elements.
+
+This is the paper's SFA idea stated generally. An SFA state *is* the lifted
+element (the transition function of a string chunk); combining chunk results
+by function composition is the monoid reduce. The exact same machinery
+parallelizes the model zoo's recurrences:
+
+* ``function_monoid``  — finite-function composition (SFA matching; paper §I).
+* ``affine_monoid``    — diagonal affine maps ``h' = a·h + b`` (mamba2 SSD
+  inter-chunk recurrence, RG-LRU).
+* ``softmax_monoid``   — flash-attention partial-softmax combining
+  ``(m, s, o)`` (chunk-parallel long-context decode).
+
+All combines are associative, so they work under ``jax.lax.associative_scan``
+(intra-device log-depth scan), plain ``reduce`` (sequential fold over few
+chunks), and ``shard_reduce``/``shard_scan`` (cross-device combining inside
+``shard_map`` — the pod-scale version of the paper's "combine the result
+vectors by reduction").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Monoid:
+    """An associative combine with identity.
+
+    ``combine(a, b)`` means "a happens first, then b" — order matters for the
+    non-commutative instances (function composition).
+    ``identity(like)`` builds the identity element shaped like one element.
+    """
+
+    combine: Callable[[Any, Any], Any]
+    identity: Callable[[Any], Any]
+    name: str = "monoid"
+
+
+# --------------------------------------------------------------------------
+# Instances
+# --------------------------------------------------------------------------
+
+
+def function_monoid() -> Monoid:
+    """Elements: mapping vectors ``f`` with shape (..., n) int32;
+    ``combine(f, g)[..., q] = g[..., f[..., q]]`` (apply f, then g)."""
+
+    def combine(f, g):
+        return jnp.take_along_axis(g, f, axis=-1)
+
+    def identity(like):
+        n = like.shape[-1]
+        ident = jnp.arange(n, dtype=like.dtype)
+        return jnp.broadcast_to(ident, like.shape)
+
+    return Monoid(combine, identity, "function_composition")
+
+
+def affine_monoid() -> Monoid:
+    """Elements: pairs ``(a, b)`` representing ``h' = a * h + b`` elementwise.
+    ``combine((a1,b1),(a2,b2)) = (a2*a1, a2*b1 + b2)``."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    def identity(like):
+        a, b = like
+        return jnp.ones_like(a), jnp.zeros_like(b)
+
+    return Monoid(combine, identity, "affine")
+
+
+def softmax_monoid() -> Monoid:
+    """Elements: ``(m, s, o)`` — running max, unnormalized denominator, and
+    unnormalized weighted sum from a chunk of attention scores. Final output
+    is ``o / s``. Associative and commutative."""
+
+    def combine(x, y):
+        m1, s1, o1 = x
+        m2, s2, o2 = y
+        m = jnp.maximum(m1, m2)
+        e1 = jnp.exp(m1 - m)
+        e2 = jnp.exp(m2 - m)
+        return m, s1 * e1 + s2 * e2, o1 * e1 + o2 * e2
+
+    def identity(like):
+        m, s, o = like
+        neg_inf = jnp.full_like(m, -jnp.inf)
+        return neg_inf, jnp.zeros_like(s), jnp.zeros_like(o)
+
+    return Monoid(combine, identity, "softmax")
+
+
+# --------------------------------------------------------------------------
+# Execution strategies
+# --------------------------------------------------------------------------
+
+
+def reduce(monoid: Monoid, xs, axis: int = 0):
+    """Sequential fold along ``axis`` (cheap when the chunk count is small)."""
+    moved = jax.tree.map(lambda x: jnp.moveaxis(x, axis, 0), xs)
+    first = jax.tree.map(lambda x: x[0], moved)
+    rest = jax.tree.map(lambda x: x[1:], moved)
+    n_rest = jax.tree.leaves(rest)[0].shape[0]
+    if n_rest == 0:
+        return first
+
+    def body(carry, x):
+        return monoid.combine(carry, x), None
+
+    out, _ = jax.lax.scan(body, first, rest)
+    return out
+
+
+def scan(monoid: Monoid, xs, axis: int = 0, reverse: bool = False):
+    """Inclusive prefix-combine along ``axis`` via ``associative_scan``
+    (log-depth — the data-parallel execution the paper targets)."""
+    return jax.lax.associative_scan(monoid.combine, xs, axis=axis, reverse=reverse)
+
+
+def exclusive_scan(monoid: Monoid, xs, axis: int = 0):
+    """Exclusive prefix: element i gets the combine of elements [0, i).
+
+    Used to recover each chunk's *entry state* from per-chunk lifted elements
+    (matching needs to know where the DFA was at every chunk boundary)."""
+    inclusive = scan(monoid, xs, axis=axis)
+    one = jax.tree.map(lambda x: jax.lax.slice_in_dim(x, 0, 1, axis=axis), xs)
+    ident = monoid.identity(one)  # identity element, shaped like a length-1 slice
+    return jax.tree.map(
+        lambda inc, idn: jnp.concatenate(
+            [idn, jax.lax.slice_in_dim(inc, 0, inc.shape[axis] - 1, axis=axis)],
+            axis=axis,
+        ),
+        inclusive,
+        ident,
+    )
+
+
+def shard_reduce(monoid: Monoid, x_local, axis_name: str):
+    """Combine one element per device along a mesh axis, inside ``shard_map``.
+
+    Strategy (paper §IV-C at pod scale): ``all_gather`` the lifted elements —
+    tiny (an SFA mapping is n ints) — then fold locally. One collective of
+    O(devices · element_size) beats log-depth permutes for small elements.
+    Returns the total combine, replicated across the axis.
+    """
+    gathered = jax.tree.map(
+        lambda x: jax.lax.all_gather(x, axis_name, axis=0), x_local
+    )
+    return reduce(monoid, gathered, axis=0)
+
+
+def shard_exclusive_scan(monoid: Monoid, x_local, axis_name: str):
+    """Exclusive prefix-combine across a mesh axis: device i receives the
+    combine of devices [0, i)'s elements. Entry-state computation for
+    distributed matching."""
+    gathered = jax.tree.map(
+        lambda x: jax.lax.all_gather(x, axis_name, axis=0), x_local
+    )
+    prefixes = exclusive_scan(monoid, gathered, axis=0)
+    idx = jax.lax.axis_index(axis_name)
+    return jax.tree.map(lambda x: jax.lax.dynamic_index_in_dim(x, idx, 0, keepdims=False), prefixes)

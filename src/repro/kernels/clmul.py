@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: batched Rabin fingerprinting (clmul fold + Barrett).
+
+The paper's hot loop is fingerprinting every candidate SFA state (frontier ×
+alphabet of them per round). On x86 it leans on ``PCLMULQDQ``; the TPU has no
+carry-less multiply, so the kernel bit-slices: a 32×32 clmul is 32 unrolled
+mask/shift/XOR steps on the VPU, executed for a whole block of state vectors
+at once — per-fingerprint cost is amortized across VPU lanes instead of
+per-instruction silicon.
+
+Layout (the paper's §III-B3 locality argument, restated for VMEM):
+  - the packed word block ``(block_b, W)`` streams HBM→VMEM once per block;
+  - the fold constants ``x^(32 i) mod P`` (W × 2 u32) and the Barrett
+    constants are tiny and stay VMEM-resident across the whole grid;
+  - each block writes a ``(block_b, 2)`` fingerprint tile.
+
+Block size is chosen so ``block_b × W × 4`` bytes plus the 3 accumulator
+copies fit comfortably in VMEM (≤ ~2 MB by default).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.fingerprint import BarrettConstants
+
+
+def _clmul32_block(a: jnp.ndarray, b: jnp.ndarray) -> tuple:
+    """(…,) u32 × (…,) u32 -> 64-bit (hi, lo) pair; fully unrolled 32 steps."""
+    hi = jnp.zeros_like(a)
+    lo = jnp.zeros_like(a)
+    one = jnp.uint32(1)
+    for i in range(32):
+        bit = (b >> jnp.uint32(i)) & one
+        mask = jnp.uint32(0) - bit
+        lo = lo ^ ((a << jnp.uint32(i)) & mask)
+        hi = hi ^ (((a >> jnp.uint32(31 - i)) >> one) & mask)
+    return hi, lo
+
+
+def _fingerprint_kernel(words_ref, weights_ref, consts_ref, out_ref):
+    words = words_ref[...]            # (Bb, W) uint32
+    w_hi = weights_ref[..., 0][None]  # (1, W)
+    w_lo = weights_ref[..., 1][None]
+
+    # Fold: 96-bit partial products, XOR-reduced over the word axis.
+    p_lo_h, p_lo_l = _clmul32_block(words, jnp.broadcast_to(w_lo, words.shape))
+    p_hi_h, p_hi_l = _clmul32_block(words, jnp.broadcast_to(w_hi, words.shape))
+
+    def xred(x):
+        return jax.lax.reduce(x, jnp.zeros((), x.dtype), jax.lax.bitwise_xor, (1,))
+
+    l0 = xred(p_lo_l)                 # (Bb,)
+    l1 = xred(p_lo_h ^ p_hi_l)
+    l2 = xred(p_hi_h)
+
+    # Barrett reduction with constants [p_hi, p_lo, mu_hi, mu_lo].
+    c = consts_ref[...]
+    p = (jnp.broadcast_to(c[0], l2.shape), jnp.broadcast_to(c[1], l2.shape))
+    mu = (jnp.broadcast_to(c[2], l2.shape), jnp.broadcast_to(c[3], l2.shape))
+
+    zeros = jnp.zeros_like(l2)
+    t1pre = (zeros, l2)
+    m3, m2 = _clmul64_hi(t1pre, mu)
+    t2pre = (t1pre[0] ^ m3, t1pre[1] ^ m2)
+    q1, q0 = _clmul64_lo(t2pre, p)
+    out_ref[..., 0] = l1 ^ q1
+    out_ref[..., 1] = l0 ^ q0
+
+
+def _clmul64_hi(a: tuple, b: tuple) -> tuple:
+    """High 64 bits (limbs 3, 2) of a 64×64 carry-less product."""
+    ah, al = a
+    bh, bl = b
+    ll_h, _ = _clmul32_block(al, bl)
+    lh_h, lh_l = _clmul32_block(al, bh)
+    hl_h, hl_l = _clmul32_block(ah, bl)
+    hh_h, hh_l = _clmul32_block(ah, bh)
+    l2 = lh_h ^ hl_h ^ hh_l
+    l3 = hh_h
+    return l3, l2
+
+
+def _clmul64_lo(a: tuple, b: tuple) -> tuple:
+    """Low 64 bits (limbs 1, 0) of a 64×64 carry-less product."""
+    ah, al = a
+    bh, bl = b
+    ll_h, ll_l = _clmul32_block(al, bl)
+    _, lh_l = _clmul32_block(al, bh)
+    _, hl_l = _clmul32_block(ah, bl)
+    l0 = ll_l
+    l1 = ll_h ^ lh_l ^ hl_l
+    return l1, l0
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def fingerprint_pallas(
+    words: jnp.ndarray,
+    weights: jnp.ndarray,
+    consts_limbs: jnp.ndarray,
+    *,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched fingerprints. words: (B, W) u32; weights: (W, 2) u32;
+    consts_limbs: (4,) u32 [p_hi, p_lo, mu_hi, mu_lo] -> (B, 2) u32."""
+    B, W = words.shape
+    block_b = min(block_b, B)
+    if B % block_b:
+        pad = block_b - B % block_b
+        words = jnp.pad(words, ((0, pad), (0, 0)))
+    grid = (words.shape[0] // block_b,)
+    out = pl.pallas_call(
+        _fingerprint_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, W), lambda i: (i, 0)),
+            pl.BlockSpec((W, 2), lambda i: (0, 0)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((words.shape[0], 2), jnp.uint32),
+        interpret=interpret,
+    )(words, weights, consts_limbs)
+    return out[:B]
+
+
+def consts_limbs_of(consts: BarrettConstants) -> jnp.ndarray:
+    return jnp.asarray(
+        [
+            (consts.poly_low >> 32) & 0xFFFFFFFF,
+            consts.poly_low & 0xFFFFFFFF,
+            (consts.mu_low >> 32) & 0xFFFFFFFF,
+            consts.mu_low & 0xFFFFFFFF,
+        ],
+        dtype=jnp.uint32,
+    )

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: enumeration-mode chunk matching with a VMEM-resident
+transposed transition table.
+
+Per chunk, the DFA runs from *all* n start states simultaneously (the SFA
+idea applied at matching time). Each character step is two one-hot MXU
+contractions instead of gathers:
+
+    cols[b, :]  = onehot(sym[b]) @ table_T          # (k,) x (k, n) -> (n,)
+    v'[b, q]    = Σ_j onehot(v)[b, q, j] · cols[b, j]
+
+``table_T`` is the paper's transposed (symbol-major) table — here it is
+pinned in VMEM for the whole chunk, which is the TPU restatement of the
+paper's L1-locality argument (§III-B3): one HBM read of the table serves
+every character of every chunk in the block.
+
+The kernel processes one chunk per grid cell with the time loop inside
+(``fori_loop``), so the sequential dependency stays on-chip; chunk-level
+parallelism comes from the grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _match_kernel(table_t_ref, chunks_ref, out_ref):
+    table_t = table_t_ref[...].astype(jnp.float32)       # (k, n)
+    syms = chunks_ref[...]                               # (1, L) int32
+    k, n = table_t.shape
+    L = syms.shape[-1]
+
+    def step(t, v):
+        sym = syms[0, t]
+        sym_onehot = (
+            jax.lax.broadcasted_iota(jnp.int32, (1, k), 1) == sym
+        ).astype(jnp.float32)                            # (1, k)
+        cols = jax.lax.dot_general(                      # (1, n) = δ(., sym)
+            sym_onehot, table_t, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        v_onehot = (
+            v[:, None] == jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+        ).astype(jnp.float32)                            # (n, n)
+        nxt = jax.lax.dot_general(                       # (n, 1)
+            v_onehot, cols.T, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return nxt[:, 0].astype(jnp.int32)
+
+    v0 = jax.lax.iota(jnp.int32, n)
+    out_ref[...] = jax.lax.fori_loop(0, L, step, v0)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def match_chunks_pallas(
+    table: jnp.ndarray,
+    chunks: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """table: (n, k) int32; chunks: (B, L) int32 -> (B, n) chunk mappings."""
+    n, k = table.shape
+    B, L = chunks.shape
+    table_t = table.T  # symbol-major (paper §III-B3)
+    out = pl.pallas_call(
+        _match_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((k, n), lambda b: (0, 0)),
+            pl.BlockSpec((1, L), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n), jnp.int32),
+        interpret=interpret,
+    )(table_t, chunks)
+    return out

@@ -1,0 +1,63 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On this CPU container the kernels always run with ``interpret=True`` (the
+kernel body executes step-by-step on CPU, validating semantics); on a real
+TPU runtime ``interpret=False`` compiles them to Mosaic. The flag defaults
+from the active backend so call-sites never branch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fingerprint import BarrettConstants, fold_weights_u32
+
+from .clmul import consts_limbs_of, fingerprint_pallas
+from .compose import compose_pallas
+from .match_scan import match_chunks_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fingerprint(
+    words: jnp.ndarray,
+    consts: BarrettConstants,
+    *,
+    block_b: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Batched Rabin fingerprints of packed (B, W) uint32 words -> (B, 2)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    weights = fold_weights_u32(words.shape[-1], consts)
+    return fingerprint_pallas(
+        words, weights, consts_limbs_of(consts), block_b=block_b, interpret=interpret
+    )
+
+
+def compose(
+    f: jnp.ndarray,
+    g: jnp.ndarray,
+    *,
+    block_q: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Function-composition combine (f then g): (B, n) x (B, n) -> (B, n)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return compose_pallas(f, g, block_q=block_q, interpret=interpret)
+
+
+def match_chunks(
+    table: jnp.ndarray,
+    chunks: jnp.ndarray,
+    *,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Per-chunk transition functions: (n, k), (B, L) -> (B, n)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return match_chunks_pallas(table, chunks, interpret=interpret)

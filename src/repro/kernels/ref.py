@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel twin must reproduce
+bit-exactly (integer kernels) or to float tolerance (matmul-based kernels
+compute exact small-integer arithmetic in f32, so they are bit-exact too).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fingerprint import (
+    BarrettConstants,
+    fingerprint_u32,
+    fold_weights_u32,
+)
+
+
+def fingerprint_ref(words: jnp.ndarray, consts: BarrettConstants) -> jnp.ndarray:
+    """Rabin/Barrett fingerprint of packed word streams.
+
+    words: (B, W) uint32 -> (B, 2) uint32 [hi, lo].
+    """
+    weights = fold_weights_u32(words.shape[-1], consts)
+    hi, lo = fingerprint_u32(words, weights, consts)
+    return jnp.stack([hi, lo], axis=-1)
+
+
+def compose_ref(f: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Function-composition monoid combine: out[b, q] = g[b, f[b, q]].
+
+    f, g: (B, n) int32 mapping vectors ("f then g").
+    """
+    return jnp.take_along_axis(g, f, axis=-1)
+
+
+def match_chunks_ref(table: jnp.ndarray, chunks: jnp.ndarray) -> jnp.ndarray:
+    """Enumeration-mode chunk matching: per chunk, run the DFA from every
+    start state. table: (n, k) int32; chunks: (B, L) int32 -> (B, n) mappings.
+    """
+    n = table.shape[0]
+
+    def one(chunk):
+        def step(v, sym):
+            return table[v, sym], None
+
+        out, _ = jax.lax.scan(step, jnp.arange(n, dtype=jnp.int32), chunk)
+        return out
+
+    return jax.vmap(one)(chunks)

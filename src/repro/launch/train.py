@@ -1,0 +1,83 @@
+"""Pod training launcher.
+
+    python -m repro.launch.train --arch qwen3_8b --steps 1000 \
+        [--coordinator <addr> --num-processes N --process-id I]
+
+On a real TPU pod each host runs this with its process id;
+``jax.distributed.initialize`` wires the runtime together and
+``make_production_mesh`` lays the global device mesh. On a dev box it runs
+on whatever devices exist. See launch/run_pod.sh for the per-host wrapper.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=1000)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--coordinator", default=None)
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.coordinator:
+        jax.distributed.initialize(
+            coordinator_address=args.coordinator,
+            num_processes=args.num_processes,
+            process_id=args.process_id,
+        )
+
+    from repro.configs import get_run
+    from repro.data import DataConfig, make_pipeline
+    from repro.launch.mesh import make_host_mesh, make_production_mesh, mesh_config
+    from repro.models.model import build_model
+    from repro.sharding.rules import Dist, Rules
+    from repro.train.trainer import Trainer
+
+    n_dev = len(jax.devices())
+    if n_dev >= 512:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        run = get_run(args.arch, args.shape, mesh_config(multi_pod=args.multi_pod))
+    else:
+        # elastic: whatever devices this deployment actually has
+        model_par = 1
+        mesh = make_host_mesh(n_dev // model_par, model_par)
+        run = get_run(args.arch, args.shape)
+    if args.checkpoint_dir:
+        run = run.replace(checkpoint_dir=args.checkpoint_dir)
+
+    cfg = run.model
+    rules = Rules(mesh_axes=tuple(mesh.axis_names)).with_overrides(cfg.sharding_overrides)
+    dist = Dist.for_mesh(mesh, rules)
+    model = build_model(cfg)
+
+    # per-host data sharding: this host produces only its rows
+    rows_total = run.shape.global_batch
+    per_host = rows_total // max(jax.process_count(), 1)
+    data = make_pipeline(DataConfig(
+        vocab_size=cfg.vocab_size,
+        seq_len=run.shape.seq_len,
+        global_batch=rows_total,
+        row_start=jax.process_index() * per_host,
+        rows_local=-1 if jax.process_count() == 1 else per_host,
+        seed=run.seed,
+    ))
+
+    trainer = Trainer(model=model, run=run, dist=dist, data=data)
+    trainer.install_preemption_handler()
+    with mesh:
+        out = trainer.fit(args.steps)
+    print(f"final loss {out['final_loss']}")
+    data.stop()
+
+
+if __name__ == "__main__":
+    main()

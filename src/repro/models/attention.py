@@ -1,0 +1,330 @@
+"""Attention: GQA / MQA / sliding-window / qk-norm / bias variants.
+
+Training and prefill use a blockwise (flash-style) formulation in pure JAX:
+an outer scan over query chunks and an inner scan over KV chunks carrying the
+``(m, s, o)`` partial-softmax accumulators — the ``core.monoid.softmax_monoid``
+element. This keeps peak memory at one (Cq × Ckv) score block per head
+regardless of sequence length, which is what lets the 32k prefill cells lower
+without materializing S² scores.
+
+Decode attends one query against the whole cache. Windowed layers (SWA /
+recurrentgemma local attention) use a **ring cache** of window size, so the
+``long_500k`` cells hold O(window), not O(S), state. With the default rules
+the cache's sequence axis shards over the ``model`` mesh axis and XLA's
+reductions implement the cross-shard softmax combine — the paper's
+chunk-parallel match + associative combine, applied to attention.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.sharding.rules import Rules, constrain
+
+from .base import ParamSpec
+from .layers import rmsnorm, rope
+
+NEG_INF = -1e30
+
+
+def _snap_divisor(n: int, chunk: int) -> int:
+    """Largest divisor of n that is <= chunk (chunked attention needs exact
+    tiling; e.g. whisper's 1500-frame encoder snaps 512 -> 375)."""
+    chunk = min(chunk, n)
+    while n % chunk:
+        chunk -= 1
+    return max(chunk, 1)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def attention_specs(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, H, KV = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim()
+    pd = cfg.param_dtype
+    specs = {
+        "wq": ParamSpec((d, H, dh), ("embed", "heads", "head_dim"), pd, "uniform_scaled"),
+        "wk": ParamSpec((d, KV, dh), ("embed", "kv_heads", "head_dim"), pd, "uniform_scaled"),
+        "wv": ParamSpec((d, KV, dh), ("embed", "kv_heads", "head_dim"), pd, "uniform_scaled"),
+        "wo": ParamSpec((H, dh, d), ("heads", "head_dim", "embed"), pd, "uniform_scaled"),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((H, dh), ("heads", "head_dim"), pd, "zeros")
+        specs["bk"] = ParamSpec((KV, dh), ("kv_heads", "head_dim"), pd, "zeros")
+        specs["bv"] = ParamSpec((KV, dh), ("kv_heads", "head_dim"), pd, "zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((dh,), ("head_dim",), pd, "ones")
+        specs["k_norm"] = ParamSpec((dh,), ("head_dim",), pd, "ones")
+    if cross:
+        specs.pop("q_norm", None)
+        specs.pop("k_norm", None)
+    return specs
+
+
+def _project_qkv(params, x, cfg: ModelConfig, rules: Rules, positions,
+                 apply_rope: bool = True):
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dtype)
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    if apply_rope:
+        q = rope(q, positions, cfg.rope_theta, cfg.rope_scaling)
+        k = rope(k, positions, cfg.rope_theta, cfg.rope_scaling)
+    # Attention contracts over the sequence; under sequence parallelism the
+    # q/k/v enter gathered ("attn_seq", default replicated) and the output
+    # re-scatters to "seq_act" — one all-gather + one reduce-scatter per
+    # layer instead of GSPMD rescattering every chunk of the flash scan.
+    q = constrain(q, rules, "batch", "attn_seq", "heads_act", None)
+    k = constrain(k, rules, "batch", "attn_seq", None, None)
+    v = constrain(v, rules, "batch", "attn_seq", None, None)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# Blockwise (flash-style) attention — train / prefill
+# --------------------------------------------------------------------------
+
+
+def blockwise_attention(
+    q: jnp.ndarray,              # (B, Sq, H, dh)
+    k: jnp.ndarray,              # (B, Skv, KV, dh)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,             # 0 = unbounded
+    q_offset: int = 0,           # absolute position of q[0]
+    softcap: float = 0.0,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+) -> jnp.ndarray:
+    B, Sq, H, dh = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_chunk = _snap_divisor(Sq, q_chunk)
+    kv_chunk = _snap_divisor(Skv, kv_chunk)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = dh ** -0.5
+
+    qc = q.reshape(B, nq, q_chunk, KV, G, dh).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, nk, kv_chunk, KV, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, kv_chunk, KV, dh).transpose(1, 0, 2, 3, 4)
+
+    # Flash-style memory discipline: the inner kv scan's score blocks are
+    # REMATERIALIZED in the backward pass (jax.checkpoint on the per-q-chunk
+    # body). Without this, autodiff saves a (B,KV,G,Cq,Ckv) f32 tensor per
+    # (q,kv) block pair — 155 GB/device on the whisper train cell; with it,
+    # only the (m, s, o) accumulators survive the forward pass.
+    @jax.checkpoint
+    def q_body_inner(qi, q_blk):
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_body(carry, ki_and_blk):
+            m, s, o = carry
+            ki, k_blk, v_blk = ki_and_blk
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            scores = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            if softcap:
+                scores = softcap * jnp.tanh(scores / softcap)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+            m_blk = jnp.max(scores, axis=-1)                       # (B,KV,G,Cq)
+            m_new = jnp.maximum(m, m_blk)
+            p = jnp.exp(scores - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            s_new = s * alpha + jnp.sum(p, axis=-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, s_new, o_new), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        s0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, KV, G, q_chunk, dh), jnp.float32)
+        (m, s, o), _ = jax.lax.scan(
+            kv_body, (m0, s0, o0),
+            (jnp.arange(nk), kc, vc),
+        )
+        out = o / jnp.maximum(s, 1e-30)[..., None]                  # (B,KV,G,Cq,dh)
+        return out.transpose(0, 3, 1, 2, 4)                         # (B,Cq,KV,G,dh)
+
+    def q_body(_, qi_and_chunk):
+        qi, q_blk = qi_and_chunk
+        return None, q_body_inner(qi, q_blk)
+
+    _, outs = jax.lax.scan(q_body, None, (jnp.arange(nq), qc))       # (nq,B,Cq,KV,G,dh)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, dh)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Decode attention (one query vs cache)
+# --------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jnp.ndarray,              # (B, 1, H, dh)
+    cache_k: jnp.ndarray,        # (B, S, KV, dh)
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,            # () or (B,) int32 — current absolute position
+    *,
+    window: int = 0,             # ring cache when > 0 (S == window)
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    B, _, H, dh = q.shape
+    S, KV = cache_k.shape[1], cache_k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    qv = q.reshape(B, KV, G, dh)
+    scores = jnp.einsum(
+        "bhgd,bshd->bhgs", qv, cache_k, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    idx = jnp.arange(S)[None]                     # (1, S)
+    posb = jnp.broadcast_to(jnp.atleast_1d(pos), (B,))[:, None]  # (B, 1)
+    if window:
+        # Ring cache: slot s holds token t = pos - ((pos - s) mod S), valid if
+        # 0 <= t and t > pos - S.
+        t = posb - jnp.mod(posb - idx, S)
+        valid = (t >= 0) & (t <= posb)            # (B, S)
+    else:
+        valid = idx <= posb
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgs,bshd->bhgd", p.astype(cache_v.dtype), cache_v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Full layer: projections + attention + cache handling + output proj
+# --------------------------------------------------------------------------
+
+
+def init_cache_shape(cfg: ModelConfig, batch: int, max_len: int, window: int) -> dict:
+    S = min(window, max_len) if window else max_len
+    KV, dh = cfg.n_kv_heads, cfg.resolved_head_dim()
+    return {"k": (batch, S, KV, dh), "v": (batch, S, KV, dh)}
+
+
+def attention_layer(
+    params: dict,
+    x: jnp.ndarray,              # (B, S, d)
+    cfg: ModelConfig,
+    rules: Rules,
+    *,
+    mode: str,                   # train | prefill | decode
+    positions: jnp.ndarray,      # (B, S) absolute positions
+    window: int = 0,
+    cache: dict | None = None,
+    cache_pos: jnp.ndarray | None = None,
+    use_rope: bool = True,
+    causal: bool = True,
+) -> tuple:
+    """Returns (out (B, S, d), new_cache)."""
+    dtype = x.dtype
+    q, k, v = _project_qkv(params, x, cfg, rules, positions, apply_rope=use_rope)
+    new_cache = None
+
+    if mode == "decode":
+        assert cache is not None and cache_pos is not None
+        S_cache = cache["k"].shape[1]
+        slot = jnp.mod(cache_pos, S_cache) if window else cache_pos
+        if jnp.ndim(slot) == 0:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, 1)
+        else:  # per-slot positions (continuous batching)
+            rows = jnp.arange(k.shape[0])
+            ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+        ck = constrain(ck, rules, "cache_batch", "cache_seq", "cache_kv_heads", "cache_head_dim")
+        cv = constrain(cv, rules, "cache_batch", "cache_seq", "cache_kv_heads", "cache_head_dim")
+        out = decode_attention(
+            q, ck, cv, cache_pos, window=window, softcap=cfg.attn_logit_softcap
+        )
+        new_cache = {"k": ck, "v": cv}
+    else:
+        out = blockwise_attention(
+            q, k, v,
+            causal=causal,
+            window=window,
+            softcap=cfg.attn_logit_softcap,
+        )
+        if mode == "prefill":
+            assert cache is not None
+            S_cache = cache["k"].shape[1]
+            S = k.shape[1]
+            if window and S > S_cache:
+                # Keep only the last ``window`` keys, placed at their ring slots.
+                k_tail = k[:, S - S_cache:]
+                v_tail = v[:, S - S_cache:]
+                tail_pos = jnp.arange(S - S_cache, S)
+                slots = jnp.mod(tail_pos, S_cache)
+                ck = cache["k"].at[:, slots].set(k_tail.astype(cache["k"].dtype))
+                cv = cache["v"].at[:, slots].set(v_tail.astype(cache["v"].dtype))
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), 0, 1
+                )
+                cv = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), 0, 1
+                )
+            ck = constrain(ck, rules, "cache_batch", "cache_seq", "cache_kv_heads", "cache_head_dim")
+            cv = constrain(cv, rules, "cache_batch", "cache_seq", "cache_kv_heads", "cache_head_dim")
+            new_cache = {"k": ck, "v": cv}
+
+    out = constrain(out, rules, "batch", "attn_seq", "heads_act", None)
+    proj = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return constrain(proj, rules, "batch", "seq_act", "embed_act"), new_cache
+
+
+def cross_attention_layer(
+    params: dict,
+    x: jnp.ndarray,              # (B, S, d) decoder states
+    enc_kv: tuple,               # precomputed (k, v): (B, S_enc, KV, dh)
+    cfg: ModelConfig,
+    rules: Rules,
+) -> jnp.ndarray:
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dtype)
+    k, v = enc_kv
+    out = blockwise_attention(q, k, v, causal=False, softcap=0.0)
+    proj = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return constrain(proj, rules, "batch", "seq_act", "embed_act")
+
+
+def encode_kv(params: dict, enc_states: jnp.ndarray, cfg: ModelConfig) -> tuple:
+    """Project encoder output to cross-attention K/V once (cached)."""
+    dtype = enc_states.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_states, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_states, params["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    return k, v

@@ -1,0 +1,108 @@
+"""Declarative parameter trees.
+
+Models declare their parameters as a tree of ``ParamSpec`` (shape + logical
+sharding axes + init), which supports three consumers without duplication:
+
+* ``init_params``      — materialize real arrays (examples, tests, training);
+* ``pspec_tree``       — ``PartitionSpec`` tree for pjit in/out shardings;
+* ``shape_structs``    — ``jax.ShapeDtypeStruct`` stand-ins **with shardings**
+                         for the multi-pod dry-run: a 314B-parameter model
+                         lowers and compiles without a single byte allocated.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.sharding.rules import Rules
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    logical: tuple                  # logical axis name per dim (or None)
+    dtype: str = "float32"
+    init: str = "normal"            # normal | zeros | ones | uniform_scaled
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _map_specs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def init_params(tree, rng: jax.Array, dtype_override: str | None = None):
+    """Materialize a ParamSpec tree into arrays, rng folded per-leaf path."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for spec, key in zip(leaves, keys):
+        dtype = jnp.dtype(dtype_override or spec.dtype)
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dtype))
+        elif spec.init == "normal":
+            out.append(
+                (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(dtype)
+            )
+        elif spec.init == "uniform_scaled":  # fan-in scaled
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            bound = float(np.sqrt(1.0 / max(fan_in, 1)))
+            out.append(
+                jax.random.uniform(key, spec.shape, jnp.float32, -bound, bound).astype(dtype)
+            )
+        else:
+            raise ValueError(f"unknown init {spec.init}")
+    return jax.tree.unflatten(treedef, out)
+
+
+def pspec_tree(tree, rules: Rules):
+    return _map_specs(lambda s: rules.spec(*s.logical), tree)
+
+
+def shape_structs(tree, rules: Rules, mesh):
+    """ShapeDtypeStructs with NamedShardings — dry-run stand-ins."""
+
+    def one(s: ParamSpec):
+        return jax.ShapeDtypeStruct(
+            s.shape, jnp.dtype(s.dtype), sharding=NamedSharding(mesh, rules.spec(*s.logical))
+        )
+
+    return _map_specs(one, tree)
+
+
+def param_bytes(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for s in leaves)
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def stack_specs(spec: ParamSpec, n: int, axis_name: str = "layers") -> ParamSpec:
+    """Prepend a stacked-layer axis (scan-over-layers layout)."""
+    return ParamSpec(
+        shape=(n, *spec.shape),
+        logical=(axis_name, *spec.logical),
+        dtype=spec.dtype,
+        init=spec.init,
+        scale=spec.scale,
+    )
+
+
+def stack_tree(tree, n: int):
+    return _map_specs(lambda s: stack_specs(s, n), tree)

@@ -1,0 +1,140 @@
+"""Shared layers: norms, MLPs, embeddings, rotary positions.
+
+All matmuls run in the config compute dtype (bf16 by default) with f32
+accumulation where it matters (norm statistics, softmax, loss); parameters
+are stored in ``param_dtype`` (f32) and cast at use — standard mixed
+precision. Activation sharding constraints are applied at layer boundaries
+so GSPMD propagates the intended layout (DP/FSDP × TP).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.sharding.rules import Rules, constrain
+
+from .base import ParamSpec
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones")
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP (swiglu / gelu)
+# --------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    pd = cfg.param_dtype
+    if cfg.mlp_variant == "swiglu":
+        return {
+            "w_gate": ParamSpec((d, f), ("embed", "mlp"), pd, "uniform_scaled"),
+            "w_up": ParamSpec((d, f), ("embed", "mlp"), pd, "uniform_scaled"),
+            "w_down": ParamSpec((f, d), ("mlp", "embed"), pd, "uniform_scaled"),
+        }
+    return {
+        "w_up": ParamSpec((d, f), ("embed", "mlp"), pd, "uniform_scaled"),
+        "b_up": ParamSpec((f,), ("mlp",), pd, "zeros"),
+        "w_down": ParamSpec((f, d), ("mlp", "embed"), pd, "uniform_scaled"),
+        "b_down": ParamSpec((d,), ("embed",), pd, "zeros"),
+    }
+
+
+def mlp(params: dict, x: jnp.ndarray, cfg: ModelConfig, rules: Rules) -> jnp.ndarray:
+    dtype = x.dtype
+    if cfg.mlp_variant == "swiglu":
+        gate = x @ params["w_gate"].astype(dtype)
+        up = x @ params["w_up"].astype(dtype)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(x @ params["w_up"].astype(dtype) + params["b_up"].astype(dtype))
+    # hidden uses the inner-seq layout ("attn_seq"): under sequence
+    # parallelism the residual stream is seq-sharded but the TP'd hidden is
+    # seq-gathered (Megatron SP: gather at entry, reduce-scatter at exit)
+    h = constrain(h, rules, "batch", "attn_seq", "mlp")
+    out = h @ params["w_down"].astype(dtype)
+    if cfg.mlp_variant != "swiglu":
+        out = out + params["b_down"].astype(dtype)
+    return constrain(out, rules, "batch", "seq_act", "embed_act")
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+
+def embedding_spec(cfg: ModelConfig) -> ParamSpec:
+    return ParamSpec(
+        (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), cfg.param_dtype, "normal"
+    )
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig,
+          rules: Rules) -> jnp.ndarray:
+    x = jnp.take(table, tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    return constrain(x, rules, "batch", "seq_act", "embed_act")
+
+
+def unembed(table_or_head: jnp.ndarray, x: jnp.ndarray, rules: Rules,
+            transpose: bool) -> jnp.ndarray:
+    w = table_or_head.astype(x.dtype)
+    logits = x @ (w.T if transpose else w)
+    # logits shard over vocab; seq uses the inner (gathered) layout so vocab
+    # TP and sequence parallelism never claim the same mesh axis
+    logits = constrain(logits, rules, "batch", "attn_seq", "vocab")
+    return logits.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Rotary positions
+# --------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+         scaling: float = 1.0) -> jnp.ndarray:
+    """x: (..., S, H, dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = (positions.astype(jnp.float32) / scaling)[..., None] * freqs  # (..., S, half)
+    angles = angles[..., None, :]                                          # (..., S, 1, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Loss
+# --------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_loss: float = 1e-4) -> jnp.ndarray:
+    """Mean token cross-entropy in f32, with optional z-loss regularizer."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - gold
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)

@@ -1,0 +1,120 @@
+"""Model facade: one API over decoder-only LMs and the enc-dec backbone.
+
+``input_specs`` builds ShapeDtypeStruct stand-ins (weak-type-correct,
+sharding-annotated, zero allocation) for every model input of a given
+(arch × shape) cell — the multi-pod dry-run lowers against exactly these.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.sharding.rules import Dist, Rules
+
+from . import base
+from .transformer import lm_cache_specs, lm_forward, lm_specs
+from .whisper import whisper_cache_specs, whisper_forward, whisper_specs
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- parameters ----------------------------------------------------------
+    def param_specs(self) -> dict:
+        if self.cfg.is_encoder_decoder:
+            return whisper_specs(self.cfg)
+        return lm_specs(self.cfg)
+
+    def init(self, rng: jax.Array) -> dict:
+        return base.init_params(self.param_specs(), rng)
+
+    def param_pspecs(self, rules: Rules):
+        return base.pspec_tree(self.param_specs(), rules)
+
+    def param_structs(self, rules: Rules, mesh):
+        return base.shape_structs(self.param_specs(), rules, mesh)
+
+    def n_params(self) -> int:
+        return base.param_count(self.param_specs())
+
+    # -- cache ---------------------------------------------------------------
+    def cache_specs(self, batch: int, max_len: int) -> dict:
+        if self.cfg.is_encoder_decoder:
+            return whisper_cache_specs(self.cfg, batch, max_len)
+        return lm_cache_specs(self.cfg, batch, max_len)
+
+    def init_cache(self, batch: int, max_len: int, rng=None) -> dict:
+        return base.init_params(
+            self.cache_specs(batch, max_len), rng or jax.random.PRNGKey(0)
+        )
+
+    def cache_structs(self, batch: int, max_len: int, rules: Rules, mesh):
+        return base.shape_structs(self.cache_specs(batch, max_len), rules, mesh)
+
+    # -- forward ---------------------------------------------------------------
+    def forward(self, params, tokens, dist: Dist, *, mode="train", cache=None,
+                cache_pos=None, frames=None, prefix_embeds=None):
+        if self.cfg.is_encoder_decoder:
+            return whisper_forward(
+                params, tokens, self.cfg, dist,
+                frames=frames, mode=mode, cache=cache, cache_pos=cache_pos,
+            )
+        return lm_forward(
+            params, tokens, self.cfg, dist,
+            mode=mode, cache=cache, cache_pos=cache_pos, prefix_embeds=prefix_embeds,
+        )
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# --------------------------------------------------------------------------
+# Dry-run input stand-ins
+# --------------------------------------------------------------------------
+
+
+def _struct(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(
+        shape, jnp.dtype(dtype), sharding=NamedSharding(mesh, spec)
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules: Rules) -> dict:
+    """ShapeDtypeStructs for the step function of an (arch × shape) cell.
+
+    train:   {tokens, labels [, frames | prefix_embeds]}
+    prefill: {tokens [, frames | prefix_embeds]}
+    decode:  {tokens (B,1), cache_pos ()} — the cache is built separately via
+             Model.cache_structs (it is an *input-output* of serve_step).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    tok_spec = rules.spec("batch", None)
+    out: dict = {}
+
+    if shape.kind == "train":
+        out["tokens"] = _struct((B, S), jnp.int32, mesh, tok_spec)
+        out["labels"] = _struct((B, S), jnp.int32, mesh, tok_spec)
+    elif shape.kind == "prefill":
+        out["tokens"] = _struct((B, S), jnp.int32, mesh, tok_spec)
+    else:  # decode
+        out["tokens"] = _struct((B, 1), jnp.int32, mesh, tok_spec)
+        out["cache_pos"] = _struct((), jnp.int32, mesh, jax.sharding.PartitionSpec())
+
+    if cfg.is_encoder_decoder and shape.kind != "decode":
+        out["frames"] = _struct(
+            (B, cfg.encoder_seq, cfg.d_model), cfg.dtype, mesh,
+            rules.spec("batch", None, "embed_act"),
+        )
+    if cfg.num_prefix_embeds and shape.kind != "decode":
+        out["prefix_embeds"] = _struct(
+            (B, cfg.num_prefix_embeds, cfg.d_model), cfg.dtype, mesh,
+            rules.spec("batch", None, "embed_act"),
+        )
+    return out

@@ -1,0 +1,151 @@
+"""Mixture-of-Experts layer: sort-based capacity dispatch under shard_map.
+
+Token routing is the same idiom as the paper's fingerprint dedup: *sort by
+key, then operate on contiguous runs*. Tokens sort by expert id, take their
+rank-within-expert as a capacity slot, and scatter into dense per-expert
+buffers — no (T, E, C) one-hot dispatch tensor (whose einsum FLOPs would be
+quadratic in tokens) and no pointer-chasing.
+
+Distribution: the layer runs inside ``shard_map`` so the sort/scatter are
+*per-device local* (a global jnp.argsort over a sharded axis would force a
+cross-device sort). Expert weights enter with their ``mlp`` dim sharded over
+``model`` (tensor parallelism inside each expert) and are all-gathered over
+the FSDP (``data``) axis at entry — ZeRO-3 semantics, overlappable by the
+scheduler because the layer sits inside scan-over-layers. The down-projection
+partial sums ``psum`` over ``model``. Tokens never cross devices: each device
+computes exactly its own tokens' top-k experts (compute-optimal; the traffic
+trade — weights move, tokens don't — is analyzed in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.sharding.rules import Rules, constrain
+
+from .base import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    pd = cfg.param_dtype
+    return {
+        "router": ParamSpec((d, E), ("embed", None), pd, "normal", 0.02),
+        "w_gate": ParamSpec((E, d, f), ("experts", "embed", "mlp"), pd, "uniform_scaled"),
+        "w_up": ParamSpec((E, d, f), ("experts", "embed", "mlp"), pd, "uniform_scaled"),
+        "w_down": ParamSpec((E, f, d), ("experts", "mlp", "embed"), pd, "uniform_scaled"),
+    }
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    return max(
+        1,
+        math.ceil(cfg.moe_capacity_factor * n_tokens * cfg.experts_per_token / cfg.n_experts),
+    )
+
+
+def _moe_local(router, w_gate, w_up, w_down, x, cfg: ModelConfig,
+               model_axis: str | None):
+    """Per-device MoE: x (T, d) local tokens -> (T, d)."""
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    C = _capacity(T, cfg)
+    dtype = x.dtype
+
+    # --- routing ------------------------------------------------------------
+    logits = (x.astype(jnp.float32) @ router.astype(jnp.float32))      # (T, E)
+    top_logits, top_ids = jax.lax.top_k(logits, k)                     # (T, k)
+    weights = jax.nn.softmax(top_logits, axis=-1)                      # renormalized
+
+    # --- sort-based dispatch (the fingerprint-dedup idiom) -------------------
+    flat_ids = top_ids.reshape(T * k)
+    order = jnp.argsort(flat_ids, stable=True)                         # tokens grouped by expert
+    sorted_ids = flat_ids[order]
+    counts = jnp.bincount(flat_ids, length=E)                          # (E,)
+    starts = jnp.cumsum(counts) - counts                               # exclusive
+    pos_in_expert = jnp.arange(T * k) - starts[sorted_ids]
+    keep = pos_in_expert < C
+    buf_idx = jnp.where(keep, sorted_ids * C + pos_in_expert, E * C)   # E*C = drop
+
+    token_of = order // k                                              # source token
+    gathered = x[token_of]                                             # (T·k, d)
+    buf = jnp.zeros((E * C, d), dtype).at[buf_idx].set(gathered, mode="drop")
+    buf = buf.reshape(E, C, d)
+
+    # --- expert FFNs (TP over the mlp dim) ------------------------------------
+    gate = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(dtype))
+    up = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(dtype))
+    h = jax.nn.silu(gate) * up
+    out_partial = jnp.einsum("ecf,efd->ecd", h, w_down.astype(dtype))
+    if model_axis is not None:
+        out_partial = jax.lax.psum(out_partial, model_axis)
+
+    # --- combine back ----------------------------------------------------------
+    y_sorted = out_partial.reshape(E * C, d)[jnp.minimum(buf_idx, E * C - 1)]
+    y_sorted = jnp.where(keep[:, None], y_sorted, 0)
+    w_sorted = weights.reshape(T * k)[order].astype(dtype)
+    y = jnp.zeros((T, d), dtype).at[token_of].add(y_sorted * w_sorted[:, None])
+
+    # auxiliary load-balance loss (Switch-style), returned for the trainer
+    me = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)             # (E,)
+    ce = counts.astype(jnp.float32) / jnp.maximum(T * k, 1)
+    aux = E * jnp.sum(me * ce)
+    return y, aux
+
+
+def moe_layer(
+    params: dict,
+    x: jnp.ndarray,              # (B, S, d)
+    cfg: ModelConfig,
+    rules: Rules,
+    mesh=None,
+    data_axes: tuple = ("data",),
+    model_axis: str | None = "model",
+) -> tuple:
+    """Returns (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+
+    if mesh is None:
+        y, aux = _moe_local(
+            params["router"], params["w_gate"], params["w_up"], params["w_down"],
+            xt, cfg, model_axis=None,
+        )
+        return y.reshape(B, S, d), aux
+
+    data_axes = tuple(a for a in data_axes if a in mesh.axis_names)
+    model_in = model_axis if model_axis in mesh.axis_names else None
+
+    fn = jax.shard_map(
+        functools.partial(
+            _local_wrapper, cfg=cfg, model_axis=model_in, all_axes=mesh.axis_names
+        ),
+        mesh=mesh,
+        in_specs=(
+            P(),                        # router (replicated)
+            P(None, None, model_in),    # w_gate: FSDP-gathered, TP on f
+            P(None, None, model_in),    # w_up
+            P(None, model_in, None),    # w_down
+            P(data_axes, None),         # tokens
+        ),
+        out_specs=(P(data_axes, None), P()),
+        check_vma=False,
+    )
+    y, aux = fn(params["router"], params["w_gate"], params["w_up"],
+                params["w_down"], xt)
+    y = constrain(y.reshape(B, S, d), rules, "batch", "seq_act", "embed_act")
+    return y, aux
+
+
+def _local_wrapper(router, w_gate, w_up, w_down, xt, *, cfg, model_axis, all_axes):
+    y, aux = _moe_local(router, w_gate, w_up, w_down, xt, cfg, model_axis)
+    # out_spec P() requires a replicated value: average the load-balance loss
+    # over every mesh axis.
+    aux = jax.lax.pmean(aux, tuple(all_axes))
+    return y, aux

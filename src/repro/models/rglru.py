@@ -1,0 +1,109 @@
+"""RG-LRU recurrence (RecurrentGemma / Griffin temporal-mixing block).
+
+The gated diagonal recurrence
+
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+is another instance of the affine monoid — the same associative-scan core as
+SFA matching and mamba2. Decode state is one (B, width) vector: O(1) in
+context, so recurrentgemma runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import monoid as M
+from repro.sharding.rules import Rules, constrain
+
+from .base import ParamSpec
+from .ssm import _causal_conv
+
+AFF = M.affine_monoid()
+
+_C = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+def rglru_width(cfg: ModelConfig) -> int:
+    return cfg.rglru_width or cfg.d_model
+
+
+def rglru_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = rglru_width(cfg)
+    pd = cfg.param_dtype
+    return {
+        "w_gate_in": ParamSpec((d, w), ("embed", "rnn"), pd, "uniform_scaled"),
+        "w_rec_in": ParamSpec((d, w), ("embed", "rnn"), pd, "uniform_scaled"),
+        "conv_w": ParamSpec((cfg.ssm_conv_width, w), ("conv", "rnn"), pd, "uniform_scaled"),
+        "conv_b": ParamSpec((w,), ("rnn",), pd, "zeros"),
+        "w_input_gate": ParamSpec((w, w), ("rnn", None), pd, "uniform_scaled"),
+        "b_input_gate": ParamSpec((w,), ("rnn",), pd, "zeros"),
+        "w_a_gate": ParamSpec((w, w), ("rnn", None), pd, "uniform_scaled"),
+        "b_a_gate": ParamSpec((w,), ("rnn",), pd, "zeros"),
+        "lam": ParamSpec((w,), ("rnn",), pd, "normal", 1.0),
+        "w_out": ParamSpec((w, d), ("rnn", "embed"), pd, "uniform_scaled"),
+    }
+
+
+def _gates(params, xr):
+    """Recurrence coefficients: returns (a, beta_x) in f32; xr (…, w)."""
+    x32 = xr.astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(
+        x32 @ params["w_input_gate"].astype(jnp.float32) + params["b_input_gate"].astype(jnp.float32)
+    )
+    r_gate = jax.nn.sigmoid(
+        x32 @ params["w_a_gate"].astype(jnp.float32) + params["b_a_gate"].astype(jnp.float32)
+    )
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r_gate
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i_gate * x32
+
+
+def rglru_layer(
+    params: dict,
+    x: jnp.ndarray,               # (B, S, d)
+    cfg: ModelConfig,
+    rules: Rules,
+    *,
+    mode: str = "train",
+    cache: dict | None = None,
+) -> tuple:
+    """Returns (out (B, S, d), new_cache)."""
+    dtype = x.dtype
+    gate = jax.nn.gelu(x @ params["w_gate_in"].astype(dtype))
+    xr = x @ params["w_rec_in"].astype(dtype)
+
+    if mode == "decode":
+        W = cfg.ssm_conv_width
+        hist = jnp.concatenate([cache["conv"].astype(dtype), xr], axis=1)  # (B,W,w)
+        conv = sum(hist[:, i] * params["conv_w"][i].astype(dtype) for i in range(W))
+        xr1 = jax.nn.silu(conv + params["conv_b"].astype(dtype))[:, None]  # (B,1,w)
+        new_conv = hist[:, 1:]
+        a, bx = _gates(params, xr1)
+        h = a[:, 0] * cache["h"] + bx[:, 0]                                # (B,w)
+        y = h[:, None].astype(dtype)
+        new_cache = {"conv": new_conv, "h": h}
+    else:
+        xr, conv_state = _causal_conv(xr, params["conv_w"], params["conv_b"],
+                                      cache["conv"].astype(dtype) if cache else None)
+        a, bx = _gates(params, xr)
+        if cache is not None and "h" in cache:
+            bx = bx.at[:, 0].add(a[:, 0] * cache["h"])
+        h = M.scan(AFF, (a, bx), axis=1)[1]                                # (B,S,w)
+        y = h.astype(dtype)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": conv_state, "h": h[:, -1].astype(jnp.float32)}
+
+    y = constrain(y * gate, rules, "batch", "seq_act", "rnn")
+    out = y @ params["w_out"].astype(dtype)
+    return constrain(out, rules, "batch", "seq_act", "embed_act"), new_cache
+
+
+def rglru_cache_shapes(cfg: ModelConfig, batch: int) -> dict:
+    w = rglru_width(cfg)
+    return {"conv": (batch, cfg.ssm_conv_width - 1, w), "h": (batch, w)}

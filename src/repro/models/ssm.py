@@ -1,0 +1,220 @@
+"""Mamba-2 (SSD — state-space duality) layer.
+
+The SSD recurrence ``h_t = a_t · h_{t-1} + dt_t · B_t ⊗ x_t`` is exactly the
+framework's affine monoid: the paper's "lift the sequential step into a
+composable element, combine associatively" applied to a continuous state.
+The chunked algorithm (Dao & Gu 2024), restated in monoid terms:
+
+  * intra-chunk: a small attention-like quadratic form per chunk (MXU work);
+  * inter-chunk: one affine-monoid *exclusive scan* over per-chunk lifted
+    elements ``(Π a, Σ decay·dt·B⊗x)`` — ``core.monoid.exclusive_scan``,
+    literally the same code path the SFA matcher uses for chunk entry states.
+
+Decode carries ``(conv_state, ssm_state)`` — O(1) in context length, which is
+why the mamba2 ``long_500k`` cell is runnable where full attention is not.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import monoid as M
+from repro.sharding.rules import Rules, constrain
+
+from .base import ParamSpec
+from .layers import rmsnorm
+
+AFF = M.affine_monoid()
+
+
+def mamba2_dims(cfg: ModelConfig) -> tuple:
+    d_in = cfg.ssm_expand * cfg.d_model
+    H, Pd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    assert H * Pd == d_in, (H, Pd, d_in)
+    return d_in, H, Pd, N
+
+
+def mamba2_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, H, Pd, N = mamba2_dims(cfg)
+    conv_dim = d_in + 2 * N
+    pd = cfg.param_dtype
+    return {
+        # order: [z (d_in), x (d_in), B (N), C (N), dt (H)]
+        "in_proj": ParamSpec((d, 2 * d_in + 2 * N + H), ("embed", "rnn"), pd, "uniform_scaled"),
+        "conv_w": ParamSpec((cfg.ssm_conv_width, conv_dim), ("conv", "rnn"), pd, "uniform_scaled"),
+        "conv_b": ParamSpec((conv_dim,), ("rnn",), pd, "zeros"),
+        "A_log": ParamSpec((H,), (None,), pd, "normal", 0.5),
+        "D": ParamSpec((H,), (None,), pd, "ones"),
+        "dt_bias": ParamSpec((H,), (None,), pd, "zeros"),
+        "norm": ParamSpec((d_in,), ("rnn",), pd, "ones"),
+        "out_proj": ParamSpec((d_in, d), ("rnn", "embed"), pd, "uniform_scaled"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None) -> tuple:
+    """Depthwise causal conv over seq. x: (B, S, C); w: (W, C).
+
+    Returns (out (B, S, C), new_state (B, W-1, C)) — state carries the last
+    W-1 inputs for decode continuation."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)              # (B, S+W-1, C)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W)
+    ) + b.astype(x.dtype)
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def _split_proj(zxbcdt: jnp.ndarray, cfg: ModelConfig) -> tuple:
+    d_in, H, Pd, N = mamba2_dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xin = zxbcdt[..., d_in : 2 * d_in]
+    Bm = zxbcdt[..., 2 * d_in : 2 * d_in + N]
+    Cm = zxbcdt[..., 2 * d_in + N : 2 * d_in + 2 * N]
+    dt = zxbcdt[..., 2 * d_in + 2 * N :]
+    return z, xin, Bm, Cm, dt
+
+
+def mamba2_layer(
+    params: dict,
+    x: jnp.ndarray,                # (B, S, d)
+    cfg: ModelConfig,
+    rules: Rules,
+    *,
+    mode: str = "train",
+    cache: dict | None = None,
+) -> tuple:
+    """Returns (out (B, S, d), new_cache)."""
+    if mode == "decode":
+        return _mamba2_decode(params, x, cfg, rules, cache)
+
+    B, S, d = x.shape
+    d_in, H, Pd, N = mamba2_dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    S_orig = S
+    if S % Q:
+        # Right-pad to a chunk multiple; padding sits after every real token,
+        # so causal results for real positions are unaffected. Prefill needs
+        # the exact final state, so it requires divisibility (shape cells do).
+        assert mode != "prefill", "prefill seq must be a multiple of ssm_chunk"
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    dtype = x.dtype
+
+    zxbcdt = x @ params["in_proj"].astype(dtype)
+    z, xin, Bm, Cm, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    xin = conv_out[..., :d_in]
+    Bm = conv_out[..., d_in : d_in + N]
+    Cm = conv_out[..., d_in + N :]
+    xin = constrain(xin, rules, "batch", "seq_act", "rnn")
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # (H,) negative
+    loga = dt * A                                              # (B, S, H) ≤ 0
+
+    xh = xin.reshape(B, nc, Q, H, Pd).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(loga.reshape(B, nc, Q, H), axis=2)        # inclusive
+
+    # --- intra-chunk (quadratic, attention-like) ------------------------------
+    # decay(i, j) = exp(cum_i - cum_j) for j <= i. The (B,nc,Q,Q,H) tensors
+    # dominate this layer's HBM traffic; the decay/score products are
+    # computed in f32 for range but the big contraction runs on bf16
+    # operands with f32 accumulation (§Perf mamba2 iteration A: exact to
+    # ~3 decimal digits, halves score-tensor bytes).
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])   # (B,nc,Q_i,Q_j,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    scores = jnp.einsum("bnqk,bnjk->bnqj", Cc.astype(jnp.bfloat16),
+                        Bc.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)          # C_i · B_j
+    scores = scores[..., None] * decay * dtc[:, :, None, :, :]       # (B,nc,Qi,Qj,H)
+    scores = jnp.where(mask[None, None, :, :, None], scores, 0.0)
+    y_intra = jnp.einsum("bnqjh,bnjhp->bnqhp", scores.astype(jnp.bfloat16),
+                         xh.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32)
+
+    # --- chunk lifted elements + inter-chunk monoid scan -----------------------
+    last = cum[:, :, -1:, :]                                          # (B,nc,1,H)
+    decay_to_end = jnp.exp(last - cum)                                # (B,nc,Q,H)
+    S_c = jnp.einsum("bnqh,bnqk,bnqhp->bnhkp", decay_to_end * dtc, Bc, xh)
+    a_c = jnp.exp(last[:, :, 0, :])[..., None, None]                  # (B,nc,H,1,1)
+    state_in = M.exclusive_scan(AFF, (a_c, S_c), axis=1)[1]           # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum(
+        "bnqh,bnqk,bnhkp->bnqhp", jnp.exp(cum), Cc, state_in
+    )
+    y = (y_intra + y_inter + params["D"].astype(jnp.float32)[None, None, None, :, None] * xh)
+    y = y.reshape(B, S, d_in).astype(dtype)
+
+    # gated norm + output
+    if S != S_orig:
+        y = y[:, :S_orig]
+        z = z[:, :S_orig]
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dtype)
+    out = constrain(out, rules, "batch", "seq_act", "embed_act")
+
+    new_cache = None
+    if mode == "prefill":
+        final_state = (a_c[:, -1, ..., 0, 0][:, :, None, None] * state_in[:, -1]
+                       + S_c[:, -1])                                  # (B,H,N,P)
+        new_cache = {"conv": conv_state, "ssm": final_state.astype(jnp.float32)}
+    return out, new_cache
+
+
+def _mamba2_decode(params, x, cfg, rules, cache):
+    """Single-token step. x: (B, 1, d); cache: conv (B, W-1, C), ssm (B,H,N,P)."""
+    B = x.shape[0]
+    d_in, H, Pd, N = mamba2_dims(cfg)
+    dtype = x.dtype
+
+    zxbcdt = x @ params["in_proj"].astype(dtype)
+    z, xin, Bm, Cm, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)                 # (B,1,C)
+    W = cfg.ssm_conv_width
+    hist = jnp.concatenate([cache["conv"].astype(dtype), conv_in], axis=1)  # (B,W,C)
+    conv_out = sum(hist[:, i] * params["conv_w"][i].astype(dtype) for i in range(W))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(dtype))  # (B,C)
+    new_conv = hist[:, 1:]
+
+    xin = conv_out[:, :d_in].reshape(B, H, Pd).astype(jnp.float32)
+    Bv = conv_out[:, d_in : d_in + N].astype(jnp.float32)             # (B,N)
+    Cv = conv_out[:, d_in + N :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                               # (B,H)
+
+    state = cache["ssm"]                                              # (B,H,N,P)
+    state = (a[..., None, None] * state
+             + jnp.einsum("bh,bk,bhp->bhkp", dt, Bv, xin))
+    y = jnp.einsum("bk,bhkp->bhp", Cv, state)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xin
+    y = y.reshape(B, 1, d_in).astype(dtype)
+
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dtype)
+    return out, {"conv": new_conv, "ssm": state}
+
+
+def mamba2_cache_shapes(cfg: ModelConfig, batch: int) -> dict:
+    d_in, H, Pd, N = mamba2_dims(cfg)
+    conv_dim = d_in + 2 * N
+    return {
+        "conv": (batch, cfg.ssm_conv_width - 1, conv_dim),
+        "ssm": (batch, H, N, Pd),
+    }

@@ -1,0 +1,267 @@
+"""Decoder-only LM assembly: pattern-based blocks + scan-over-layers.
+
+Layer kinds (cycled from ``cfg.layer_pattern``):
+  "attn"   — global causal attention
+  "swa"    — sliding-window attention (window = cfg.sliding_window)
+  "lattn"  — local attention (window = cfg.local_attn_window; recurrentgemma)
+  "rglru"  — RG-LRU recurrence
+  "mamba2" — mamba-2 SSD
+
+Each block is (norm → temporal-mixing → residual) and, when ``d_ff > 0``,
+(norm → MLP/MoE → residual). Homogeneous *groups* (one full cycle of the
+pattern) are stacked and driven by ``lax.scan`` — HLO size and SPMD
+partitioning time stay O(1) in depth, which is what makes the 64-layer 314B
+config compile on this host. A remainder (depth % pattern) runs as unstacked
+tail blocks (recurrentgemma's 38 = 12×(2 rglru + 1 lattn) + 2 rglru).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.sharding.rules import Dist, constrain
+
+from .attention import attention_layer, attention_specs, init_cache_shape
+from .base import ParamSpec, stack_tree
+from .layers import embed, embedding_spec, mlp, mlp_specs, rmsnorm, rmsnorm_spec, unembed
+from .moe import moe_layer, moe_specs
+from .rglru import rglru_cache_shapes, rglru_layer, rglru_specs
+from .ssm import mamba2_cache_shapes, mamba2_layer, mamba2_specs
+
+
+# --------------------------------------------------------------------------
+# Parameter tree
+# --------------------------------------------------------------------------
+
+
+def _block_specs(cfg: ModelConfig, kind: str) -> dict:
+    specs: dict = {"pre_norm": rmsnorm_spec(cfg.d_model)}
+    if kind in ("attn", "swa", "lattn"):
+        specs["attn"] = attention_specs(cfg)
+    elif kind == "rglru":
+        specs["rglru"] = rglru_specs(cfg)
+    elif kind == "mamba2":
+        specs["mamba2"] = mamba2_specs(cfg)
+    else:
+        raise ValueError(f"unknown layer kind {kind}")
+    if cfg.d_ff > 0:
+        specs["post_norm"] = rmsnorm_spec(cfg.d_model)
+        specs["ffn"] = moe_specs(cfg) if cfg.n_experts else mlp_specs(cfg)
+    return specs
+
+
+def pattern_of(cfg: ModelConfig) -> tuple:
+    return tuple(cfg.layer_pattern)
+
+
+def lm_specs(cfg: ModelConfig) -> dict:
+    p = pattern_of(cfg)
+    n_groups, rem = divmod(cfg.n_layers, len(p))
+    group = {f"{i}_{kind}": _block_specs(cfg, kind) for i, kind in enumerate(p)}
+    specs: dict = {
+        "embed": embedding_spec(cfg),
+        "final_norm": rmsnorm_spec(cfg.d_model),
+        "blocks": stack_tree(group, n_groups) if n_groups else {},
+    }
+    if rem:
+        specs["tail"] = {
+            f"{i}_{kind}": _block_specs(cfg, kind) for i, kind in enumerate(p[:rem])
+        }
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), cfg.param_dtype, "normal"
+        )
+    return specs
+
+
+# --------------------------------------------------------------------------
+# Caches
+# --------------------------------------------------------------------------
+
+
+def _block_cache_shapes(cfg: ModelConfig, kind: str, batch: int, max_len: int) -> dict:
+    if kind in ("attn", "swa", "lattn"):
+        window = _window_of(cfg, kind)
+        return init_cache_shape(cfg, batch, max_len, window)
+    if kind == "rglru":
+        return rglru_cache_shapes(cfg, batch)
+    if kind == "mamba2":
+        return mamba2_cache_shapes(cfg, batch)
+    raise ValueError(kind)
+
+
+def _cache_logical(kind: str, name: str, ndim: int) -> tuple:
+    if kind in ("attn", "swa", "lattn"):
+        return ("cache_batch", "cache_seq", "cache_kv_heads", "cache_head_dim")
+    # recurrence caches: small, batch-sharded only
+    return ("cache_batch",) + (None,) * (ndim - 1)
+
+
+def lm_cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """ParamSpec tree for the KV/state cache (bf16 KV, f32 recurrent state)."""
+    p = pattern_of(cfg)
+    n_groups, rem = divmod(cfg.n_layers, len(p))
+
+    def block(kind: str) -> dict:
+        shapes = _block_cache_shapes(cfg, kind, batch, max_len)
+        out = {}
+        for name, shp in shapes.items():
+            dtype = "float32" if kind in ("rglru", "mamba2") and name in ("h", "ssm") else cfg.dtype
+            out[name] = ParamSpec(shp, _cache_logical(kind, name, len(shp)), dtype, "zeros")
+        return out
+
+    group = {f"{i}_{kind}": block(kind) for i, kind in enumerate(p)}
+    specs: dict = {"blocks": stack_tree(group, n_groups) if n_groups else {}}
+    if rem:
+        specs["tail"] = {f"{i}_{kind}": block(kind) for i, kind in enumerate(p[:rem])}
+    return specs
+
+
+def _window_of(cfg: ModelConfig, kind: str) -> int:
+    if kind == "swa":
+        return cfg.sliding_window
+    if kind == "lattn":
+        return cfg.local_attn_window
+    return 0
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+
+def _block_forward(bparams, x, cfg, dist: Dist, kind: str, *, mode, positions,
+                   cache, cache_pos):
+    h = rmsnorm(x, bparams["pre_norm"], cfg.norm_eps)
+    new_cache = None
+    if kind in ("attn", "swa", "lattn"):
+        out, new_cache = attention_layer(
+            bparams["attn"], h, cfg, dist.rules,
+            mode=mode, positions=positions, window=_window_of(cfg, kind),
+            cache=cache, cache_pos=cache_pos,
+        )
+    elif kind == "rglru":
+        out, new_cache = rglru_layer(
+            bparams["rglru"], h, cfg, dist.rules, mode=mode, cache=cache
+        )
+    elif kind == "mamba2":
+        out, new_cache = mamba2_layer(
+            bparams["mamba2"], h, cfg, dist.rules, mode=mode, cache=cache
+        )
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.d_ff > 0:
+        h2 = rmsnorm(x, bparams["post_norm"], cfg.norm_eps)
+        if cfg.n_experts:
+            f_out, aux = moe_layer(
+                bparams["ffn"], h2, cfg, dist.rules,
+                mesh=dist.mesh, data_axes=dist.data_axes, model_axis=dist.model_axis,
+            )
+        else:
+            f_out = mlp(bparams["ffn"], h2, cfg, dist.rules)
+        x = x + f_out
+    return x, new_cache, aux
+
+
+def _group_forward(gparams, x, cfg, dist, *, mode, positions, cache, cache_pos,
+                   kinds):
+    new_caches = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for key in sorted(gparams.keys(), key=lambda s: int(s.split("_")[0])):
+        kind = key.split("_", 1)[1]
+        bc = cache.get(key) if cache else None
+        x, nc, aux = _block_forward(
+            gparams[key], x, cfg, dist, kind,
+            mode=mode, positions=positions, cache=bc, cache_pos=cache_pos,
+        )
+        aux_total = aux_total + aux
+        if nc is not None:
+            new_caches[key] = nc
+    return x, new_caches, aux_total
+
+
+def lm_forward(
+    params: dict,
+    tokens: jnp.ndarray,            # (B, S) int32
+    cfg: ModelConfig,
+    dist: Dist,
+    *,
+    mode: str = "train",            # train | prefill | decode
+    cache: dict | None = None,
+    cache_pos: jnp.ndarray | None = None,
+    prefix_embeds: jnp.ndarray | None = None,
+) -> tuple:
+    """Returns (logits (B, S, V) f32, new_cache | None, aux_loss)."""
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens, cfg, dist.rules)
+    if prefix_embeds is not None:
+        n_pref = prefix_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice_in_dim(
+            x, prefix_embeds.astype(x.dtype), 0, 1
+        ) if n_pref == x.shape[1] else x.at[:, :n_pref].set(prefix_embeds.astype(x.dtype))
+
+    if mode == "decode":
+        assert cache_pos is not None
+        if jnp.ndim(cache_pos) == 0:
+            positions = jnp.broadcast_to(cache_pos, (B, S)).astype(jnp.int32)
+        else:  # per-slot positions (continuous batching)
+            positions = jnp.broadcast_to(cache_pos[:, None], (B, S)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    p = pattern_of(cfg)
+    n_groups = cfg.n_layers // len(p)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+
+    if n_groups:
+        gp = params["blocks"]
+        gcache = cache["blocks"] if cache is not None else None
+        use_cache = gcache is not None
+
+        def body(carry, xs):
+            xc, aux_c = carry
+            if use_cache:
+                gparams_i, gcache_i = xs
+            else:
+                gparams_i, gcache_i = xs, None
+            xc, ncache, aux = _group_forward(
+                gparams_i, xc, cfg, dist,
+                mode=mode, positions=positions, cache=gcache_i,
+                cache_pos=cache_pos, kinds=p,
+            )
+            return (xc, aux_c + aux), (ncache if use_cache else 0)
+
+        scan_body = body
+        if cfg.remat == "full":
+            scan_body = jax.checkpoint(body)
+        elif cfg.remat == "dots":
+            scan_body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+            )
+        xs = (gp, gcache) if use_cache else gp
+        (x, aux_total), ys = jax.lax.scan(scan_body, (x, aux_total), xs)
+        if use_cache:
+            new_cache["blocks"] = ys
+
+    if "tail" in params:
+        tcache = cache.get("tail") if cache else None
+        x, ncache, aux = _group_forward(
+            params["tail"], x, cfg, dist,
+            mode=mode, positions=positions, cache=tcache, cache_pos=cache_pos, kinds=p,
+        )
+        aux_total = aux_total + aux
+        if cache is not None:
+            new_cache["tail"] = ncache
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x, dist.rules, transpose=True)
+    else:
+        logits = unembed(params["head"], x, dist.rules, transpose=False)
+    return logits, (new_cache if cache is not None else None), aux_total

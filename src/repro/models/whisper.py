@@ -1,0 +1,189 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment spec, the conv frontend is a stub: ``input_specs`` provides
+precomputed frame embeddings ``(B, S_enc, d)``. The encoder is bidirectional
+self-attention over frames with sinusoidal positions; the decoder is causal
+self-attention + cross-attention to encoder states. Positions are sinusoidal
+(simplification of Whisper's learned embeddings — noted in DESIGN.md).
+
+Decode shapes exercise the *decoder*: self-attn KV cache of the assigned
+sequence length plus cross-attention K/V computed once at prefill.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.sharding.rules import Dist
+
+from .attention import (
+    attention_layer,
+    attention_specs,
+    cross_attention_layer,
+    encode_kv,
+    init_cache_shape,
+)
+from .base import ParamSpec, stack_tree
+from .layers import mlp, mlp_specs, rmsnorm, rmsnorm_spec, unembed
+
+
+def sinusoidal(positions: jnp.ndarray, d: int, dtype) -> jnp.ndarray:
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _enc_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "pre_norm": rmsnorm_spec(cfg.d_model),
+        "attn": attention_specs(cfg),
+        "post_norm": rmsnorm_spec(cfg.d_model),
+        "ffn": mlp_specs(cfg),
+    }
+
+
+def _dec_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "pre_norm": rmsnorm_spec(cfg.d_model),
+        "self_attn": attention_specs(cfg),
+        "cross_norm": rmsnorm_spec(cfg.d_model),
+        "cross_attn": attention_specs(cfg, cross=True),
+        "post_norm": rmsnorm_spec(cfg.d_model),
+        "ffn": mlp_specs(cfg),
+    }
+
+
+def whisper_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": ParamSpec(
+            (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), cfg.param_dtype, "normal"
+        ),
+        "enc_blocks": stack_tree(_enc_block_specs(cfg), cfg.n_encoder_layers),
+        "enc_norm": rmsnorm_spec(cfg.d_model),
+        "dec_blocks": stack_tree(_dec_block_specs(cfg), cfg.n_layers),
+        "final_norm": rmsnorm_spec(cfg.d_model),
+    }
+
+
+def whisper_cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Decoder self-attn cache + cross-attn K/V (computed at prefill)."""
+    kv = init_cache_shape(cfg, batch, max_len, 0)
+    dh = cfg.resolved_head_dim()
+    cross_shape = (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, dh)
+    log = ("layers", "cache_batch", None, "cache_kv_heads", "cache_head_dim")
+    return {
+        "self": {
+            "k": ParamSpec((cfg.n_layers, *kv["k"]),
+                           ("layers", "cache_batch", "cache_seq", "cache_kv_heads", "cache_head_dim"),
+                           cfg.dtype, "zeros"),
+            "v": ParamSpec((cfg.n_layers, *kv["v"]),
+                           ("layers", "cache_batch", "cache_seq", "cache_kv_heads", "cache_head_dim"),
+                           cfg.dtype, "zeros"),
+        },
+        "cross_k": ParamSpec(cross_shape, log, cfg.dtype, "zeros"),
+        "cross_v": ParamSpec(cross_shape, log, cfg.dtype, "zeros"),
+    }
+
+
+def encode(params, frames: jnp.ndarray, cfg: ModelConfig, dist: Dist) -> jnp.ndarray:
+    """frames: (B, S_enc, d) precomputed embeddings -> encoder states."""
+    B, S, d = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoidal(jnp.arange(S), d, x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(carry, bparams):
+        xc = carry
+        h = rmsnorm(xc, bparams["pre_norm"], cfg.norm_eps)
+        out, _ = attention_layer(
+            bparams["attn"], h, cfg, dist.rules,
+            mode="train", positions=positions, use_rope=False, causal=False,
+        )
+        xc = xc + out
+        h2 = rmsnorm(xc, bparams["post_norm"], cfg.norm_eps)
+        xc = xc + mlp(bparams["ffn"], h2, cfg, dist.rules)
+        return xc, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def whisper_forward(
+    params: dict,
+    tokens: jnp.ndarray,            # (B, S_dec)
+    cfg: ModelConfig,
+    dist: Dist,
+    *,
+    frames: jnp.ndarray | None = None,   # (B, S_enc, d) — train/prefill
+    mode: str = "train",
+    cache: dict | None = None,
+    cache_pos: jnp.ndarray | None = None,
+) -> tuple:
+    """Returns (logits, new_cache | None, aux=0)."""
+    B, S = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    if mode == "decode":
+        cp = cache_pos[:, None] if jnp.ndim(cache_pos) else cache_pos
+        positions = jnp.broadcast_to(cp, (B, S)).astype(jnp.int32)
+        x = x + sinusoidal(positions, cfg.d_model, dtype)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = x + sinusoidal(positions, cfg.d_model, dtype)[0][None]
+
+    # encoder states (loop-invariant: closed over by the scan body)
+    enc = None
+    if mode in ("train", "prefill"):
+        assert frames is not None
+        enc = encode(params, frames, cfg, dist)
+
+    new_cache: dict = {}
+    use_cache = cache is not None
+
+    def body(carry, xs):
+        xc = carry
+        bparams, c_self_k, c_self_v, cross_k, cross_v = xs
+        h = rmsnorm(xc, bparams["pre_norm"], cfg.norm_eps)
+        blk_cache = {"k": c_self_k, "v": c_self_v} if use_cache else None
+        out, ncache = attention_layer(
+            bparams["self_attn"], h, cfg, dist.rules,
+            mode=mode, positions=positions, cache=blk_cache,
+            cache_pos=cache_pos, use_rope=False,
+        )
+        xc = xc + out
+        h2 = rmsnorm(xc, bparams["cross_norm"], cfg.norm_eps)
+        if mode == "decode":
+            ck, cv = cross_k, cross_v
+        else:
+            ck, cv = encode_kv(bparams["cross_attn"], enc, cfg)
+        xc = xc + cross_attention_layer(bparams["cross_attn"], h2, (ck, cv), cfg, dist.rules)
+        h3 = rmsnorm(xc, bparams["post_norm"], cfg.norm_eps)
+        xc = xc + mlp(bparams["ffn"], h3, cfg, dist.rules)
+        outs = (
+            (ncache["k"], ncache["v"], ck, cv) if use_cache else 0
+        )
+        return xc, outs
+
+    L = cfg.n_layers
+    if use_cache:
+        xs = (
+            params["dec_blocks"], cache["self"]["k"], cache["self"]["v"],
+            cache["cross_k"], cache["cross_v"],
+        )
+    else:
+        zeros = jnp.zeros((L, 1))
+        xs = (params["dec_blocks"], zeros, zeros, zeros, zeros)
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, ys = jax.lax.scan(body_fn, x, xs)
+
+    if use_cache:
+        nk, nv, ck, cv = ys
+        new_cache = {"self": {"k": nk, "v": nv}, "cross_k": ck, "cross_v": cv}
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, dist.rules, transpose=True)
+    return logits, (new_cache if use_cache else None), jnp.zeros((), jnp.float32)

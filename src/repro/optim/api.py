@@ -1,0 +1,249 @@
+"""Optimizer API (built from scratch — no optax in this environment).
+
+An ``Optimizer`` exposes:
+  * ``state_specs(param_specs)`` — a ParamSpec tree for its state, so the
+    dry-run can lower with ShapeDtypeStruct stand-ins and checkpointing can
+    save/restore without materializing params first;
+  * ``init(params)`` — real state;
+  * ``update(grads, state, params, step)`` -> (new_params, new_state, stats).
+
+All states inherit the parameter's sharding (ZeRO-1 falls out of the FSDP
+parameter sharding rules: optimizer state is sharded exactly like the
+params, i.e. split over ``data`` × ``model``).
+
+Implementations: AdamW, AdamW with block-quantized int8 moments (the 314B
+config's memory plan), and Adafactor (factored second moments).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+from repro.models.base import ParamSpec, is_spec
+
+from .schedule import make_schedule
+
+QBLOCK = 256  # int8 quantization block (along the last dim)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    cfg: OptimizerConfig
+    state_specs: Callable
+    init: Callable
+    update: Callable
+
+
+def build_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.name == "adamw":
+        return _adamw(cfg)
+    if cfg.name == "adamw8bit":
+        return _adamw(cfg, quantized=True)
+    if cfg.name == "adafactor":
+        return _adafactor(cfg)
+    raise ValueError(f"unknown optimizer {cfg.name}")
+
+
+# --------------------------------------------------------------------------
+# shared pieces
+# --------------------------------------------------------------------------
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def _wd_mask(spec: ParamSpec) -> bool:
+    """Decay matrices only (skip norms/biases/1-D params)."""
+    return len(spec.shape) >= 2
+
+
+def _layerwise(one, g, s, p, spec: ParamSpec, enabled: bool = False):
+    """Optionally update scan-over-layers leaves via ``lax.map`` over the
+    layer axis. Tried for the 314B config and REFUTED: the map's xs/ys
+    double-buffering (+5.6 GB) outweighed the per-layer transient savings
+    (§Perf iteration 7a). Kept behind a flag, default off."""
+    if enabled and spec.logical and spec.logical[0] == "layers" and len(spec.shape) >= 3:
+        inner_spec = ParamSpec(spec.shape[1:], spec.logical[1:], spec.dtype,
+                               spec.init, spec.scale)
+        return jax.lax.map(lambda t: one(t[0], t[1], t[2], inner_spec), (g, s, p))
+    return one(g, s, p, spec)
+
+
+def clip_scale(grads, max_norm: float):
+    """Global-norm clip as a (scalar, norm) pair — the scale folds into the
+    per-leaf update instead of materializing a scaled copy of the whole
+    gradient tree (a full f32 tree = 4.9 GB/device on the 314B config)."""
+    norm = global_norm(grads)
+    return jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12)), norm
+
+
+# --------------------------------------------------------------------------
+# AdamW (f32 or int8-blocked moments)
+# --------------------------------------------------------------------------
+
+
+def _quantizable(spec: ParamSpec) -> bool:
+    return len(spec.shape) >= 2 and spec.shape[-1] % QBLOCK == 0
+
+
+def _q8(x: jnp.ndarray) -> tuple:
+    """Block-quantize along the last dim -> (int8 codes, f32 scales)."""
+    blocked = x.reshape(*x.shape[:-1], x.shape[-1] // QBLOCK, QBLOCK)
+    scale = jnp.max(jnp.abs(blocked), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(blocked / scale), -127, 127).astype(jnp.int8)
+    return codes.reshape(x.shape), scale[..., 0]
+
+
+def _dq8(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    blocked = codes.reshape(*codes.shape[:-1], codes.shape[-1] // QBLOCK, QBLOCK)
+    return (blocked.astype(jnp.float32) * scale[..., None]).reshape(codes.shape)
+
+
+def _adamw(cfg: OptimizerConfig, quantized: bool = False) -> Optimizer:
+    schedule = make_schedule(cfg)
+
+    def state_specs(param_specs):
+        def one(s: ParamSpec):
+            if quantized and _quantizable(s):
+                scale_shape = (*s.shape[:-1], s.shape[-1] // QBLOCK)
+                scale_logical = (*s.logical[:-1], None)
+                return {
+                    "m_q": ParamSpec(s.shape, s.logical, "int8", "zeros"),
+                    "m_s": ParamSpec(scale_shape, scale_logical, "float32", "zeros"),
+                    "v_q": ParamSpec(s.shape, s.logical, "int8", "zeros"),
+                    "v_s": ParamSpec(scale_shape, scale_logical, "float32", "zeros"),
+                }
+            return {
+                "m": ParamSpec(s.shape, s.logical, "float32", "zeros"),
+                "v": ParamSpec(s.shape, s.logical, "float32", "zeros"),
+            }
+
+        return jax.tree.map(one, param_specs, is_leaf=is_spec)
+
+    def init(params, param_specs):
+        from repro.models.base import init_params
+
+        return init_params(state_specs(param_specs), jax.random.PRNGKey(0))
+
+    def update(grads, state, params, step, param_specs):
+        scale, gnorm = clip_scale(grads, cfg.grad_clip)
+        lr = schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+
+        def one(g, s, p, spec):
+            g = g.astype(jnp.float32) * scale
+            if quantized and _quantizable(spec):
+                m = _dq8(s["m_q"], s["m_s"])
+                v = _dq8(s["v_q"], s["v_s"])
+            else:
+                m, v = s["m"], s["v"]
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            if _wd_mask(spec):
+                upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            if quantized and _quantizable(spec):
+                mq, ms = _q8(m)
+                vq, vs = _q8(v)
+                return new_p, {"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs}
+            return new_p, {"m": m, "v": v}
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s = treedef.flatten_up_to(state)
+        flat_spec = jax.tree.leaves(param_specs, is_leaf=is_spec)
+        outs = [one(g, s, p, sp) for g, s, p, sp in zip(flat_g, flat_s, flat_p, flat_spec)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_state = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(cfg, state_specs, init, update)
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moments; the 314B default)
+# --------------------------------------------------------------------------
+
+
+def _adafactor(cfg: OptimizerConfig) -> Optimizer:
+    schedule = make_schedule(cfg)
+
+    def factored(spec: ParamSpec) -> bool:
+        return len(spec.shape) >= 2
+
+    def state_specs(param_specs):
+        def one(s: ParamSpec):
+            if factored(s):
+                return {
+                    "vr": ParamSpec(s.shape[:-1], s.logical[:-1], "float32", "zeros"),
+                    "vc": ParamSpec(
+                        (*s.shape[:-2], s.shape[-1]), (*s.logical[:-2], s.logical[-1]),
+                        "float32", "zeros",
+                    ),
+                }
+            return {"v": ParamSpec(s.shape, s.logical, "float32", "zeros")}
+
+        return jax.tree.map(one, param_specs, is_leaf=is_spec)
+
+    def init(params, param_specs):
+        from repro.models.base import init_params
+
+        return init_params(state_specs(param_specs), jax.random.PRNGKey(0))
+
+    def update(grads, state, params, step, param_specs):
+        scale, gnorm = clip_scale(grads, cfg.grad_clip)
+        lr = schedule(step)
+        decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8  # beta2 schedule
+
+        def one(g, s, p, spec):
+            g = g.astype(jnp.float32) * scale
+            g2 = jnp.square(g) + 1e-30
+            if factored(spec):
+                vr = decay * s["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * s["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = (
+                    vr[..., None] / jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                ) * vc[..., None, :]
+                upd = g * jax.lax.rsqrt(denom + 1e-30)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = decay * s["v"] + (1 - decay) * g2
+                upd = g * jax.lax.rsqrt(v + 1e-30)
+                new_s = {"v": v}
+            # update clipping (Shazeer & Stern): RMS(upd) <= 1
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms)
+            if _wd_mask(spec):
+                upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            return new_p, new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s = treedef.flatten_up_to(state)
+        flat_spec = jax.tree.leaves(param_specs, is_leaf=is_spec)
+        outs = [one(g, s, p, sp) for g, s, p, sp in zip(flat_g, flat_s, flat_p, flat_spec)]
+        return (
+            jax.tree.unflatten(treedef, [o[0] for o in outs]),
+            jax.tree.unflatten(treedef, [o[1] for o in outs]),
+            {"grad_norm": gnorm, "lr": lr},
+        )
+
+    return Optimizer(cfg, state_specs, init, update)

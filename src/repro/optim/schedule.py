@@ -1,0 +1,26 @@
+"""Learning-rate schedules (warmup + cosine/linear/constant decay)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+
+
+def make_schedule(cfg: OptimizerConfig):
+    warmup = max(cfg.warmup_steps, 1)
+    total = max(cfg.total_steps, warmup + 1)
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = cfg.lr * step / warmup
+        frac = jnp.clip((step - warmup) / (total - warmup), 0.0, 1.0)
+        if cfg.schedule == "cosine":
+            decay = cfg.lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        elif cfg.schedule == "linear":
+            decay = cfg.lr * (1.0 - frac)
+        else:
+            decay = jnp.full_like(frac, cfg.lr)
+        return jnp.where(step < warmup, warm, decay)
+
+    return schedule

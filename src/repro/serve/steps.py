@@ -1,0 +1,51 @@
+"""Serving step functions (prefill / decode) — what the inference dry-run
+cells lower, and what the batched serving engine drives."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RunConfig
+from repro.models.model import Model
+from repro.sharding.rules import Dist
+
+
+def make_prefill_step(model: Model, run: RunConfig, dist: Dist):
+    def prefill_step(params, cache, batch):
+        kw = {}
+        if "frames" in batch:
+            kw["frames"] = batch["frames"]
+        if "prefix_embeds" in batch:
+            kw["prefix_embeds"] = batch["prefix_embeds"]
+        logits, new_cache, _ = model.forward(
+            params, batch["tokens"], dist, mode="prefill", cache=cache, **kw
+        )
+        return logits[:, -1], new_cache
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, run: RunConfig, dist: Dist):
+    def decode_step(params, cache, tokens, cache_pos):
+        logits, new_cache, _ = model.forward(
+            params, tokens, dist, mode="decode", cache=cache, cache_pos=cache_pos
+        )
+        return logits[:, 0], new_cache
+
+    return decode_step
+
+
+def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(logits: jnp.ndarray, rng: jax.Array,
+                       temperature: float = 1.0, top_k: int = 0) -> jnp.ndarray:
+    if temperature <= 0:
+        return greedy_sample(logits)
+    logits = logits / temperature
+    if top_k:
+        top_vals, _ = jax.lax.top_k(logits, top_k)
+        logits = jnp.where(logits < top_vals[..., -1:], -jnp.inf, logits)
+    return jax.random.categorical(rng, logits).astype(jnp.int32)

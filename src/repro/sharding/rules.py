@@ -1,0 +1,121 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every tensor in the model is annotated with *logical* axis names; a rule set
+maps logical names to mesh axes (or ``None`` = replicated). Swapping rule
+sets re-shards the whole model without touching model code — this is the
+lever the §Perf hillclimb turns.
+
+Defaults encode the production layout on the (data=16, model=16) mesh
+(+"pod" data-parallel axis when multi-pod):
+
+  batch           -> ("pod", "data")   activations: DP/FSDP axis
+  embed (weights) -> "data"            ZeRO-3/FSDP weight shard
+  heads / mlp     -> "model"           Megatron tensor parallelism
+  vocab           -> "model"           sharded embedding + logits
+  cache_seq       -> "model"           flash-decode style KV-cache sequence
+                                       sharding (softmax combine = the
+                                       paper's chunk-combine monoid)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Logical axis vocabulary. Weights and activations use disjoint names for the
+# model dim so FSDP (weights) and activation layout can differ.
+DEFAULT_MAPPING: dict = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq_act": None,          # "model" enables Megatron-style sequence parallelism
+    "attn_seq": None,         # seq layout INSIDE attention (None = gathered);
+                              # with seq_act="model" this realizes the
+                              # all-gather-at-entry / reduce-scatter-at-exit SP
+    "embed_act": None,
+    "heads_act": "model",
+    "cache_batch": ("pod", "data"),
+    "cache_seq": "model",     # sequence-sharded KV cache for decode
+    "cache_kv_heads": None,
+    "cache_head_dim": None,
+    # weights
+    "layers": None,
+    "embed": "data",          # FSDP shard of the d_model dim
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "mlp": "model",
+    "experts": None,
+    "rnn": "model",           # ssm/rglru inner channels
+    "state": None,            # ssm state dim N
+    "conv": None,
+}
+
+
+@dataclass(frozen=True)
+class Rules:
+    mapping: dict = field(default_factory=lambda: dict(DEFAULT_MAPPING))
+    mesh_axes: tuple = ("data", "model")
+
+    def with_overrides(self, overrides: dict) -> "Rules":
+        m = dict(self.mapping)
+        m.update(overrides)
+        return replace(self, mapping=m)
+
+    def resolve(self, logical: str | None):
+        if logical is None:
+            return None
+        axes = self.mapping.get(logical, None)
+        if axes is None:
+            return None
+        if isinstance(axes, str):
+            axes = (axes,)
+        # Drop axes absent from the active mesh (e.g. "pod" on single-pod).
+        kept = tuple(a for a in axes if a in self.mesh_axes)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+
+    def spec(self, *logical_axes) -> P:
+        return P(*(self.resolve(a) for a in logical_axes))
+
+
+DEFAULT_RULES = Rules()
+
+
+@dataclass(frozen=True)
+class Dist:
+    """Distribution context threaded through model code: the sharding rules,
+    the active mesh (None on single-device test paths — shard_map layers fall
+    back to local computation), and the axis roles."""
+
+    rules: Rules = DEFAULT_RULES
+    mesh: object = None
+    data_axes: tuple = ("pod", "data")
+    model_axis: str = "model"
+
+    @classmethod
+    def for_mesh(cls, mesh, rules: Rules | None = None) -> "Dist":
+        names = tuple(mesh.axis_names)
+        rules = rules or Rules(mesh_axes=names)
+        return cls(
+            rules=replace(rules, mesh_axes=names),
+            mesh=mesh,
+            data_axes=tuple(a for a in names if a != "model"),
+            model_axis="model" if "model" in names else None,
+        )
+
+
+def logical_spec(rules: Rules, *axes) -> P:
+    return rules.spec(*axes)
+
+
+def constrain(x, rules: Rules, *axes):
+    """with_sharding_constraint against the ambient mesh; no-op shapes pass
+    through untouched when tracing without a mesh (unit tests on CPU)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, rules.spec(*axes))
+    except (ValueError, RuntimeError):
+        return x

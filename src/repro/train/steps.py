@@ -1,0 +1,146 @@
+"""Step functions: the units the launcher jits and the dry-run lowers.
+
+``make_train_step`` builds a pure function
+    (params, opt_state, step, batch) -> (params, opt_state, metrics)
+with gradient accumulation over ``run.micro_batches`` microbatches (a
+``lax.scan`` — activation memory stays at one microbatch), mixed-precision
+params→bf16 casting inside the loss, MoE aux-loss folding, clipping and the
+optimizer update. Sharding comes entirely from the in/out shardings the
+launcher attaches (params FSDP×TP, batch DP) — the body is layout-free.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RunConfig
+from repro.models.layers import cross_entropy
+from repro.models.model import Model
+from repro.optim import build_optimizer
+from repro.sharding.rules import Dist
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def _model_kwargs(batch: dict) -> dict:
+    kw = {}
+    if "frames" in batch:
+        kw["frames"] = batch["frames"]
+    if "prefix_embeds" in batch:
+        kw["prefix_embeds"] = batch["prefix_embeds"]
+    return kw
+
+
+def make_train_step(model: Model, run: RunConfig, dist: Dist):
+    opt = build_optimizer(run.optimizer)
+    param_specs = model.param_specs()
+
+    def loss_fn(params, micro):
+        logits, _, aux = model.forward(
+            params, micro["tokens"], dist, mode="train", **_model_kwargs(micro)
+        )
+        loss = cross_entropy(logits, micro["labels"])
+        return loss + AUX_WEIGHT * aux, (loss, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _gather_once(params):
+        """bf16 compute copy, replicated over the data axes (ZeRO-1). The
+        constraint sits OUTSIDE the microbatch scan so XLA gathers once per
+        step; its transpose is a single reduce-scatter of the bf16 grads."""
+        from repro.models.base import is_spec
+        from repro.sharding.rules import Rules
+
+        data_axes = set(dist.data_axes)
+
+        def one(p, spec):
+            dtype = jnp.bfloat16 if p.dtype == jnp.float32 and p.ndim >= 2 else p.dtype
+            x = p.astype(dtype)
+            resolved = [dist.rules.resolve(a) for a in spec.logical]
+            drop = tuple(
+                None if (r in data_axes or (isinstance(r, tuple) and set(r) & data_axes))
+                else r
+                for r in resolved
+            )
+            from jax.sharding import PartitionSpec as P
+
+            try:
+                return jax.lax.with_sharding_constraint(x, P(*drop))
+            except (ValueError, RuntimeError):
+                return x
+
+        return jax.tree.map(one, params, param_specs, is_leaf=is_spec)
+
+    def train_step(params, opt_state, step, batch):
+        n_micro = run.micro_batches
+        # loss params: either the stored (FSDP-sharded f32) tree, or the
+        # once-gathered bf16 compute copy (ZeRO-1 mode).
+        loss_params = _gather_once(params) if run.gather_params_once else params
+
+        if n_micro == 1:
+            (total, (loss, aux)), grads = grad_fn(loss_params, batch)
+        else:
+            B = batch["tokens"].shape[0]
+            assert B % n_micro == 0
+            mb = B // n_micro
+
+            def slice_micro(i):
+                return {
+                    k: jax.lax.dynamic_slice_in_dim(v, i * mb, mb, 0)
+                    for k, v in batch.items()
+                }
+
+            acc_dtype = jnp.dtype(run.grad_accum_dtype)
+
+            def body(carry, i):
+                g_acc, l_acc, a_acc = carry
+                (_, (loss, aux)), g = grad_fn(loss_params, slice_micro(i))
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(acc_dtype), g_acc, g)
+                return (g_acc, l_acc + loss, a_acc + aux), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), loss_params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                body, (g0, jnp.zeros(()), jnp.zeros(())), jnp.arange(n_micro)
+            )
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            aux = aux / n_micro
+
+        if run.gather_params_once:
+            # re-shard grads to the parameter layout: the transpose of the
+            # step-level gather — one reduce-scatter, not micro_batches of them
+            from repro.models.base import is_spec, pspec_tree
+
+            pspecs = pspec_tree(param_specs, dist.rules)
+
+            def reshard(g, spec):
+                try:
+                    return jax.lax.with_sharding_constraint(
+                        g.astype(jnp.float32), spec
+                    )
+                except (ValueError, RuntimeError):
+                    return g.astype(jnp.float32)
+
+            grads = jax.tree.map(reshard, grads, pspecs)
+
+        new_params, new_opt, stats = opt.update(
+            grads, opt_state, params, step, param_specs
+        )
+        metrics = {"loss": loss, "aux_loss": aux, **stats}
+        return new_params, new_opt, metrics
+
+    return train_step, opt
+
+
+def make_eval_step(model: Model, run: RunConfig, dist: Dist):
+    def eval_step(params, batch):
+        logits, _, _ = model.forward(
+            params, batch["tokens"], dist, mode="train", **_model_kwargs(batch)
+        )
+        return cross_entropy(logits, batch["labels"])
+
+    return eval_step

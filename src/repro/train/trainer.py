@@ -1,0 +1,165 @@
+"""Training driver: auto-resume, async checkpoints, preemption handling,
+straggler monitoring, elastic restart.
+
+Fault-tolerance model (designed for 1000+ chips, exercised here on CPU):
+  * **checkpoint/restart** — CheckpointManager (atomic, async, keep-N);
+    params + optimizer state + data-iterator step all restore exactly, so a
+    killed job resumes bit-identically (tested in tests/test_trainer.py).
+  * **preemption** — SIGTERM triggers a final checkpoint before exit (TPU
+    maintenance events surface as SIGTERM on Cloud TPU hosts).
+  * **straggler mitigation** — per-step wall-time EWMA; a step slower than
+    ``straggler_factor×`` EWMA increments a counter and (configurably)
+    forces an early checkpoint so an external supervisor can reschedule the
+    job around the slow host. In SPMD you cannot drop a chip mid-step;
+    detect-and-relaunch *is* the production mitigation.
+  * **elastic scaling** — checkpoints are topology-agnostic (full arrays);
+    on restart the trainer re-shards onto whatever mesh it finds, so the
+    same job continues on a different chip count.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.config import RunConfig
+from repro.data import DataIterator
+from repro.models import base as mbase
+from repro.models.model import Model
+from repro.sharding.rules import Dist
+
+from .steps import make_train_step
+
+
+@dataclass
+class StragglerMonitor:
+    factor: float = 3.0
+    alpha: float = 0.1
+    ewma_s: float = 0.0
+    slow_steps: int = 0
+    _n: int = 0
+
+    def observe(self, dt: float) -> bool:
+        self._n += 1
+        if self._n <= 2:           # warmup: ignore compile step
+            self.ewma_s = dt
+            return False
+        slow = dt > self.factor * self.ewma_s
+        if slow:
+            self.slow_steps += 1
+        self.ewma_s = (1 - self.alpha) * self.ewma_s + self.alpha * dt
+        return slow
+
+
+@dataclass
+class Trainer:
+    model: Model
+    run: RunConfig
+    dist: Dist
+    data: DataIterator
+    log_every: int = 10
+    checkpoint_on_straggler: bool = False
+
+    step: int = 0
+    params: dict | None = None
+    opt_state: dict | None = None
+    metrics_log: list = field(default_factory=list)
+    _preempted: bool = field(default=False, repr=False)
+
+    def __post_init__(self):
+        self.ckpt = CheckpointManager(
+            self.run.checkpoint_dir,
+            keep=self.run.keep_checkpoints,
+            async_save=self.run.async_checkpoint,
+        )
+        self.train_step_fn, self.opt = make_train_step(self.model, self.run, self.dist)
+        self._jit_step = jax.jit(self.train_step_fn, donate_argnums=(0, 1))
+        self.monitor = StragglerMonitor()
+        self.param_specs = self.model.param_specs()
+
+    # -- state ------------------------------------------------------------------
+    def init_state(self):
+        rng = jax.random.PRNGKey(self.run.seed)
+        self.params = self.model.init(rng)
+        self.opt_state = self.opt.init(self.params, self.param_specs)
+        self.step = 0
+
+    def try_resume(self) -> bool:
+        """Auto-resume from the latest checkpoint (elastic: re-shards onto
+        the current mesh via the Dist rules)."""
+        like = {
+            "params": self.params if self.params is not None else self.model.init(
+                jax.random.PRNGKey(self.run.seed)
+            ),
+        }
+        if self.opt_state is None:
+            self.opt_state = self.opt.init(like["params"], self.param_specs)
+        like["opt"] = self.opt_state
+        res = self.ckpt.restore(like)
+        if res is None:
+            return False
+        step, tree, extra = res
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.step = step
+        if "data" in extra:
+            self.data.restore(extra["data"])
+        return True
+
+    def save(self):
+        self.ckpt.save(
+            self.step,
+            {"params": self.params, "opt": self.opt_state},
+            extra={"data": self.data.state()},
+        )
+
+    # -- preemption ---------------------------------------------------------------
+    def install_preemption_handler(self):
+        def handler(signum, frame):
+            self._preempted = True
+
+        signal.signal(signal.SIGTERM, handler)
+
+    # -- loop ------------------------------------------------------------------
+    def fit(self, total_steps: int) -> dict:
+        if self.params is None:
+            if not self.try_resume():
+                self.init_state()
+        last_loss = None
+        while self.step < total_steps:
+            batch = next(self.data)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()
+                     if k in ("tokens", "labels", "frames", "prefix_embeds")}
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self._jit_step(
+                self.params, self.opt_state, jnp.asarray(self.step, jnp.int32), batch
+            )
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            slow = self.monitor.observe(dt)
+            self.step += 1
+            last_loss = loss
+            if self.step % self.log_every == 0 or self.step == total_steps:
+                self.metrics_log.append(
+                    {"step": self.step, "loss": loss, "dt_s": dt,
+                     "grad_norm": float(metrics["grad_norm"])}
+                )
+            if slow and self.checkpoint_on_straggler:
+                self.save()
+            if self.step % self.run.checkpoint_every == 0:
+                self.save()
+            if self._preempted:
+                self.save()
+                self.ckpt.wait()
+                raise SystemExit(143)
+        self.save()
+        self.ckpt.wait()
+        return {"final_loss": last_loss, "steps": self.step,
+                "slow_steps": self.monitor.slow_steps,
+                "log": self.metrics_log}

@@ -1,0 +1,78 @@
+"""Rabin fingerprints: Barrett reduction vs naive GF(2) mod, limb paths."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fingerprint as fp
+
+
+CONSTS = fp.BarrettConstants.create()
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=st.integers(min_value=0, max_value=(1 << 128) - 1))
+def test_barrett_matches_naive_mod(a):
+    assert fp.barrett_reduce_int(a, CONSTS) == fp.poly_mod_int(a, CONSTS.poly)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    a=st.integers(min_value=0, max_value=(1 << 64) - 1),
+    b=st.integers(min_value=0, max_value=(1 << 64) - 1),
+)
+def test_clmul_linearity(a, b):
+    # carry-less multiplication distributes over XOR
+    c = 0x123456789ABCDEF
+    assert fp.clmul_int(a ^ b, c) == fp.clmul_int(a, c) ^ fp.clmul_int(b, c)
+
+
+def test_default_poly_is_irreducible():
+    assert fp.is_irreducible((1 << 64) | fp.DEFAULT_POLY_LOW)
+
+
+def test_random_irreducible():
+    p = fp.random_irreducible_poly64(7)
+    assert p >> 64 == 1 and fp.is_irreducible(p)
+
+
+def test_known_reducible_rejected():
+    # x^64 alone factors as x * x^63
+    assert not fp.is_irreducible(1 << 64 | 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=33),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_np_jax_int_agree(n, seed):
+    rng = np.random.default_rng(seed)
+    states = rng.integers(0, 1 << 16, size=(3, n)).astype(np.int32)
+    fnp = fp.fingerprint_states_np(states, CONSTS)
+    fjx = np.asarray(fp.fingerprint_states(jnp.asarray(states), CONSTS))
+    assert np.array_equal(fnp, fjx)
+    packed = np.asarray(fp.pack_states_u32(jnp.asarray(states)))
+    for b in range(3):
+        want = fp.fingerprint_int(packed[b], CONSTS)
+        got = (int(fnp[b, 0]) << 32) | int(fnp[b, 1])
+        assert got == want
+
+
+def test_no_collisions_on_bulk_random_vectors():
+    """Paper's collision bound: P < n^2 m / 2^64 — astronomically small here;
+    10k random 64-state vectors must produce 10k distinct fingerprints."""
+    rng = np.random.default_rng(0)
+    states = rng.integers(0, 1 << 16, size=(10_000, 64)).astype(np.int32)
+    fps = fp.fingerprint_states_np(states, CONSTS)
+    packed = fps[:, 0].astype(np.uint64) << np.uint64(32) | fps[:, 1].astype(np.uint64)
+    assert len(np.unique(packed)) == 10_000
+
+
+def test_fingerprint_depends_on_position():
+    # permuting the vector must (virtually always) change the fingerprint
+    a = np.asarray([[1, 2, 3, 4]], dtype=np.int32)
+    b = np.asarray([[4, 3, 2, 1]], dtype=np.int32)
+    fa = fp.fingerprint_states_np(a, CONSTS)
+    fb = fp.fingerprint_states_np(b, CONSTS)
+    assert not np.array_equal(fa, fb)

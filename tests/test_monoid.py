@@ -1,0 +1,109 @@
+"""Monoid laws (hypothesis) + scan correctness for the three instances."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import monoid as M
+
+FN = M.function_monoid()
+AFF = M.affine_monoid()
+SM = M.softmax_monoid()
+
+
+def _rand_fn(rng, n=6):
+    return jnp.asarray(rng.integers(0, n, size=n).astype(np.int32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_function_monoid_laws(seed):
+    rng = np.random.default_rng(seed)
+    a, b, c = (_rand_fn(rng) for _ in range(3))
+    lhs = FN.combine(FN.combine(a, b), c)
+    rhs = FN.combine(a, FN.combine(b, c))
+    assert jnp.array_equal(lhs, rhs)
+    e = FN.identity(a)
+    assert jnp.array_equal(FN.combine(e, a), a)
+    assert jnp.array_equal(FN.combine(a, e), a)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_affine_monoid_laws(seed):
+    rng = np.random.default_rng(seed)
+    mk = lambda: (jnp.asarray(rng.uniform(0.1, 1.0, 4)), jnp.asarray(rng.normal(size=4)))
+    a, b, c = mk(), mk(), mk()
+    lhs = AFF.combine(AFF.combine(a, b), c)
+    rhs = AFF.combine(a, AFF.combine(b, c))
+    for l, r in zip(lhs, rhs):
+        np.testing.assert_allclose(l, r, rtol=1e-4, atol=1e-6)  # f32 reassociation
+    e = AFF.identity(a)
+    out = AFF.combine(e, a)
+    np.testing.assert_allclose(out[0], a[0], rtol=1e-6)
+    np.testing.assert_allclose(out[1], a[1], rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_softmax_monoid_laws_and_commutativity(seed):
+    rng = np.random.default_rng(seed)
+    mk = lambda: (
+        jnp.asarray(rng.normal(size=3)),
+        jnp.asarray(rng.uniform(0.1, 2.0, 3)),
+        jnp.asarray(rng.normal(size=3)),
+    )
+    a, b, c = mk(), mk(), mk()
+    lhs = SM.combine(SM.combine(a, b), c)
+    rhs = SM.combine(a, SM.combine(b, c))
+    for l, r in zip(lhs, rhs):
+        np.testing.assert_allclose(l, r, rtol=1e-4, atol=1e-6)  # f32 reassociation
+    ab, ba = SM.combine(a, b), SM.combine(b, a)
+    for l, r in zip(ab, ba):
+        np.testing.assert_allclose(l, r, rtol=1e-4, atol=1e-6)
+
+
+def test_function_scan_is_prefix_composition():
+    rng = np.random.default_rng(0)
+    fs = jnp.asarray(rng.integers(0, 5, size=(7, 5)).astype(np.int32))
+    inc = M.scan(FN, fs, axis=0)
+    acc = fs[0]
+    for i in range(7):
+        if i:
+            acc = FN.combine(acc, fs[i])
+        assert jnp.array_equal(inc[i], acc), i
+
+
+def test_exclusive_scan_shifts_with_identity():
+    rng = np.random.default_rng(1)
+    fs = jnp.asarray(rng.integers(0, 4, size=(5, 4)).astype(np.int32))
+    ex = M.exclusive_scan(FN, fs, axis=0)
+    assert jnp.array_equal(ex[0], jnp.arange(4))
+    inc = M.scan(FN, fs, axis=0)
+    for i in range(1, 5):
+        assert jnp.array_equal(ex[i], inc[i - 1])
+
+
+def test_reduce_equals_fold():
+    rng = np.random.default_rng(2)
+    fs = jnp.asarray(rng.integers(0, 6, size=(9, 6)).astype(np.int32))
+    red = M.reduce(FN, fs, axis=0)
+    acc = fs[0]
+    for i in range(1, 9):
+        acc = FN.combine(acc, fs[i])
+    assert jnp.array_equal(red, acc)
+
+
+def test_softmax_monoid_computes_softmax():
+    """Chunked (m, s, o) combining == direct softmax-weighted sum."""
+    rng = np.random.default_rng(3)
+    scores = rng.normal(size=16).astype(np.float32)
+    values = rng.normal(size=16).astype(np.float32)
+    want = (np.exp(scores - scores.max()) / np.exp(scores - scores.max()).sum() * values).sum()
+    elems = (
+        jnp.asarray(scores)[:, None],
+        jnp.ones((16, 1)),
+        jnp.asarray(values)[:, None],
+    )
+    m, s, o = M.reduce(SM, elems, axis=0)
+    np.testing.assert_allclose(float(o[0] / s[0]), want, rtol=1e-5)

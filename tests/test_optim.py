@@ -1,0 +1,102 @@
+"""Optimizers: convergence on a quadratic, int8-state fidelity, adafactor."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import OptimizerConfig
+from repro.models.base import ParamSpec, init_params
+from repro.optim import build_optimizer, make_schedule
+from repro.optim.api import _dq8, _q8, clip_by_global_norm
+
+
+SPECS = {"w": ParamSpec((4, 256), ("embed", "mlp")), "b": ParamSpec((4,), (None,))}
+
+
+def _fit(opt_name, steps=200, lr=0.05):
+    cfg = OptimizerConfig(name=opt_name, lr=lr, warmup_steps=5, total_steps=steps,
+                          schedule="constant", weight_decay=0.0)
+    opt = build_optimizer(cfg)
+    params = init_params(SPECS, jax.random.PRNGKey(0))
+    target = jax.tree.map(lambda x: jnp.ones_like(x) * 0.5, params)
+    state = opt.init(params, SPECS)
+
+    def loss_fn(p):
+        return sum(
+            jnp.sum(jnp.square(a - b))
+            for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(target))
+        )
+
+    for step in range(steps):
+        grads = jax.grad(loss_fn)(params)
+        params, state, stats = opt.update(
+            grads, state, params, jnp.asarray(step), SPECS
+        )
+    return float(loss_fn(params))
+
+
+@pytest.mark.parametrize("name", ["adamw", "adamw8bit", "adafactor"])
+def test_optimizers_converge_on_quadratic(name):
+    final = _fit(name)
+    # adafactor's factored second moment + RMS update clipping leave it
+    # bouncing near the optimum on this tiny quadratic (initial loss ~237);
+    # adam variants drive it to ~0.
+    tol = 2.0 if name == "adafactor" else 1e-2
+    assert final < tol, (name, final)
+
+
+def test_int8_roundtrip_accuracy():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 512)).astype(np.float32)) * 0.01
+    codes, scales = _q8(x)
+    assert codes.dtype == jnp.int8
+    back = _dq8(codes, scales)
+    rel = float(jnp.max(jnp.abs(back - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 0.02, rel
+
+
+def test_adamw8bit_state_is_quantized():
+    cfg = OptimizerConfig(name="adamw8bit")
+    opt = build_optimizer(cfg)
+    state_specs = opt.state_specs(SPECS)
+    assert state_specs["w"]["m_q"].dtype == "int8"
+    assert state_specs["b"]["m"].dtype == "float32"  # small params stay f32
+
+
+def test_adafactor_state_is_factored():
+    cfg = OptimizerConfig(name="adafactor")
+    opt = build_optimizer(cfg)
+    ss = opt.state_specs(SPECS)
+    assert ss["w"]["vr"].shape == (4,)
+    assert ss["w"]["vc"].shape == (256,)
+
+
+def test_global_norm_clip():
+    grads = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) > 30
+    out_norm = float(jnp.sqrt(jnp.sum(jnp.square(clipped["a"]))))
+    np.testing.assert_allclose(out_norm, 1.0, rtol=1e-5)
+
+
+def test_schedule_shapes():
+    cfg = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=100, schedule="cosine")
+    s = make_schedule(cfg)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) <= 1e-3 + 1e-9
+    np.testing.assert_allclose(float(s(5)), 5e-4, rtol=1e-5)
+    assert float(s(100)) < 1e-4
+
+
+def test_weight_decay_only_on_matrices():
+    cfg = OptimizerConfig(name="adamw", lr=1e-2, weight_decay=0.5,
+                          schedule="constant", warmup_steps=0)
+    opt = build_optimizer(cfg)
+    params = init_params(SPECS, jax.random.PRNGKey(1))
+    state = opt.init(params, SPECS)
+    zero_grads = jax.tree.map(jnp.zeros_like, params)
+    p2, _, _ = opt.update(zero_grads, state, params, jnp.asarray(1), SPECS)
+    # matrix decayed, bias untouched
+    assert float(jnp.max(jnp.abs(p2["w"]))) < float(jnp.max(jnp.abs(params["w"])))
+    np.testing.assert_allclose(np.asarray(p2["b"]), np.asarray(params["b"]))

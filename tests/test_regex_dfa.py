@@ -1,0 +1,115 @@
+"""Regex -> NFA -> DFA pipeline, PROSITE translation, minimization."""
+
+import re as pyre
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dfa import compile_dfa, example_fa, minimize, random_dfa, subset_construct
+from repro.core.prosite import PROSITE_SAMPLES, PrositeSyntaxError, compile_prosite, translate
+from repro.core.regex import AMINO_ACIDS, RegexSyntaxError, compile_nfa, parse
+
+
+def test_example_fa_matches_paper():
+    """Paper Fig. 1: 'contains RG' FA has 3 states, accepts iff RG occurs."""
+    dfa = example_fa()
+    assert dfa.n_states == 3
+    assert dfa.accepts("AARGA")
+    assert dfa.accepts("RG")
+    assert not dfa.accepts("RRRR")
+    assert not dfa.accepts("GR")
+
+
+def test_transition_table_shape_and_completeness():
+    dfa = example_fa()
+    assert dfa.table.shape == (3, 20)
+    assert dfa.table.min() >= 0 and dfa.table.max() < 3
+    assert np.array_equal(dfa.transposed(), dfa.table.T)
+
+
+@pytest.mark.parametrize("pattern,yes,no", [
+    ("A", "A", "C"),
+    ("AC", "DAC", "CA"),
+    ("A|C", "A", "D"),
+    ("A*C", "AAAC", "AAA"),
+    ("A+C", "AC", "C"),
+    ("[AC]G", "CG", "GG"),
+    ("[^A]G", "CG", "AG"),
+    ("A{2,3}G", "AAG", "AG"),
+    ("(AC)+G", "ACACG", "AG"),
+    ("A.C", "ADC", "AC"),
+])
+def test_search_semantics(pattern, yes, no):
+    dfa = compile_dfa(pattern)
+    assert dfa.accepts(yes), (pattern, yes)
+    assert not dfa.accepts(no), (pattern, no)
+
+
+def test_syntax_errors():
+    # note: "A|" is VALID in this grammar (trailing empty alternative = ε)
+    for bad in ["(", "[", "a", "A{3,1}", "*A"]:
+        with pytest.raises(RegexSyntaxError):
+            compile_dfa(bad)
+    assert compile_dfa("A|", search=False).accepts("")
+
+
+_PATTERN_ATOMS = st.sampled_from(
+    ["A", "C", "G", "R", "[AC]", "[^RG]", ".", "A*", "C+", "G?", "(RG)", "R{2}",
+     "[ILV]", "A{1,2}"]
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    atoms=st.lists(_PATTERN_ATOMS, min_size=1, max_size=5),
+    text=st.text(alphabet=AMINO_ACIDS, min_size=0, max_size=40),
+)
+def test_dfa_agrees_with_python_re(atoms, text):
+    """Property: our DFA (search semantics) == python re.search."""
+    pattern = "".join(atoms)
+    dfa = compile_dfa(pattern)
+    want = pyre.search(pattern, text) is not None
+    assert dfa.accepts(text) == want, (pattern, text)
+
+
+def test_minimization_preserves_language_and_shrinks():
+    raw = subset_construct(compile_nfa("(.*)((AC)|(AG))"))
+    mini = minimize(raw)
+    assert mini.n_states <= raw.n_states
+    rng = np.random.default_rng(0)
+    for _ in range(100):
+        s = "".join(AMINO_ACIDS[i] for i in rng.integers(0, 20, size=12))
+        assert raw.accepts(s) == mini.accepts(s)
+
+
+def test_prosite_translation():
+    tr = translate("<A-x-[ST](2)-{V}>")
+    assert tr.regex == "A.[ST]{2}[^V]"
+    assert tr.anchored_start and tr.anchored_end
+    tr2 = translate("R-G-D")
+    assert tr2.regex == "RGD" and not tr2.anchored_start
+
+
+def test_prosite_samples_compile():
+    for pid, pat in PROSITE_SAMPLES.items():
+        dfa = compile_prosite(pat)
+        assert dfa.n_states >= 2, pid
+
+
+def test_prosite_rgd():
+    dfa = compile_prosite("R-G-D")
+    assert dfa.accepts("AAARGDAAA")
+    assert not dfa.accepts("RGA")
+
+
+def test_prosite_errors():
+    for bad in ["", "A-B2", "A-(2)", "[Z]"]:
+        with pytest.raises(PrositeSyntaxError):
+            compile_prosite(bad)
+
+
+def test_random_dfa_complete():
+    d = random_dfa(10, 5, seed=3)
+    assert d.table.shape == (10, 5)
+    assert (d.table >= 0).all() and (d.table < 10).all()

@@ -1,0 +1,108 @@
+"""SFA construction: the paper's worked example, engine equivalence, the
+Fig. 4 ablation toggles, and the simultaneity semantics."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dfa import example_fa, random_dfa
+from repro.core.prosite import compile_prosite, synthetic_protein
+from repro.core.sfa import (
+    SFA,
+    StateBlowup,
+    construct_sfa,
+    construct_sfa_sequential,
+    construct_sfa_vectorized,
+)
+
+
+def test_paper_example_six_states():
+    """Paper Fig. 2: the 'contains RG' FA yields exactly 6 SFA states."""
+    sfa = construct_sfa(example_fa())
+    assert sfa.n_states == 6
+    # start state is the identity mapping
+    assert np.array_equal(sfa.mappings[0], np.arange(3))
+
+
+def test_engines_bit_identical_on_example():
+    dfa = example_fa()
+    a = construct_sfa(dfa, engine="sequential")
+    b = construct_sfa(dfa, engine="vectorized")
+    c = construct_sfa(dfa, engine="jax", max_states=64, tile=4)
+    for x in (b, c):
+        assert np.array_equal(a.mappings, x.mappings)
+        assert np.array_equal(a.delta, x.delta)
+        assert np.array_equal(a.fingerprints, x.fingerprints)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=6),
+    k=st.integers(min_value=2, max_value=6),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_engines_agree_on_random_dfas(n, k, seed):
+    d = random_dfa(n, k, seed=seed)
+    a = construct_sfa(d, engine="sequential")
+    b = construct_sfa(d, engine="vectorized")
+    assert np.array_equal(a.mappings, b.mappings)
+    assert np.array_equal(a.delta, b.delta)
+
+
+def test_ablation_toggles_identical_results():
+    """Fingerprints/hashing change speed, never the SFA (paper §III-A)."""
+    d = random_dfa(5, 5, seed=11)
+    base = construct_sfa_sequential(d, use_fingerprints=False, use_hashing=False)
+    f = construct_sfa_sequential(d, use_fingerprints=True, use_hashing=False)
+    fh = construct_sfa_sequential(d, use_fingerprints=True, use_hashing=True)
+    assert np.array_equal(base.mappings, f.mappings)
+    assert np.array_equal(base.mappings, fh.mappings)
+    assert np.array_equal(base.delta, fh.delta)
+    # and hashing actually reduces comparisons
+    assert fh.stats.exact_compares < base.stats.exact_compares
+
+
+def test_hashing_requires_fingerprints():
+    with pytest.raises(ValueError):
+        construct_sfa_sequential(example_fa(), use_fingerprints=False, use_hashing=True)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=500))
+def test_simultaneity_semantics(seed):
+    """The SFA mapping of a string == running the DFA from every state."""
+    d = random_dfa(4, 5, seed=seed)
+    sfa = construct_sfa(d)
+    rng = np.random.default_rng(seed)
+    syms = rng.integers(0, 5, size=50).astype(np.int32)
+    mapping = sfa.mapping_of(syms)
+    for q in range(d.n_states):
+        assert mapping[q] == d.run(syms, state=q)
+
+
+def test_accepting_states_match_paper_definition():
+    d = example_fa()
+    sfa = construct_sfa(d)
+    acc = sfa.accepting_states()
+    for i in range(sfa.n_states):
+        assert acc[i] == d.accepting[sfa.mappings[i, d.start]]
+
+
+def test_blowup_cap():
+    d = random_dfa(8, 8, seed=1)
+    with pytest.raises(StateBlowup):
+        construct_sfa(d, engine="vectorized", max_states=10)
+
+
+def test_prosite_sfa_runs_like_dfa():
+    d = compile_prosite("R-G-D")
+    sfa = construct_sfa(d)
+    text = synthetic_protein(300, seed=2) + "RGD" + synthetic_protein(10, seed=3)
+    syms = d.encode(text)
+    assert bool(sfa.accepting_states()[sfa.run(syms)]) == d.accepts(text) == True
+
+
+def test_stats_recorded():
+    s = construct_sfa(example_fa(), engine="vectorized")
+    assert s.stats.candidates == 6 * 20
+    assert s.stats.wall_time_s > 0
