@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV. Figure mapping:
   census  bench_census                (PROSITE DFA -> SFA growth, §IV)
   kernels bench_kernels               (fingerprint pipeline micro)
   roofline bench_roofline             (LM dry-run cells, beyond-paper)
+  multipattern bench_multipattern     (batched bank vs per-pattern loop, §IV)
 """
 
 from __future__ import annotations
@@ -21,6 +22,7 @@ def main() -> None:
         bench_construction,
         bench_kernels,
         bench_matching,
+        bench_multipattern,
         bench_parallel_construction,
         bench_roofline,
     )
@@ -41,6 +43,7 @@ def main() -> None:
         bench_census.run_synthetic_ladder,
         bench_kernels.run,
         bench_roofline.run,
+        bench_multipattern.run,
     ]
     failures = 0
     for suite in suites:

@@ -1,6 +1,7 @@
-"""ScanProsite-style bulk scan (paper §IV): a batch of PROSITE signatures
-matched over a synthetic protein database, chunk-parallel, with timing and
-match localization.
+"""ScanProsite-style bulk scan (paper §IV): the full bundled signature bank
+matched over a synthetic protein database in one batched program —
+pattern-parallel (the bank axis) × chunk-parallel (the SFA axis), with a
+per-pattern census and match localization for the hits.
 
     PYTHONPATH=src python examples/sfa_bioscan.py [--db-size 200] [--len 2000]
 """
@@ -14,47 +15,64 @@ sys.path.insert(0, "src")
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import PROSITE_SAMPLES, compile_prosite, construct_sfa, synthetic_protein
+from repro.core import load_bank, synthetic_protein
 from repro.core import matching as mt
+from repro.core import multipattern as mp
+
+N_CHUNKS = 16
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--db-size", type=int, default=200)
     ap.add_argument("--len", dest="length", type=int, default=2000)
-    ap.add_argument("--patterns", nargs="*",
-                    default=["PS00016", "PS00005", "PS00006", "PS00017"])
+    ap.add_argument("--ids", nargs="*", default=None,
+                    help="signature ids (default: the full bundled bank)")
     args = ap.parse_args()
 
-    print(f"building database: {args.db_size} proteins x {args.length} residues")
-    db = [synthetic_protein(args.length, seed=i) for i in range(args.db_size)]
+    length = (args.length // N_CHUNKS) * N_CHUNKS
+    print(f"building database: {args.db_size} proteins x {length} residues")
+    db = [synthetic_protein(length, seed=i) for i in range(args.db_size)]
 
-    for pid in args.patterns:
-        pat = PROSITE_SAMPLES[pid]
-        dfa = compile_prosite(pat)
-        t0 = time.perf_counter()
-        sfa = construct_sfa(dfa, max_states=500_000)
-        t_build = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bank = load_bank(args.ids)
+    t_bank = time.perf_counter() - t0
+    print(f"bank: {bank.n_patterns} signatures, n_max={bank.n_max} states, "
+          f"compiled in {t_bank*1e3:.0f} ms")
 
-        table = jnp.asarray(dfa.table)
-        accepting = jnp.asarray(dfa.accepting)
-        t0 = time.perf_counter()
-        hits = []
-        for i, prot in enumerate(db):
-            syms = jnp.asarray(dfa.encode(prot))
-            L = (len(prot) // 16) * 16
-            flags = mt.find_matches_parallel(table, accepting, syms[:L], dfa.start, 16)
-            if bool(flags.any()):
-                hits.append((i, int(np.argmax(np.asarray(flags)))))
-        t_scan = time.perf_counter() - t0
-        chars = args.db_size * args.length
-        print(f"{pid}  {pat}")
-        print(f"  dfa={dfa.n_states} sfa={sfa.n_states} built in {t_build*1e3:.0f} ms")
-        print(f"  scanned {chars/1e6:.1f} Mchar in {t_scan:.2f} s "
-              f"({chars/t_scan/1e6:.1f} Mchar/s), {len(hits)} proteins hit")
-        if hits:
-            i, pos = hits[0]
-            print(f"  first: protein {i} match ending at {pos}")
+    corpus = jnp.asarray(np.stack([bank.encode(p) for p in db]))
+    tables, accepting, starts = bank.device_arrays()
+
+    # one batched program: every (pattern, protein, chunk) cell at once
+    mp.bank_hits(tables, accepting, starts, corpus, N_CHUNKS).block_until_ready()
+    t0 = time.perf_counter()
+    hits = mp.bank_hits(tables, accepting, starts, corpus, N_CHUNKS)
+    counts = jnp.sum(hits, axis=1, dtype=jnp.int32)
+    counts.block_until_ready()
+    t_scan = time.perf_counter() - t0
+
+    chars = args.db_size * length * bank.n_patterns
+    print(f"scanned {chars/1e6:.1f} Mchar-pattern in {t_scan:.2f} s "
+          f"({chars/t_scan/1e6:.1f} Mchar-pattern/s)")
+    print(f"{'id':10s} {'pattern':42s} {'dfa':>4s} {'hits':>5s}  first match")
+    from repro.core.prosite import PROSITE_EXTRA, PROSITE_SAMPLES
+
+    pool = {**PROSITE_SAMPLES, **PROSITE_EXTRA}
+    hits_np = np.asarray(hits)
+    for p, pid in enumerate(bank.ids):
+        d = bank.dfa(p)
+        first = ""
+        hit_rows = np.flatnonzero(hits_np[p])
+        if hit_rows.size:
+            # localize the first hit with the two-pass position matcher
+            i = int(hit_rows[0])
+            flags = mt.find_matches_parallel(
+                jnp.asarray(d.table), jnp.asarray(d.accepting),
+                corpus[i], d.start, N_CHUNKS,
+            )
+            first = f"protein {i} @ {int(np.argmax(np.asarray(flags)))}"
+        pat = pool.get(pid, "?")
+        print(f"{pid:10s} {pat:42s} {d.n_states:4d} {int(counts[p]):5d}  {first}")
 
 
 if __name__ == "__main__":

@@ -86,7 +86,8 @@ class Instr:
     name: str
     shape: str
     op: str
-    args: list
+    args: list       # operand names
+    arg_texts: list  # full operand texts (inline shape + name)
     rest: str
 
 
@@ -130,16 +131,49 @@ def _split_computations(text: str) -> dict:
     return comps if entry is None else {**comps, "__entry__": entry}
 
 
+def _split_top_level(s: str) -> list:
+    """Split on commas outside any ()/[]/{} nesting — HLO operand lists embed
+    commas inside shapes (``f32[64,64]{1,0}``), so a plain split mangles them."""
+    parts, cur, depth = [], [], 0
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return [p.strip() for p in parts if p.strip()]
+
+
+_ARG_NAME_RE = re.compile(r"%?([\w.\-]+)\s*$")
+
+
 def _parse_instrs(lines: list) -> list:
     out = []
     for line in lines:
         m = _INSTR_RE.match(line)
         if not m:
             continue
-        args = [a.strip().lstrip("%") for a in m.group("args").split(",") if a.strip()]
+        arg_texts = _split_top_level(m.group("args"))
+        args = []
+        for t in arg_texts:
+            mn = _ARG_NAME_RE.search(t)
+            args.append(mn.group(1) if mn else t)
         out.append(Instr(m.group("name"), m.group("shape"), m.group("op"),
-                         args, m.group("rest")))
+                         args, arg_texts, m.group("rest")))
     return out
+
+
+def _operand_shape(instr: Instr, i: int, shapes: dict) -> str:
+    """Shape text of operand ``i``: inline in post-optimization HLO, else
+    resolved through the computation's name -> shape map."""
+    if i < len(instr.arg_texts) and _SHAPE_RE.search(instr.arg_texts[i]):
+        return instr.arg_texts[i]
+    return shapes.get(instr.args[i], "") if i < len(instr.args) else ""
 
 
 def _dot_flops(instr: Instr, shapes: dict) -> int:
@@ -151,7 +185,7 @@ def _dot_flops(instr: Instr, shapes: dict) -> int:
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
     contracted = 1
     if mc and instr.args:
-        lhs_shape = shapes.get(instr.args[0])
+        lhs_shape = _operand_shape(instr, 0, shapes)
         if lhs_shape:
             arrs = _dims(lhs_shape)
             if arrs:
@@ -169,7 +203,7 @@ def _conv_flops(instr: Instr, shapes: dict) -> int:
         for d in dims:
             out_elems *= d
     if len(instr.args) >= 2:
-        k = shapes.get(instr.args[1])
+        k = _operand_shape(instr, 1, shapes)
         if k:
             arrs = _dims(k)
             if arrs:
@@ -193,7 +227,9 @@ def _analyze_computation(lines: list, n_devices: int) -> CompStats:
         elif i.op == "convolution":
             st.dot_flops += _conv_flops(i, shapes)
         if i.op not in _SKIP_BYTES_OPS and not i.op.startswith("constant"):
-            operand_b = sum(_shape_bytes(shapes.get(a, "")) for a in i.args)
+            operand_b = sum(
+                _shape_bytes(_operand_shape(i, j, shapes)) for j in range(len(i.args))
+            )
             st.traffic_bytes += out_b + operand_b
 
         base_op = i.op[:-6] if i.op.endswith("-start") else i.op

@@ -24,6 +24,15 @@ from .matching import (
     match_parallel_sfa,
     throughput_matcher,
 )
+from .multipattern import (
+    PatternBank,
+    bank_hits,
+    census_bank,
+    census_sequential,
+    distributed_bank_matcher,
+    distributed_census_fn,
+    match_bank_parallel,
+)
 from .monoid import (
     Monoid,
     affine_monoid,
@@ -35,7 +44,14 @@ from .monoid import (
     shard_reduce,
     softmax_monoid,
 )
-from .prosite import PROSITE_SAMPLES, compile_prosite, synthetic_protein, translate
+from .prosite import (
+    PROSITE_EXTRA,
+    PROSITE_SAMPLES,
+    compile_prosite,
+    load_bank,
+    synthetic_protein,
+    translate,
+)
 from .regex import AMINO_ACIDS, compile_nfa, parse
 from .sfa import (
     SFA,

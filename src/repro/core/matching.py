@@ -30,6 +30,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map as compat_shard_map
 from . import monoid as M
 from .dfa import DFA
 from .sfa import SFA
@@ -206,7 +207,7 @@ def distributed_match_fn(mesh: Mesh, table_shape: tuple, axis_name: str = "data"
 
     @functools.partial(jax.jit, static_argnames=("sub_chunks",))
     def matcher(table, symbols, sub_chunks: int = 8):
-        fn = jax.shard_map(
+        fn = compat_shard_map(
             functools.partial(local_match, sub_chunks=sub_chunks),
             mesh=mesh,
             in_specs=(P(), P(axis_name)),
@@ -232,7 +233,7 @@ def throughput_matcher(mesh: Mesh, start: int = 0, axis_name: str = "data"):
 
     @jax.jit
     def matcher(table, accepting, batch):
-        fn = jax.shard_map(
+        fn = compat_shard_map(
             local,
             mesh=mesh,
             in_specs=(P(), P(), P(axis_name)),

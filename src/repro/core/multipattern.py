@@ -1,0 +1,332 @@
+"""Multi-pattern SFA matching: batched PROSITE scans (paper §IV, one level up).
+
+The paper's evaluation workload is the PROSITE protein database — *hundreds*
+of signatures scanned over the same corpus. ``core.matching`` parallelizes a
+single DFA over input chunks (the fine-grained axis); this module adds the
+coarse-grained axis the paper's §IV task parallelism exploits: run **P
+automata at once** by stacking their transition tables into one padded
+``(P, n_max, k)`` array and vmapping the chunk matchers over the pattern
+axis as well as the chunk axis.
+
+Padding story
+-------------
+Patterns compile to DFAs of very different sizes, so tables are padded to
+the bank's ``n_max`` with **self-loop rows** (state ``j >= n_i`` maps every
+symbol back to ``j``). Self-loops keep every table entry a valid state id
+(gathers never go out of range under vmap) and make the padded states inert:
+they are unreachable from real states, and under function composition a
+padded entry ``f[q] = q`` stays the identity. Per-pattern true sizes ride
+along in ``PatternBank.n_states`` so results can be cropped when needed.
+
+Sharding story (patterns × chunks over the mesh)
+------------------------------------------------
+``distributed_bank_matcher`` lays the bank out over a 2-D mesh: the pattern
+axis shards over ``model`` (each device holds ``P/|model|`` tables — the
+paper's "each core takes a subset of the patterns" task parallelism) and the
+input shards over ``data`` exactly as single-pattern matching does. Each
+device matches its pattern shard against its chunk shard locally, then one
+fused monoid reduction (``monoid.shard_reduce`` vectorized over the local
+pattern axis — a single ``all_gather`` of ``(P_local, n)`` int vectors)
+composes the per-device chunk functions along ``data``. The result is the
+final mapping of the *whole* input for every pattern, P-sharded over
+``model`` — no pattern ever crosses a device boundary, so adding patterns
+scales out with zero extra communication volume per pattern beyond its own
+n-int mapping vector.
+
+The Pallas twin lives in ``kernels.match_scan.match_bank_chunks_pallas``:
+its grid iterates ``(pattern, chunk)`` with the chunk axis innermost, so the
+VMEM-resident transposed table is swapped once per *pattern block* and stays
+hot across every chunk of that pattern — the §III-B3 locality argument
+applied to the bank axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Iterable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map as compat_shard_map
+from . import monoid as M
+from .dfa import DFA
+from .matching import chunk_mapping_enumeration
+
+FN = M.function_monoid()
+
+
+# --------------------------------------------------------------------------
+# The bank: P automata as one padded table stack
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class PatternBank:
+    """``P`` complete DFAs over one alphabet, padded to a common state count.
+
+    ``tables[p]`` is pattern ``p``'s transition table, rows ``>= n_states[p]``
+    are self-loops; ``accepting[p]``/``starts[p]`` follow the same layout.
+    """
+
+    tables: np.ndarray     # (P, n_max, k) int32
+    accepting: np.ndarray  # (P, n_max) bool
+    starts: np.ndarray     # (P,) int32
+    n_states: np.ndarray   # (P,) int32 — true (unpadded) state counts
+    ids: tuple
+    alphabet: str
+
+    @property
+    def n_patterns(self) -> int:
+        return int(self.tables.shape[0])
+
+    @property
+    def n_max(self) -> int:
+        return int(self.tables.shape[1])
+
+    @property
+    def n_symbols(self) -> int:
+        return int(self.tables.shape[2])
+
+    def encode(self, text: str) -> np.ndarray:
+        sym = {c: i for i, c in enumerate(self.alphabet)}
+        return np.asarray([sym[c] for c in text], dtype=np.int32)
+
+    def dfa(self, p: int) -> DFA:
+        """Crop pattern ``p`` back out of the bank as a standalone DFA."""
+        n = int(self.n_states[p])
+        return DFA(
+            table=np.ascontiguousarray(self.tables[p, :n, :]),
+            start=int(self.starts[p]),
+            accepting=np.ascontiguousarray(self.accepting[p, :n]),
+            alphabet=self.alphabet,
+        )
+
+    @classmethod
+    def from_dfas(cls, dfas: Sequence[DFA], ids: Iterable[str] | None = None
+                  ) -> "PatternBank":
+        if not dfas:
+            raise ValueError("empty pattern bank")
+        alphabet = dfas[0].alphabet
+        k = dfas[0].n_symbols
+        for d in dfas:
+            if d.alphabet != alphabet or d.n_symbols != k:
+                raise ValueError("bank patterns must share one alphabet")
+        n_max = max(d.n_states for d in dfas)
+        p_count = len(dfas)
+        tables = np.empty((p_count, n_max, k), dtype=np.int32)
+        accepting = np.zeros((p_count, n_max), dtype=bool)
+        # Self-loop padding: row j -> j for every symbol (see module docstring).
+        pad_rows = np.repeat(np.arange(n_max, dtype=np.int32)[:, None], k, axis=1)
+        for p, d in enumerate(dfas):
+            tables[p] = pad_rows
+            tables[p, : d.n_states] = d.table
+            accepting[p, : d.n_states] = d.accepting
+        return cls(
+            tables=tables,
+            accepting=accepting,
+            starts=np.asarray([d.start for d in dfas], dtype=np.int32),
+            n_states=np.asarray([d.n_states for d in dfas], dtype=np.int32),
+            ids=tuple(ids) if ids is not None else tuple(
+                f"pattern_{p}" for p in range(p_count)
+            ),
+            alphabet=alphabet,
+        )
+
+    @classmethod
+    def from_patterns(cls, patterns: Mapping[str, str] | Sequence[str]
+                      ) -> "PatternBank":
+        """Compile PROSITE signatures (id -> pattern mapping, or a list)."""
+        from .prosite import compile_prosite
+
+        if isinstance(patterns, Mapping):
+            ids = tuple(patterns.keys())
+            dfas = [compile_prosite(patterns[i]) for i in ids]
+        else:
+            ids = tuple(f"pattern_{p}" for p in range(len(patterns)))
+            dfas = [compile_prosite(p) for p in patterns]
+        return cls.from_dfas(dfas, ids)
+
+    def device_arrays(self):
+        """(tables, accepting, starts) as jnp arrays, ready for the matchers."""
+        return (
+            jnp.asarray(self.tables),
+            jnp.asarray(self.accepting),
+            jnp.asarray(self.starts),
+        )
+
+
+def bucket_by_size(dfas: Sequence[DFA], ids: Iterable[str] | None = None,
+                   edges: Sequence[int] = (8, 16, 32, 64, 128, 256, 1024),
+                   ) -> list:
+    """Split patterns into size-bucketed banks to bound padding waste.
+
+    One padded stack charges every pattern ``n_max``-wide gathers; real
+    signature sets span two orders of magnitude in DFA size, so a single
+    bank makes the small patterns pay for the largest one. Bucketing by
+    state count (bucket ``i`` holds patterns with ``n <= edges[i]``) keeps
+    per-bucket padding below ~2x while preserving the batched execution
+    within each bucket. Returns the non-empty banks, smallest bucket first.
+    """
+    ids = list(ids) if ids is not None else [f"pattern_{p}" for p in range(len(dfas))]
+    buckets: dict = {}
+    for d, i in zip(dfas, ids):
+        for e in sorted(edges):
+            if d.n_states <= e:
+                buckets.setdefault(e, ([], []))
+                buckets[e][0].append(d)
+                buckets[e][1].append(i)
+                break
+        else:
+            raise ValueError(
+                f"pattern {i} has {d.n_states} states > max edge {max(edges)}"
+            )
+    return [
+        PatternBank.from_dfas(ds, bids)
+        for _, (ds, bids) in sorted(buckets.items())
+    ]
+
+
+# --------------------------------------------------------------------------
+# Batched matchers (single host): vmap over the pattern axis
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_chunks",))
+def match_bank_parallel(tables: jnp.ndarray, symbols: jnp.ndarray,
+                        n_chunks: int = 8) -> jnp.ndarray:
+    """Final mappings of one input under every pattern.
+
+    ``tables``: (P, n, k) int32; ``symbols``: (L,) with L divisible by
+    ``n_chunks`` -> (P, n) int32: row ``p`` is the transition function of the
+    whole input under pattern ``p`` (apply to ``starts[p]`` for the final
+    state). Chunk functions for all (pattern, chunk) cells compute in one
+    doubly-vmapped batch; composition is one monoid reduce over the chunk
+    axis, batched over patterns.
+    """
+    L = symbols.shape[0]
+    assert L % n_chunks == 0, "pad input to a multiple of n_chunks"
+    chunks = symbols.reshape(n_chunks, L // n_chunks)
+    mappings = jax.vmap(
+        lambda t: jax.vmap(lambda c: chunk_mapping_enumeration(t, c))(chunks)
+    )(tables)                                  # (P, n_chunks, n)
+    return M.reduce(FN, mappings, axis=1)      # (P, n)
+
+
+@functools.partial(jax.jit, static_argnames=("n_chunks",))
+def bank_hits(tables: jnp.ndarray, accepting: jnp.ndarray, starts: jnp.ndarray,
+              corpus: jnp.ndarray, n_chunks: int = 8) -> jnp.ndarray:
+    """Hit matrix of a corpus against the bank.
+
+    ``corpus``: (D, L) int32 (equal-length encoded sequences; pad/crop the
+    raw strings first) -> (P, D) bool: ``[p, d]`` iff sequence ``d`` is
+    accepted by pattern ``p``.
+    """
+    D, L = corpus.shape
+    assert L % n_chunks == 0, "pad sequences to a multiple of n_chunks"
+    chunks = corpus.reshape(D, n_chunks, L // n_chunks)
+
+    def per_pattern(table, acc, start):
+        def per_doc(doc_chunks):
+            mappings = jax.vmap(lambda c: chunk_mapping_enumeration(table, c))(
+                doc_chunks
+            )
+            mapping = M.reduce(FN, mappings, axis=0)
+            return acc[mapping[start]]
+
+        return jax.vmap(per_doc)(chunks)
+
+    return jax.vmap(per_pattern)(tables, accepting, starts)
+
+
+@functools.partial(jax.jit, static_argnames=("n_chunks",))
+def census_bank(tables: jnp.ndarray, accepting: jnp.ndarray, starts: jnp.ndarray,
+                corpus: jnp.ndarray, n_chunks: int = 8) -> jnp.ndarray:
+    """Per-pattern hit counts over a corpus: (P,) int32 — the ScanProsite
+    census (how many database sequences carry each signature)."""
+    hits = bank_hits(tables, accepting, starts, corpus, n_chunks)
+    return jnp.sum(hits, axis=1, dtype=jnp.int32)
+
+
+def census_sequential(bank: PatternBank, corpus: np.ndarray) -> np.ndarray:
+    """Reference census: plain per-pattern, per-sequence DFA loop (paper
+    Fig. 1c applied P × D times). The differential-test oracle."""
+    counts = np.zeros(bank.n_patterns, dtype=np.int32)
+    for p in range(bank.n_patterns):
+        d = bank.dfa(p)
+        for row in np.asarray(corpus):
+            counts[p] += bool(d.accepting[d.run(row)])
+    return counts
+
+
+# --------------------------------------------------------------------------
+# Distributed: patterns × chunks over the mesh
+# --------------------------------------------------------------------------
+
+
+def distributed_bank_matcher(mesh: Mesh, pattern_axis: str = "model",
+                             data_axis: str = "data"):
+    """Build a jitted matcher distributing patterns × chunks over ``mesh``.
+
+    ``tables`` (P, n, k) shards over ``pattern_axis``; ``symbols`` (L,)
+    shards over ``data_axis``. Each device computes the chunk functions of
+    its pattern shard on its data shard, then a single fused monoid
+    reduction — ``shard_reduce`` batched over the local pattern axis, i.e.
+    ONE all_gather of (P_local, n) int vectors along ``data_axis`` — yields
+    the whole-input mapping per pattern. Output: (P, n), P-sharded over
+    ``pattern_axis`` and replicated along ``data_axis``.
+
+    P must divide the ``pattern_axis`` size and L the total chunk count
+    ``|data_axis| * sub_chunks``.
+    """
+
+    def local_match(tables, sym_shard, sub_chunks: int):
+        Lc = sym_shard.shape[0]
+        chunks = sym_shard.reshape(sub_chunks, Lc // sub_chunks)
+        mappings = jax.vmap(
+            lambda t: jax.vmap(lambda c: chunk_mapping_enumeration(t, c))(chunks)
+        )(tables)                                    # (P_local, sub_chunks, n)
+        local = M.reduce(FN, mappings, axis=1)       # (P_local, n)
+        return M.shard_reduce(FN, local, data_axis)  # fused over data axis
+
+    @functools.partial(jax.jit, static_argnames=("sub_chunks",))
+    def matcher(tables, symbols, sub_chunks: int = 8):
+        fn = compat_shard_map(
+            functools.partial(local_match, sub_chunks=sub_chunks),
+            mesh=mesh,
+            in_specs=(P(pattern_axis), P(data_axis)),
+            out_specs=P(pattern_axis),
+            check_vma=False,
+        )
+        return fn(tables, symbols)
+
+    return matcher
+
+
+def distributed_census_fn(mesh: Mesh, pattern_axis: str = "model",
+                          data_axis: str = "data", n_chunks: int = 8):
+    """Distributed census: corpus rows shard over ``data_axis``, patterns
+    over ``pattern_axis``; per-device partial counts combine with one psum."""
+
+    def local(tables, accepting, starts, corpus_shard):
+        hits = bank_hits(tables, accepting, starts, corpus_shard, n_chunks)
+        counts = jnp.sum(hits, axis=1, dtype=jnp.int32)
+        return jax.lax.psum(counts, data_axis)
+
+    @jax.jit
+    def census(tables, accepting, starts, corpus):
+        fn = compat_shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(pattern_axis), P(pattern_axis), P(pattern_axis),
+                      P(data_axis)),
+            out_specs=P(pattern_axis),
+            check_vma=False,
+        )
+        return fn(tables, accepting, starts, corpus)
+
+    return census

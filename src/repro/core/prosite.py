@@ -138,6 +138,49 @@ PROSITE_SAMPLES = {
     "PS00017": "[AG]-x(4)-G-K-[ST]",                         # ATP/GTP P-loop
 }
 
+# A second tranche of small real signatures plus size-graded synthetic
+# signatures in PROSITE syntax — enough patterns for bank-sized workloads
+# (the multipattern engine wants >= 16 tables in one stack; the public
+# database has thousands, we bundle a representative spread).
+PROSITE_EXTRA = {
+    "PS00002": "S-G-x-G",                                # glycosaminoglycan
+    "PS00010": "C-x-[DN]-x(4)-[FY]-x-C-x-C",             # ASX hydroxylation
+    "PS00014": "[KRHQSA]-[DENQ]-E-L>",                   # ER targeting (KDEL)
+    "PS00342": "[STAGCN]-[RKH]-[LIVMAFY]>",              # peroxisome targeting
+    "SYN00001": "C-x(2)-C",                              # cys pair, tiny
+    "SYN00002": "H-x(3)-H",                              # his spacer
+    "SYN00003": "L-x(2)-L-x(3)-L",                       # mini zipper
+    "SYN00004": "[LIVM]-G-x-G-[ST]",                     # glycine-rich walker
+    "SYN00005": "<M-x(2)-[KR]",                          # N-terminal anchored
+    "SYN00006": "[FYW](2)-x-[DE]",                       # aromatic pair + acid
+    "SYN00007": "P-x-P-x-P",                             # polyproline comb
+    "SYN00008": "[RK](3)",                               # basic cluster
+    "SYN00009": "G-[AG]-G-x-G",                          # nucleotide fold frag
+    "SYN00010": "[ST]-P-x-[RK]",                         # proline-directed
+}
+
+
+def load_bank(ids=None, *, include_extra: bool = True):
+    """Compile bundled signatures into one :class:`~.multipattern.PatternBank`.
+
+    ``ids``: optional explicit signature ids (from ``PROSITE_SAMPLES`` /
+    ``PROSITE_EXTRA``); default is every bundled tractable signature. The
+    documented-intractable ``PROSITE_HARD`` set is never included — its
+    members exceed subset construction long before banking matters.
+    """
+    from .multipattern import PatternBank
+
+    pool = dict(PROSITE_SAMPLES)
+    if include_extra:
+        pool.update(PROSITE_EXTRA)
+    if ids is None:
+        ids = list(pool.keys())
+    missing = [i for i in ids if i not in pool]
+    if missing:
+        raise KeyError(f"unknown PROSITE ids {missing}")
+    return PatternBank.from_patterns({i: pool[i] for i in ids})
+
+
 # Patterns whose *search DFA* already explodes during subset construction
 # (wide wildcard windows -> exponentially many active-position subsets), let
 # alone the SFA. The paper reports the same wall: "a large part of the

@@ -78,3 +78,65 @@ def match_chunks_pallas(
         interpret=interpret,
     )(table_t, chunks)
     return out
+
+
+def _match_bank_kernel(table_t_ref, chunks_ref, out_ref):
+    """One (pattern, chunk) grid cell: same time loop as ``_match_kernel``
+    with the pattern's transposed table as the VMEM-resident block."""
+    table_t = table_t_ref[0].astype(jnp.float32)         # (k, n)
+    syms = chunks_ref[...]                               # (1, L) int32
+    k, n = table_t.shape
+    L = syms.shape[-1]
+
+    def step(t, v):
+        sym = syms[0, t]
+        sym_onehot = (
+            jax.lax.broadcasted_iota(jnp.int32, (1, k), 1) == sym
+        ).astype(jnp.float32)                            # (1, k)
+        cols = jax.lax.dot_general(                      # (1, n) = δ_p(., sym)
+            sym_onehot, table_t, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        v_onehot = (
+            v[:, None] == jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+        ).astype(jnp.float32)                            # (n, n)
+        nxt = jax.lax.dot_general(                       # (n, 1)
+            v_onehot, cols.T, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return nxt[:, 0].astype(jnp.int32)
+
+    v0 = jax.lax.iota(jnp.int32, n)
+    out_ref[...] = jax.lax.fori_loop(0, L, step, v0)[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def match_bank_chunks_pallas(
+    tables: jnp.ndarray,
+    chunks: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Multi-automaton chunk matching: every (pattern, chunk) cell at once.
+
+    ``tables``: (P, n, k) int32 padded bank stack; ``chunks``: (B, L) int32
+    -> (P, B, n) chunk mappings. The grid is ``(pattern, chunk)`` with the
+    chunk axis innermost, so the VMEM-resident transposed table block is
+    swapped once per *pattern* and stays hot across all B chunks of that
+    pattern — the §III-B3 table-locality argument applied to the bank axis.
+    """
+    Pn, n, k = tables.shape
+    B, L = chunks.shape
+    tables_t = jnp.swapaxes(tables, 1, 2)  # (P, k, n) symbol-major per pattern
+    out = pl.pallas_call(
+        _match_bank_kernel,
+        grid=(Pn, B),
+        in_specs=[
+            pl.BlockSpec((1, k, n), lambda p, b: (p, 0, 0)),
+            pl.BlockSpec((1, L), lambda p, b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, n), lambda p, b: (p, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((Pn, B, n), jnp.int32),
+        interpret=interpret,
+    )(tables_t, chunks)
+    return out

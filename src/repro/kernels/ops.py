@@ -15,7 +15,7 @@ from repro.core.fingerprint import BarrettConstants, fold_weights_u32
 
 from .clmul import consts_limbs_of, fingerprint_pallas
 from .compose import compose_pallas
-from .match_scan import match_chunks_pallas
+from .match_scan import match_bank_chunks_pallas, match_chunks_pallas
 
 
 def _default_interpret() -> bool:
@@ -61,3 +61,15 @@ def match_chunks(
     if interpret is None:
         interpret = _default_interpret()
     return match_chunks_pallas(table, chunks, interpret=interpret)
+
+
+def match_bank_chunks(
+    tables: jnp.ndarray,
+    chunks: jnp.ndarray,
+    *,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Multi-automaton chunk functions: (P, n, k), (B, L) -> (P, B, n)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return match_bank_chunks_pallas(tables, chunks, interpret=interpret)

@@ -8,17 +8,14 @@ tests must keep seeing one device.
 
 from __future__ import annotations
 
-import jax
-
+from repro.compat import make_mesh
 from repro.config import MeshConfig, MULTI_POD, SINGLE_POD
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
@@ -27,7 +24,4 @@ def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many devices the host actually has (tests)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((data, model), ("data", "model"))

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map as compat_shard_map
 from repro.config import ModelConfig
 from repro.sharding.rules import Rules, constrain
 
@@ -122,7 +123,7 @@ def moe_layer(
     data_axes = tuple(a for a in data_axes if a in mesh.axis_names)
     model_in = model_axis if model_axis in mesh.axis_names else None
 
-    fn = jax.shard_map(
+    fn = compat_shard_map(
         functools.partial(
             _local_wrapper, cfg=cfg, model_axis=model_in, all_axes=mesh.axis_names
         ),

@@ -1,0 +1,113 @@
+"""Property-testing shim: real ``hypothesis`` when installed, a seeded-random
+fallback otherwise.
+
+The test suite's property tests (`test_monoid`, `test_matching`, ...) are
+written against the hypothesis API (``@given``/``@settings``/``st.*``).
+Hypothesis is a great shrinker but it is an *optional* dev dependency
+(see requirements-dev.txt); the offline CI container doesn't carry it, and a
+missing import must not take six test modules down with it. So test modules
+import ``given, settings, st`` from here:
+
+* with hypothesis installed, these are hypothesis' own objects — full
+  shrinking, example databases, the works;
+* without it, ``@given`` runs the test body over deterministic seeded-random
+  examples (seed derived from the test name + example index, so failures
+  reproduce across runs and machines) for the strategies the suite actually
+  uses: ``integers``, ``sampled_from``, ``lists``, ``text``, ``booleans``.
+
+The fallback deliberately does NOT shrink — it exists to keep the properties
+exercised offline, not to replace hypothesis.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random as _random
+
+    _DEFAULT_EXAMPLES = 20
+    _MAX_FALLBACK_EXAMPLES = 50  # cap: no shrinker, so bulk examples buy little
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: _random.Random):
+            return self._draw(rng)
+
+    class _StModule:
+        """The subset of ``hypothesis.strategies`` this suite uses."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 32):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                size = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(size)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def text(alphabet="abcdefghijklmnopqrstuvwxyz", min_size=0, max_size=20):
+            chars = list(alphabet)
+
+            def draw(rng):
+                size = rng.randint(min_size, max_size)
+                return "".join(rng.choice(chars) for _ in range(size))
+
+            return _Strategy(draw)
+
+    st = _StModule()
+
+    def given(**strategies):
+        def decorate(fn):
+            def wrapper():
+                n = min(
+                    getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES),
+                    _MAX_FALLBACK_EXAMPLES,
+                )
+                for i in range(n):
+                    rng = _random.Random(f"{fn.__module__}.{fn.__name__}:{i}")
+                    kwargs = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(**kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example ({i + 1}/{n}): "
+                            f"{fn.__name__}(**{kwargs!r})"
+                        ) from e
+
+            # Copy identity by hand: functools.wraps would set __wrapped__,
+            # and pytest would then see the original signature and demand
+            # fixtures named after the strategy kwargs.
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return decorate
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return decorate

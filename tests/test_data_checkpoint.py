@@ -126,7 +126,9 @@ def test_atomicity_no_partial_checkpoints(tmp_path):
 
 
 def test_restore_with_shardings_resharding(tmp_path):
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     mgr = CheckpointManager(tmp_path, async_save=False)

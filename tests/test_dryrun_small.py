@@ -25,6 +25,7 @@ SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.compat import make_mesh
     from repro.config import ShapeConfig, RunConfig, OptimizerConfig, MeshConfig, reduced
     from repro.configs import get_config
     from repro.models import base as mbase
@@ -34,8 +35,7 @@ SCRIPT = textwrap.dedent("""
     from repro.analysis.hlo import analyze_module
 
     arch = sys.argv[1]
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     extra = {}
     if arch == "mamba2_370m":   # keep ssm dims consistent: H*P == 2*d_model
         extra = dict(ssm_heads=4, ssm_head_dim=32, ssm_state=16)

@@ -3,8 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _strategies import given, settings, st
 
+from repro.compat import make_mesh
 from repro.core import matching as mt
 from repro.core.dfa import example_fa, random_dfa
 from repro.core.prosite import compile_prosite, synthetic_protein
@@ -12,7 +13,7 @@ from repro.core.sfa import construct_sfa
 
 
 def _mesh1():
-    return jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((1,), ("data",))
 
 
 @settings(max_examples=15, deadline=None)

@@ -1,0 +1,195 @@
+"""Multi-pattern bank matching == per-pattern sequential matching.
+
+Differential tests: every batched/banked/distributed path must agree exactly
+with the plain per-pattern DFA loop, including banks that mix very different
+pattern sizes (padded-table edge cases)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _strategies import given, settings, st
+
+from repro.compat import make_mesh
+from repro.core import multipattern as mp
+from repro.core.dfa import random_dfa
+from repro.core.matching import chunk_mapping_enumeration
+from repro.core.prosite import load_bank, synthetic_protein
+from repro.kernels import ops
+
+
+def _random_bank(seed: int, sizes=(2, 5, 11, 3, 7), k: int = 6):
+    dfas = [random_dfa(n, k, seed=seed * 31 + i) for i, n in enumerate(sizes)]
+    return mp.PatternBank.from_dfas(dfas)
+
+
+# --------------------------------------------------------------------------
+# PatternBank construction / padding
+# --------------------------------------------------------------------------
+
+
+def test_bank_pads_with_self_loops():
+    bank = _random_bank(0, sizes=(2, 9))
+    assert bank.n_max == 9
+    # pattern 0 padded: rows 2..8 must be self-loops on every symbol
+    for j in range(2, 9):
+        assert (bank.tables[0, j] == j).all()
+    assert not bank.accepting[0, 2:].any()
+
+
+def test_bank_dfa_roundtrip():
+    bank = _random_bank(1, sizes=(4, 8, 3))
+    for p, n in enumerate((4, 8, 3)):
+        d = bank.dfa(p)
+        assert d.n_states == n
+        orig = random_dfa(n, 6, seed=1 * 31 + p)
+        assert np.array_equal(d.table, orig.table)
+        assert np.array_equal(d.accepting, orig.accepting)
+
+
+def test_bank_rejects_mixed_alphabets():
+    a = random_dfa(3, 4, seed=0)
+    b = random_dfa(3, 5, seed=0)
+    with pytest.raises(ValueError):
+        mp.PatternBank.from_dfas([a, b])
+    with pytest.raises(ValueError):
+        mp.PatternBank.from_dfas([])
+
+
+# --------------------------------------------------------------------------
+# match_bank_parallel / census_bank vs the sequential per-pattern loop
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=500),
+       n_chunks=st.sampled_from([1, 2, 4, 8]))
+def test_match_bank_equals_sequential_random(seed, n_chunks):
+    bank = _random_bank(seed)
+    tables, _, _ = bank.device_arrays()
+    rng = np.random.default_rng(seed)
+    syms = rng.integers(0, bank.n_symbols, size=64).astype(np.int32)
+    maps = mp.match_bank_parallel(tables, jnp.asarray(syms), n_chunks)
+    for p in range(bank.n_patterns):
+        d = bank.dfa(p)
+        assert int(maps[p, d.start]) == d.run(syms), (p, bank.ids[p])
+
+
+def test_match_bank_padded_entries_stay_identity():
+    """Mapping rows beyond a pattern's true size must be identity (the
+    self-loop padding invariant composition relies on)."""
+    bank = _random_bank(7, sizes=(3, 12))
+    tables, _, _ = bank.device_arrays()
+    rng = np.random.default_rng(7)
+    syms = rng.integers(0, bank.n_symbols, size=48).astype(np.int32)
+    maps = np.asarray(mp.match_bank_parallel(tables, jnp.asarray(syms), 4))
+    n0 = int(bank.n_states[0])
+    assert np.array_equal(maps[0, n0:], np.arange(n0, bank.n_max))
+
+
+def test_census_bank_matches_sequential_on_prosite():
+    """>= 16 real PROSITE signatures in one bank, exact census agreement."""
+    bank = load_bank()
+    assert bank.n_patterns >= 16
+    tables, accepting, starts = bank.device_arrays()
+    corpus = np.stack(
+        [bank.encode(synthetic_protein(96, seed=i)) for i in range(12)]
+    )
+    counts = mp.census_bank(tables, accepting, starts, jnp.asarray(corpus), 8)
+    ref = mp.census_sequential(bank, corpus)
+    assert np.array_equal(np.asarray(counts), ref)
+
+
+def test_bank_hits_shape_and_dtype():
+    bank = _random_bank(3)
+    tables, accepting, starts = bank.device_arrays()
+    corpus = jnp.asarray(
+        np.random.default_rng(3).integers(0, bank.n_symbols, size=(5, 32)),
+        dtype=jnp.int32,
+    )
+    hits = mp.bank_hits(tables, accepting, starts, corpus, 4)
+    assert hits.shape == (bank.n_patterns, 5)
+    assert hits.dtype == jnp.bool_
+
+
+# --------------------------------------------------------------------------
+# Size-bucketed banks
+# --------------------------------------------------------------------------
+
+
+def test_bucket_by_size_partitions_and_agrees():
+    sizes = (2, 3, 30, 9, 17, 5)
+    dfas = [random_dfa(n, 6, seed=100 + i) for i, n in enumerate(sizes)]
+    ids = [f"p{i}" for i in range(len(dfas))]
+    buckets = mp.bucket_by_size(dfas, ids, edges=(8, 32))
+    assert sorted(i for b in buckets for i in b.ids) == sorted(ids)
+    assert all(b.n_max <= e for b, e in zip(buckets, (8, 32)))
+
+    corpus = np.random.default_rng(9).integers(0, 6, size=(6, 40)).astype(np.int32)
+    whole = mp.PatternBank.from_dfas(dfas, ids)
+    ref = dict(zip(whole.ids, mp.census_sequential(whole, corpus)))
+    for b in buckets:
+        t, a, s = b.device_arrays()
+        counts = np.asarray(mp.census_bank(t, a, s, jnp.asarray(corpus), 4))
+        for i, pid in enumerate(b.ids):
+            assert counts[i] == ref[pid], pid
+
+
+def test_bucket_by_size_rejects_oversized():
+    with pytest.raises(ValueError):
+        mp.bucket_by_size([random_dfa(50, 4, seed=0)], edges=(8, 16))
+
+
+# --------------------------------------------------------------------------
+# Pallas multi-automaton kernel vs the vmapped oracle
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sizes,k,B,L", [
+    ((3, 5), 4, 2, 6),
+    ((2, 11, 7), 6, 3, 8),
+    ((4, 4, 4, 4), 5, 1, 12),
+])
+def test_match_bank_kernel_matches_oracle(sizes, k, B, L):
+    bank = _random_bank(42, sizes=sizes, k=k)
+    tables, _, _ = bank.device_arrays()
+    chunks = jnp.asarray(
+        np.random.default_rng(42).integers(0, k, size=(B, L)), dtype=jnp.int32
+    )
+    got = ops.match_bank_chunks(tables, chunks, interpret=True)
+    want = jax.vmap(
+        lambda t: jax.vmap(lambda c: chunk_mapping_enumeration(t, c))(chunks)
+    )(tables)
+    assert got.shape == (bank.n_patterns, B, bank.n_max)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# Distributed (patterns x chunks over the mesh; 1-device degenerate mesh)
+# --------------------------------------------------------------------------
+
+
+def test_distributed_bank_matcher_single_device():
+    bank = _random_bank(11, sizes=(3, 6, 9, 4))
+    tables, _, _ = bank.device_arrays()
+    rng = np.random.default_rng(11)
+    syms = jnp.asarray(rng.integers(0, bank.n_symbols, size=128).astype(np.int32))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    matcher = mp.distributed_bank_matcher(mesh)
+    got = matcher(tables, syms, sub_chunks=8)
+    want = mp.match_bank_parallel(tables, syms, 8)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_distributed_census_single_device():
+    bank = _random_bank(13)
+    tables, accepting, starts = bank.device_arrays()
+    corpus = jnp.asarray(
+        np.random.default_rng(13).integers(0, bank.n_symbols, size=(4, 32)),
+        dtype=jnp.int32,
+    )
+    mesh = make_mesh((1, 1), ("data", "model"))
+    census = mp.distributed_census_fn(mesh, n_chunks=4)
+    got = census(tables, accepting, starts, corpus)
+    want = mp.census_bank(tables, accepting, starts, corpus, 4)
+    assert np.array_equal(np.asarray(got), np.asarray(want))

@@ -4,7 +4,7 @@ import re as pyre
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _strategies import given, settings, st
 
 from repro.core.dfa import compile_dfa, example_fa, minimize, random_dfa, subset_construct
 from repro.core.prosite import PROSITE_SAMPLES, PrositeSyntaxError, compile_prosite, translate

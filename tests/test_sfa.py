@@ -3,7 +3,7 @@ Fig. 4 ablation toggles, and the simultaneity semantics."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _strategies import given, settings, st
 
 from repro.core.dfa import example_fa, random_dfa
 from repro.core.prosite import compile_prosite, synthetic_protein
