@@ -1,0 +1,21 @@
+"""Shared benchmark configuration.
+
+``SMOKE`` is flipped by ``benchmarks/run.py --smoke`` (the CI smoke job):
+suites then pick their scaled-down problem sizes via :func:`scaled`, so the
+bench scripts stay import-clean and runnable end-to-end in minutes without
+silently rotting between releases.
+"""
+
+from __future__ import annotations
+
+SMOKE = False
+
+
+def set_smoke(on: bool = True) -> None:
+    global SMOKE
+    SMOKE = on
+
+
+def scaled(full, smoke):
+    """Pick the full-size or smoke-size value for the active run."""
+    return smoke if SMOKE else full

@@ -6,23 +6,28 @@ from __future__ import annotations
 
 import time
 
+from benchmarks import _config
 from repro.core.dfa import random_dfa
 from repro.core.prosite import PROSITE_HARD, PROSITE_SAMPLES, compile_prosite
 from repro.core.sfa import StateBlowup, construct_sfa
 
 
 def run(emit) -> None:
-    for pid, pat in sorted(PROSITE_SAMPLES.items()):
+    items = sorted(PROSITE_SAMPLES.items())
+    items = _config.scaled(items, items[:4])
+    max_states = _config.scaled(300_000, 20_000)
+    for pid, pat in items:
         dfa = compile_prosite(pat)
         t0 = time.perf_counter()
         try:
-            sfa = construct_sfa(dfa, max_states=300_000)
+            sfa = construct_sfa(dfa, max_states=max_states)
             t = time.perf_counter() - t0
             emit(f"census/{pid}", t * 1e6,
                  f"dfa={dfa.n_states},sfa={sfa.n_states},growth={sfa.n_states / dfa.n_states:.1f}x")
         except StateBlowup:
             t = time.perf_counter() - t0
-            emit(f"census/{pid}", t * 1e6, f"dfa={dfa.n_states},sfa=BLOWUP(>300k)")
+            emit(f"census/{pid}", t * 1e6,
+                 f"dfa={dfa.n_states},sfa=BLOWUP(>{max_states})")
     for pid in sorted(PROSITE_HARD):
         # exponential subset construction — the paper hit the same wall (§I)
         emit(f"census/{pid}", 0.0, "intractable_search_DFA_documented")
@@ -30,13 +35,14 @@ def run(emit) -> None:
 
 def run_synthetic_ladder(emit) -> None:
     """Random-DFA ladder — the exponential-growth regime the paper fights."""
-    for n in [4, 6, 8, 10]:
+    max_states = _config.scaled(300_000, 20_000)
+    for n in _config.scaled([4, 6, 8, 10], [4, 6]):
         dfa = random_dfa(n, 8, seed=n)
         t0 = time.perf_counter()
         try:
-            sfa = construct_sfa(dfa, max_states=300_000)
+            sfa = construct_sfa(dfa, max_states=max_states)
             t = time.perf_counter() - t0
             emit(f"census/random_n{n}", t * 1e6, f"sfa={sfa.n_states}")
         except StateBlowup:
             t = time.perf_counter() - t0
-            emit(f"census/random_n{n}", t * 1e6, "sfa=BLOWUP(>300k)")
+            emit(f"census/random_n{n}", t * 1e6, f"sfa=BLOWUP(>{max_states})")

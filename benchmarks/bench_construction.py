@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import time
 
+from benchmarks import _config
 from repro.core.dfa import DFA, compile_dfa
 from repro.core.prosite import PROSITE_SAMPLES, compile_prosite
 from repro.core.sfa import construct_sfa_sequential
@@ -19,6 +20,7 @@ from repro.core.sfa import construct_sfa_sequential
 # PS00008 (515 states) and PS00017 (1122) are the demonstrative tail.
 BENCH_PATTERNS = ["PS00016", "PS00005", "PS00004", "PS00006", "PS00009",
                   "PS00001", "PS00008", "PS00017"]
+SMOKE_PATTERNS = ["PS00016", "PS00005"]
 
 
 def _time(fn, repeat: int = 1) -> float:
@@ -31,7 +33,7 @@ def _time(fn, repeat: int = 1) -> float:
 
 
 def run(emit) -> None:
-    for pid in BENCH_PATTERNS:
+    for pid in _config.scaled(BENCH_PATTERNS, SMOKE_PATTERNS):
         dfa = compile_prosite(PROSITE_SAMPLES[pid])
         s_hash = construct_sfa_sequential(dfa, use_fingerprints=True, use_hashing=True)
         n_sfa = s_hash.n_states

@@ -15,6 +15,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import _config
 from repro.core.fingerprint import (
     BarrettConstants,
     fingerprint_int,
@@ -27,11 +28,11 @@ CONSTS = BarrettConstants.create()
 
 def run(emit) -> None:
     rng = np.random.default_rng(0)
-    B, n = 4096, 64
+    B, n = _config.scaled(4096, 256), 64
     states = rng.integers(0, 1 << 16, size=(B, n)).astype(np.int32)
 
     # pure-python reference (scaled down 64x)
-    sub = states[: B // 64]
+    sub = states[: max(B // 64, 1)]
     packed = (sub.astype(np.uint32)[:, 0::2] & 0xFFFF) | (
         (sub.astype(np.uint32)[:, 1::2] & 0xFFFF) << 16
     )

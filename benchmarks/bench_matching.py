@@ -1,82 +1,105 @@
-"""Paper Fig. 6: SFA matching throughput and scaling with parallelism.
+"""Paper Fig. 6: SFA matching throughput and scaling with parallelism,
+measured through the ``Scanner`` engine API.
 
 The paper matches a 10^10-char input across pthreads; here the same chunked
 algorithm runs data-parallel under jit, sweeping the chunk count (the
-paper's thread count) on a CPU-sized input. Both matching modes are timed:
-SFA-table walks (the paper's) and enumeration (related-work baseline that
-needs no SFA), plus the sequential python baseline.
+paper's thread count) on a CPU-sized input. Both matching modes are timed —
+SFA-table walks (the paper's, ``ScanPlan(mode="sfa")``) and enumeration
+(related-work baseline that needs no SFA) — plus the sequential python
+baseline, all through one compiled ``Scanner`` per plan.
 """
 
 from __future__ import annotations
 
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import matching as mt
-from repro.core.dfa import example_fa
+from benchmarks import _config
 from repro.core.prosite import PROSITE_SAMPLES, compile_prosite
-from repro.core.sfa import construct_sfa
-
-LENGTH = 2_000_000
+from repro.engine import ChunkPolicy, ScanPlan, Scanner
 
 
 def run(emit) -> None:
+    length = _config.scaled(2_000_000, 64_000)
     dfa = compile_prosite(PROSITE_SAMPLES["PS00016"])
-    sfa = construct_sfa(dfa)
     rng = np.random.default_rng(0)
-    syms = jnp.asarray(rng.integers(0, dfa.n_symbols, size=LENGTH).astype(np.int32))
-    table = jnp.asarray(dfa.table)
-    delta = jnp.asarray(sfa.delta)
-    mappings = jnp.asarray(sfa.mappings)
+    syms = rng.integers(0, dfa.n_symbols, size=length).astype(np.int32)
 
     # sequential python baseline (scaled down, extrapolated linearly)
-    scale = 50
-    sub = np.asarray(syms[: LENGTH // scale])
+    scale = _config.scaled(50, 8)
+    sub = syms[: length // scale]
     t0 = time.perf_counter()
     dfa.run(sub)
     t_seq = (time.perf_counter() - t0) * scale
-    emit("fig6/sequential_python_s", t_seq * 1e6, f"len={LENGTH},extrapolated_{scale}x")
+    emit("fig6/sequential_python_s", t_seq * 1e6,
+         f"len={length},extrapolated_{scale}x")
 
-    want = dfa.run(np.asarray(syms))
-    for n_chunks in [1, 2, 4, 8, 16, 32, 64]:
-        fn = lambda: mt.match_parallel_sfa(delta, mappings, syms, n_chunks)
-        fn()  # compile
+    want = dfa.run(syms)
+    chunk_sweep = _config.scaled([1, 2, 4, 8, 16, 32, 64], [1, 8, 64])
+    for n_chunks in chunk_sweep:
+        sc = Scanner.compile(
+            dfa, ScanPlan(mode="sfa", sfa_state_budget=100_000,
+                          chunking=ChunkPolicy(n_chunks=n_chunks)))
+        sc.mapping(syms)  # compile
         t0 = time.perf_counter()
-        out = fn()
-        out.block_until_ready()
+        out = sc.mapping(syms)
         t = time.perf_counter() - t0
-        assert int(out[dfa.start]) == want
+        assert int(out[0, dfa.start]) == want
         emit(f"fig6/sfa_match_chunks{n_chunks}", t * 1e6,
-             f"{t_seq / t:.1f}x_vs_seq,throughput={LENGTH / t / 1e6:.1f}Mchar_s")
+             f"{t_seq / t:.1f}x_vs_seq,throughput={length / t / 1e6:.1f}Mchar_s")
 
     for n_chunks in [8, 64]:
-        fn = lambda: mt.match_parallel_enumeration(table, syms, n_chunks)
-        fn()
+        sc = Scanner.compile(
+            dfa, ScanPlan(mode="enumeration",
+                          chunking=ChunkPolicy(n_chunks=n_chunks)))
+        sc.mapping(syms)
         t0 = time.perf_counter()
-        out = fn()
-        out.block_until_ready()
+        out = sc.mapping(syms)
         t = time.perf_counter() - t0
-        assert int(out[dfa.start]) == want
+        assert int(out[0, dfa.start]) == want
         emit(f"fig6/enumeration_match_chunks{n_chunks}", t * 1e6,
-             f"n_states_wide_gathers,throughput={LENGTH / t / 1e6:.1f}Mchar_s")
+             f"n_states_wide_gathers,throughput={length / t / 1e6:.1f}Mchar_s")
+
+    # streaming path: same input fed as bounded-memory blocks through the
+    # engine's fixed-shape inner loop (the larger-than-memory story, timed)
+    n_chunks = 16
+    block_len = _config.scaled(4096, 512)
+    sc = Scanner.compile(
+        dfa, ScanPlan(mode="sfa", sfa_state_budget=100_000,
+                      chunking=ChunkPolicy(n_chunks=n_chunks,
+                                           block_len=block_len)))
+    piece = n_chunks * block_len
+    # crop to whole blocks: a ragged tail would be composed in a Python
+    # per-symbol loop and dominate the timing of the block path
+    stream_len = (length // piece) * piece
+    head = syms[:stream_len]
+    sc.stream(syms[i: i + piece] for i in range(0, piece, piece))  # compile
+    sc.mapping(head)  # compile the batch twin used as the oracle below
+    t0 = time.perf_counter()
+    res = sc.stream(head[i: i + piece] for i in range(0, stream_len, piece))
+    t = time.perf_counter() - t0
+    assert int(res.final_states[0]) == int(sc.mapping(head)[0, dfa.start])
+    emit("fig6/sfa_stream_s", t * 1e6,
+         f"block={n_chunks}x{block_len},len={stream_len},"
+         f"throughput={stream_len / t / 1e6:.1f}Mchar_s")
 
 
 def run_sfa_size_ladder(emit) -> None:
     """Fig. 6's size dimension: matching cost vs SFA size (table locality)."""
     rng = np.random.default_rng(1)
-    syms_small = jnp.asarray(rng.integers(0, 20, size=200_000).astype(np.int32))
-    for pid in ["PS00016", "PS00017", "PS00008"]:
-        dfa = compile_prosite(PROSITE_SAMPLES[pid])
-        sfa = construct_sfa(dfa, max_states=500_000)
-        delta = jnp.asarray(sfa.delta)
-        mappings = jnp.asarray(sfa.mappings)
-        fn = lambda: mt.match_parallel_sfa(delta, mappings, syms_small, 16)
-        fn()
+    length = _config.scaled(200_000, 20_000)
+    syms_small = rng.integers(0, 20, size=length).astype(np.int32)
+    for pid in _config.scaled(["PS00016", "PS00017", "PS00008"], ["PS00016"]):
+        sc = Scanner.compile(
+            pid, ScanPlan(mode="sfa", sfa_state_budget=500_000,
+                          chunking=ChunkPolicy(n_chunks=16)))
+        g = sc.groups[0]
+        sc.mapping(syms_small)  # compile
         t0 = time.perf_counter()
-        fn().block_until_ready()
+        sc.mapping(syms_small)
         t = time.perf_counter() - t0
-        table_mb = sfa.delta.nbytes / 1e6
+        sfa_states = int(g.deltas.shape[1])
+        table_mb = g.deltas.size * 4 / 1e6
         emit(f"fig6b/{pid}/sfa_match_s", t * 1e6,
-             f"sfa_states={sfa.n_states},table={table_mb:.1f}MB")
+             f"sfa_states={sfa_states},table={table_mb:.1f}MB")

@@ -1,5 +1,6 @@
 """Multi-pattern bank matching: patterns/sec of the batched engine vs the
-sequential per-pattern loop (paper §IV task parallelism, measured).
+sequential per-pattern loop (paper §IV task parallelism, measured), plus the
+auto-vs-forced-mode comparison of the ``Scanner`` engine.
 
 For bank sizes {4, 16, 64} (banks above the bundled signature count are
 padded out with size-graded random DFAs) the benchmark scans one corpus and
@@ -7,35 +8,41 @@ reports, per bank size:
 
   * ``seq_loop``  — python loop over patterns, each matched with the jitted
     single-pattern chunk matcher (the pre-bank status quo);
-  * ``bank``      — one ``census_bank`` call (all patterns in one padded
+  * ``bank``      — one ``Scanner.census`` call (all patterns in one padded
     stack — pays n_max-wide gathers for every pattern);
-  * ``bucketed``  — ``census_bank`` per size bucket (``bucket_by_size``),
-    bounding padding waste to ~2x per bucket;
+  * ``bucketed``  — the same plan with size-bucketing on, bounding padding
+    waste to ~2x per bucket;
   * patterns/sec for each, and the resulting speedups.
+
+``run_engine_modes`` measures the SFA-bank vs enumeration-bank crossover on
+the bundled PROSITE bank (auto / forced-sfa / forced-enumeration plans) and
+writes the comparison to ``BENCH_engine.json``.
 """
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import _config
 from repro.core import matching as mt
 from repro.core import monoid as M
-from repro.core import multipattern as mp
 from repro.core.dfa import random_dfa
-from repro.core.prosite import PROSITE_EXTRA, PROSITE_SAMPLES, compile_prosite, synthetic_protein
+from repro.core.prosite import PROSITE_EXTRA, PROSITE_SAMPLES, compile_prosite, load_bank
+from repro.engine import ChunkPolicy, ScanPlan, Scanner
 
-BANK_SIZES = (4, 16, 64)
 CORPUS_DOCS = 32
 DOC_LEN = 1024
 N_CHUNKS = 8
 FN = M.function_monoid()
 
 
-def _build_bank(size: int) -> mp.PatternBank:
+def _build_dfas(size: int):
     pool = {**PROSITE_SAMPLES, **PROSITE_EXTRA}
     ids = sorted(pool.keys())[:size]
     dfas = [compile_prosite(pool[i]) for i in ids]
@@ -45,7 +52,7 @@ def _build_bank(size: int) -> mp.PatternBank:
         i = len(dfas)
         dfas.append(random_dfa(4 + (i % 21), 20, seed=i))
         ids.append(f"RND{i:05d}")
-    return mp.PatternBank.from_dfas(dfas[:size], ids[:size])
+    return dfas[:size], ids[:size]
 
 
 @jax.jit
@@ -62,21 +69,26 @@ def _single_census(table, acc, start, corpus_chunks):
 
 def run(emit) -> None:
     rng = np.random.default_rng(0)
-    corpus = rng.integers(0, 20, size=(CORPUS_DOCS, DOC_LEN)).astype(np.int32)
-    corpus_j = jnp.asarray(corpus)
-    corpus_chunks = corpus_j.reshape(CORPUS_DOCS, N_CHUNKS, DOC_LEN // N_CHUNKS)
+    corpus_docs = _config.scaled(CORPUS_DOCS, 8)
+    doc_len = _config.scaled(DOC_LEN, 256)
+    corpus = rng.integers(0, 20, size=(corpus_docs, doc_len)).astype(np.int32)
+    corpus_chunks = jnp.asarray(corpus).reshape(
+        corpus_docs, N_CHUNKS, doc_len // N_CHUNKS
+    )
 
-    for size in BANK_SIZES:
-        bank = _build_bank(size)
-        tables, accepting, starts = bank.device_arrays()
+    for size in _config.scaled((4, 16, 64), (4, 16)):
+        dfas, ids = _build_dfas(size)
+        plan = ScanPlan(mode="enumeration",
+                        chunking=ChunkPolicy(n_chunks=N_CHUNKS))
+        sc = Scanner.compile(dict(zip(ids, dfas)), plan)
 
         # -- sequential per-pattern loop (tables unbatched, same chunking) --
-        per_tbl = [jnp.asarray(bank.dfa(p).table) for p in range(size)]
-        per_acc = [jnp.asarray(bank.dfa(p).accepting) for p in range(size)]
+        per_tbl = [jnp.asarray(d.table) for d in dfas]
+        per_acc = [jnp.asarray(d.accepting) for d in dfas]
 
         def seq_loop():
             return [
-                _single_census(per_tbl[p], per_acc[p], int(bank.starts[p]),
+                _single_census(per_tbl[p], per_acc[p], dfas[p].start,
                                corpus_chunks)
                 for p in range(size)
             ]
@@ -90,48 +102,78 @@ def run(emit) -> None:
         t_seq = time.perf_counter() - t0
         ref = np.asarray([int(x) for x in seq_res])
 
-        # -- batched bank census -------------------------------------------
-        mp.census_bank(tables, accepting, starts, corpus_j,
-                       N_CHUNKS).block_until_ready()
+        # -- batched bank census through the engine -------------------------
+        sc.census(corpus)  # warmup/compile
         t0 = time.perf_counter()
-        counts = mp.census_bank(tables, accepting, starts, corpus_j, N_CHUNKS)
-        counts.block_until_ready()
+        counts = sc.census(corpus)
         t_bank = time.perf_counter() - t0
+        exact = np.array_equal(counts, ref)
 
-        exact = np.array_equal(np.asarray(counts), ref)
-
-        # -- size-bucketed banks (padding waste bounded per bucket) --------
-        dfas = [bank.dfa(p) for p in range(size)]
-        buckets = mp.bucket_by_size(dfas, bank.ids)
-        bucket_args = [b.device_arrays() for b in buckets]
-
-        def bucketed():
-            return [
-                mp.census_bank(t, a, s, corpus_j, N_CHUNKS)
-                for (t, a, s) in bucket_args
-            ]
-
-        for x in bucketed():
-            x.block_until_ready()
+        # -- size-bucketed plan (padding waste bounded per bucket) ----------
+        sc_bkt = Scanner.compile(dfas, plan.with_(
+            chunking=ChunkPolicy(n_chunks=N_CHUNKS, bucket=True)))
+        sc_bkt.census(corpus)
         t0 = time.perf_counter()
-        bkt_res = bucketed()
-        for x in bkt_res:
-            x.block_until_ready()
+        bkt_counts = sc_bkt.census(corpus)
         t_bkt = time.perf_counter() - t0
-        bkt_counts = dict(zip(
-            (i for b in buckets for i in b.ids),
-            (int(c) for x in bkt_res for c in np.asarray(x)),
-        ))
-        exact_bkt = all(bkt_counts[bank.ids[p]] == ref[p] for p in range(size))
+        exact_bkt = np.array_equal(bkt_counts, ref)
 
+        n_max = max(d.n_states for d in dfas)
         emit(f"multipattern/seq_loop_P{size}", t_seq * 1e6,
              f"patterns_per_s={size / t_seq:.1f}")
         emit(f"multipattern/bank_P{size}", t_bank * 1e6,
              f"patterns_per_s={size / t_bank:.1f},speedup={t_seq / t_bank:.2f}x,"
-             f"exact_match={exact},n_max={bank.n_max}")
+             f"exact_match={exact},n_max={n_max}")
         emit(f"multipattern/bucketed_P{size}", t_bkt * 1e6,
              f"patterns_per_s={size / t_bkt:.1f},speedup={t_seq / t_bkt:.2f}x,"
-             f"exact_match={exact_bkt},buckets={len(buckets)}")
+             f"exact_match={exact_bkt},buckets={len(sc_bkt.groups)}")
+
+
+def run_engine_modes(emit) -> None:
+    """Auto vs forced modes on the bundled bank: where is the SFA-bank vs
+    enumeration-bank crossover, and what does auto actually pick?"""
+    rng = np.random.default_rng(1)
+    corpus_docs = _config.scaled(32, 8)
+    doc_len = _config.scaled(1024, 256)
+    bank = load_bank()
+    corpus = rng.integers(0, 20, size=(corpus_docs, doc_len)).astype(np.int32)
+
+    report: dict = {
+        "bank": {"patterns": bank.n_patterns, "n_max": bank.n_max},
+        "corpus": {"docs": corpus_docs, "doc_len": doc_len},
+        "modes": {},
+    }
+    ref = None
+    for mode in ("auto", "sfa", "enumeration"):
+        budget = 200_000 if mode == "sfa" else ScanPlan().sfa_state_budget
+        t0 = time.perf_counter()
+        sc = Scanner.compile(bank, ScanPlan(
+            mode=mode, sfa_state_budget=budget,
+            chunking=ChunkPolicy(n_chunks=N_CHUNKS)))
+        t_compile = time.perf_counter() - t0
+        sc.census(corpus)  # warmup
+        t0 = time.perf_counter()
+        counts = sc.census(corpus)
+        t_scan = time.perf_counter() - t0
+        if ref is None:
+            ref = counts
+        n_sfa = sum(1 for m in sc.pattern_modes.values() if m == "sfa")
+        chars = corpus_docs * doc_len * bank.n_patterns
+        emit(f"engine/census_{mode}", t_scan * 1e6,
+             f"sfa_patterns={n_sfa}/{bank.n_patterns},"
+             f"compile_s={t_compile:.2f},exact={np.array_equal(counts, ref)},"
+             f"Mchar_pattern_s={chars / t_scan / 1e6:.1f}")
+        report["modes"][mode] = {
+            "compile_s": t_compile,
+            "scan_s": t_scan,
+            "sfa_patterns": n_sfa,
+            "mchar_pattern_per_s": chars / t_scan / 1e6,
+            "counts_match_auto": bool(np.array_equal(counts, ref)),
+        }
+
+    out = Path(__file__).resolve().parents[1] / "BENCH_engine.json"
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    emit("engine/report", 0.0, f"written={out.name}")
 
 
 if __name__ == "__main__":
@@ -139,3 +181,4 @@ if __name__ == "__main__":
         print(f"{name},{us:.1f},{derived}")
 
     run(_emit)
+    run_engine_modes(_emit)

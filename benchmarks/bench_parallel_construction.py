@@ -11,15 +11,17 @@ from __future__ import annotations
 
 import time
 
+from benchmarks import _config
 from repro.core.prosite import PROSITE_SAMPLES, compile_prosite
 from repro.core.sfa import construct_sfa_sequential, construct_sfa_vectorized
 
 BENCH_PATTERNS = ["PS00016", "PS00004", "PS00006", "PS00001", "PS00008",
                   "PS00017"]
+SMOKE_PATTERNS = ["PS00016", "PS00004"]
 
 
 def run(emit) -> None:
-    for pid in BENCH_PATTERNS:
+    for pid in _config.scaled(BENCH_PATTERNS, SMOKE_PATTERNS):
         dfa = compile_prosite(PROSITE_SAMPLES[pid])
         t0 = time.perf_counter()
         ref = construct_sfa_sequential(dfa, use_fingerprints=True, use_hashing=True)

@@ -8,15 +8,31 @@ Prints ``name,us_per_call,derived`` CSV. Figure mapping:
   kernels bench_kernels               (fingerprint pipeline micro)
   roofline bench_roofline             (LM dry-run cells, beyond-paper)
   multipattern bench_multipattern     (batched bank vs per-pattern loop, §IV)
+  engine  bench_multipattern.run_engine_modes (auto vs forced Scanner modes,
+          also writes BENCH_engine.json)
+
+``--smoke`` caps sizes/iterations (see benchmarks/_config.py) so CI can run
+the whole harness as a smoke job without burning minutes on full figures.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled-down sizes/iterations (CI smoke job)")
+    args = ap.parse_args()
+
+    from benchmarks import _config
+
+    if args.smoke:
+        _config.set_smoke(True)
+
     from benchmarks import (
         bench_census,
         bench_construction,
@@ -44,6 +60,7 @@ def main() -> None:
         bench_kernels.run,
         bench_roofline.run,
         bench_multipattern.run,
+        bench_multipattern.run_engine_modes,
     ]
     failures = 0
     for suite in suites:

@@ -1,4 +1,4 @@
-"""Parallel FA matching with SFAs (paper §I, §IV-C).
+"""Chunk-level matching primitives (paper §I, §IV-C) + legacy shims.
 
 The dependency chain ``state ← δ(state, Str[i])`` makes plain DFA matching
 sequential. The SFA breaks it: split the input into chunks, compute each
@@ -14,28 +14,21 @@ function:
   char cost is an ``n``-wide gather (cheap on a VPU, and how we match when
   the SFA would blow up).
 
-Distribution: chunks shard across devices (``shard_map`` over the ``data``
-axis); each device matches its chunks locally and the per-device functions
-are combined with ``monoid.shard_reduce`` — an ``all_gather`` of n-int
-vectors, the pod-scale version of the paper's result-vector reduction.
+This module now holds only the *per-chunk* primitives and the sequential
+references; the parallel entry points that used to live here moved to
+``repro.engine.executors`` behind the :class:`repro.engine.Scanner` facade.
+The old names below still work but are deprecated shims that delegate to the
+engine (one ``DeprecationWarning`` per name per process).
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
 
-from ..compat import shard_map as compat_shard_map
-from . import monoid as M
 from .dfa import DFA
 from .sfa import SFA
-
-FN = M.function_monoid()
 
 
 # --------------------------------------------------------------------------
@@ -58,7 +51,8 @@ def match_ends_sequential(dfa: DFA, symbols: np.ndarray) -> np.ndarray:
 
 
 # --------------------------------------------------------------------------
-# Chunk matchers (jitted)
+# Chunk matchers (jit-safe primitives; the engine vmaps these over the
+# chunk, doc, and pattern axes)
 # --------------------------------------------------------------------------
 
 
@@ -102,144 +96,64 @@ def chunk_accept_trace(table: jnp.ndarray, accepting: jnp.ndarray,
 
 
 # --------------------------------------------------------------------------
-# Single-host parallel matching
+# Legacy entry points -> engine shims (deprecated; see repro.engine.Scanner)
 # --------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("n_chunks",))
-def match_parallel_enumeration(table: jnp.ndarray, symbols: jnp.ndarray,
-                               n_chunks: int = 8) -> jnp.ndarray:
-    """Parallel match via enumeration; returns the mapping of the whole input.
+def match_parallel_enumeration(table, symbols, n_chunks: int = 8):
+    """Deprecated: use ``repro.engine.Scanner`` (mode="enumeration")."""
+    from ..engine import executors
+    from ..engine.deprecation import warn_once
 
-    The input length must be divisible by ``n_chunks`` (callers pad; padding
-    symbols would corrupt the composed function otherwise).
-    """
-    L = symbols.shape[0]
-    assert L % n_chunks == 0, "pad input to a multiple of n_chunks"
-    chunks = symbols.reshape(n_chunks, L // n_chunks)
-    mappings = jax.vmap(lambda c: chunk_mapping_enumeration(table, c))(chunks)
-    return M.reduce(FN, mappings, axis=0)
+    warn_once("core.matching.match_parallel_enumeration",
+              "engine.executors.match_parallel_enumeration or Scanner.scan")
+    return executors.match_parallel_enumeration(table, symbols, n_chunks)
 
 
-@functools.partial(jax.jit, static_argnames=("n_chunks",))
-def match_parallel_sfa(delta_s: jnp.ndarray, sfa_mappings: jnp.ndarray,
-                       symbols: jnp.ndarray, n_chunks: int = 8) -> jnp.ndarray:
-    """Parallel match via the SFA (paper's method); returns the input mapping."""
-    L = symbols.shape[0]
-    assert L % n_chunks == 0
-    chunks = symbols.reshape(n_chunks, L // n_chunks)
-    final_states = jax.vmap(lambda c: chunk_state_sfa(delta_s, c))(chunks)
-    mappings = sfa_mappings[final_states]  # (n_chunks, n)
-    return M.reduce(FN, mappings, axis=0)
+def match_parallel_sfa(delta_s, sfa_mappings, symbols, n_chunks: int = 8):
+    """Deprecated: use ``repro.engine.Scanner`` (mode="sfa")."""
+    from ..engine import executors
+    from ..engine.deprecation import warn_once
+
+    warn_once("core.matching.match_parallel_sfa",
+              "engine.executors.match_parallel_sfa or Scanner.scan")
+    return executors.match_parallel_sfa(delta_s, sfa_mappings, symbols, n_chunks)
 
 
-@functools.partial(jax.jit, static_argnames=("n_chunks",))
-def find_matches_parallel(table: jnp.ndarray, accepting: jnp.ndarray,
-                          symbols: jnp.ndarray, start: int,
-                          n_chunks: int = 8) -> jnp.ndarray:
-    """Per-position accept flags, computed in two parallel passes:
-    (1) chunk functions + exclusive scan -> entry state per chunk;
-    (2) per-chunk accept traces from the entry states."""
-    L = symbols.shape[0]
-    assert L % n_chunks == 0
-    chunks = symbols.reshape(n_chunks, L // n_chunks)
-    mappings = jax.vmap(lambda c: chunk_mapping_enumeration(table, c))(chunks)
-    prefix = M.exclusive_scan(FN, mappings, axis=0)      # (n_chunks, n)
-    entry = prefix[:, start]                              # (n_chunks,)
-    flags = jax.vmap(lambda c, e: chunk_accept_trace(table, accepting, c, e))(
-        chunks, entry
-    )
-    return flags.reshape(L)
+def find_matches_parallel(table, accepting, symbols, start, n_chunks: int = 8):
+    """Deprecated: use ``Scanner.locate``."""
+    from ..engine import executors
+    from ..engine.deprecation import warn_once
+
+    warn_once("core.matching.find_matches_parallel", "Scanner.locate")
+    return executors.find_matches_parallel(table, accepting, symbols, start,
+                                           n_chunks)
 
 
 def accepts_parallel(dfa: DFA, text: str, n_chunks: int = 8,
                      sfa: SFA | None = None) -> bool:
-    """End-to-end helper: does ``text`` match? (pads to chunk multiple)."""
-    symbols = jnp.asarray(dfa.encode(text))
-    L = symbols.shape[0]
-    chunk_len = -(-L // n_chunks)
-    pad = chunk_len * n_chunks - L
-    if pad:
-        # Pad the *front* with a harmless loop at the start state: we instead
-        # simply process the unpadded tail sequentially — cheap (< chunk_len).
-        head_len = L - (L % n_chunks) if L % n_chunks else L
-        head = symbols[:head_len]
-        tail = symbols[head_len:]
-    else:
-        head, tail = symbols, symbols[:0]
-    if head.shape[0]:
-        if sfa is not None:
-            mapping = match_parallel_sfa(
-                jnp.asarray(sfa.delta), jnp.asarray(sfa.mappings), head, n_chunks
-            )
-        else:
-            mapping = match_parallel_enumeration(jnp.asarray(dfa.table), head, n_chunks)
-        state = int(mapping[dfa.start])
-    else:
-        state = dfa.start
-    state = dfa.run(np.asarray(tail), state=state)
-    return bool(dfa.accepting[state])
+    """Deprecated: use ``Scanner.accepts``."""
+    from ..engine import executors
+    from ..engine.deprecation import warn_once
+
+    warn_once("core.matching.accepts_parallel", "Scanner.accepts")
+    return executors.accepts_parallel(dfa, text, n_chunks, sfa)
 
 
-# --------------------------------------------------------------------------
-# Distributed matching (shard_map over the data axis)
-# --------------------------------------------------------------------------
+def distributed_match_fn(mesh, table_shape: tuple, axis_name: str = "data"):
+    """Deprecated: use ``ScanPlan(distribution='shard_map')``."""
+    from ..engine import executors
+    from ..engine.deprecation import warn_once
+
+    warn_once("core.matching.distributed_match_fn",
+              "Scanner with ScanPlan(distribution='shard_map')")
+    return executors.distributed_match_fn(mesh, table_shape, axis_name)
 
 
-def distributed_match_fn(mesh: Mesh, table_shape: tuple, axis_name: str = "data"):
-    """Build a pjit-able distributed matcher for a given mesh.
+def throughput_matcher(mesh, start: int = 0, axis_name: str = "data"):
+    """Deprecated: use ``Scanner.scan`` over a doc batch."""
+    from ..engine import executors
+    from ..engine.deprecation import warn_once
 
-    Input ``symbols`` (L,) is sharded over ``axis_name``; each device runs
-    enumeration matching on its shard (vectorized over sub-chunks for VPU
-    utilization), then per-device functions combine via ``shard_reduce``
-    (one all_gather of n-int vectors — the paper's result reduction).
-    Returns ``mapping`` (n,) replicated.
-    """
-    n, _ = table_shape
-    n_dev = mesh.shape[axis_name]
-
-    def local_match(table, sym_shard, sub_chunks: int):
-        L = sym_shard.shape[0]
-        chunks = sym_shard.reshape(sub_chunks, L // sub_chunks)
-        mappings = jax.vmap(lambda c: chunk_mapping_enumeration(table, c))(chunks)
-        local = M.reduce(FN, mappings, axis=0)
-        return M.shard_reduce(FN, local[None], axis_name)[0]
-
-    @functools.partial(jax.jit, static_argnames=("sub_chunks",))
-    def matcher(table, symbols, sub_chunks: int = 8):
-        fn = compat_shard_map(
-            functools.partial(local_match, sub_chunks=sub_chunks),
-            mesh=mesh,
-            in_specs=(P(), P(axis_name)),
-            out_specs=P(),
-            check_vma=False,
-        )
-        return fn(table, symbols)
-
-    return matcher
-
-
-def throughput_matcher(mesh: Mesh, start: int = 0, axis_name: str = "data"):
-    """Batched many-strings matcher: (B, L) inputs sharded over ``axis_name``
-    on the batch axis, each row matched independently (the network-security
-    style throughput workload from the related work, for completeness)."""
-
-    def local(table, accepting, batch):
-        def per_row(row):
-            mapping = chunk_mapping_enumeration(table, row)
-            return accepting[mapping[start]]
-
-        return jax.vmap(per_row)(batch)
-
-    @jax.jit
-    def matcher(table, accepting, batch):
-        fn = compat_shard_map(
-            local,
-            mesh=mesh,
-            in_specs=(P(), P(), P(axis_name)),
-            out_specs=P(axis_name),
-            check_vma=False,
-        )
-        return fn(table, accepting, batch)
-
-    return matcher
+    warn_once("core.matching.throughput_matcher", "Scanner.scan")
+    return executors.throughput_matcher(mesh, start, axis_name)

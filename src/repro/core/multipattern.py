@@ -18,46 +18,23 @@ they are unreachable from real states, and under function composition a
 padded entry ``f[q] = q`` stays the identity. Per-pattern true sizes ride
 along in ``PatternBank.n_states`` so results can be cropped when needed.
 
-Sharding story (patterns × chunks over the mesh)
-------------------------------------------------
-``distributed_bank_matcher`` lays the bank out over a 2-D mesh: the pattern
-axis shards over ``model`` (each device holds ``P/|model|`` tables — the
-paper's "each core takes a subset of the patterns" task parallelism) and the
-input shards over ``data`` exactly as single-pattern matching does. Each
-device matches its pattern shard against its chunk shard locally, then one
-fused monoid reduction (``monoid.shard_reduce`` vectorized over the local
-pattern axis — a single ``all_gather`` of ``(P_local, n)`` int vectors)
-composes the per-device chunk functions along ``data``. The result is the
-final mapping of the *whole* input for every pattern, P-sharded over
-``model`` — no pattern ever crosses a device boundary, so adding patterns
-scales out with zero extra communication volume per pattern beyond its own
-n-int mapping vector.
-
-The Pallas twin lives in ``kernels.match_scan.match_bank_chunks_pallas``:
-its grid iterates ``(pattern, chunk)`` with the chunk axis innermost, so the
-VMEM-resident transposed table is swapped once per *pattern block* and stays
-hot across every chunk of that pattern — the §III-B3 locality argument
-applied to the bank axis.
+The batched, distributed, and Pallas matchers that used to live here moved
+to ``repro.engine.executors`` behind the :class:`repro.engine.Scanner`
+facade (which also adds the stacked-SFA bank mode this module's enumeration
+matchers lacked). This module keeps the data structures — ``PatternBank``,
+``bucket_by_size``, and the ``census_sequential`` oracle — plus deprecated
+shims for the old entry points (one ``DeprecationWarning`` per name).
 """
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Iterable, Mapping, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
-from jax.sharding import PartitionSpec as P
 
-from ..compat import shard_map as compat_shard_map
-from . import monoid as M
 from .dfa import DFA
-from .matching import chunk_mapping_enumeration
-
-FN = M.function_monoid()
 
 
 # --------------------------------------------------------------------------
@@ -191,67 +168,6 @@ def bucket_by_size(dfas: Sequence[DFA], ids: Iterable[str] | None = None,
     ]
 
 
-# --------------------------------------------------------------------------
-# Batched matchers (single host): vmap over the pattern axis
-# --------------------------------------------------------------------------
-
-
-@functools.partial(jax.jit, static_argnames=("n_chunks",))
-def match_bank_parallel(tables: jnp.ndarray, symbols: jnp.ndarray,
-                        n_chunks: int = 8) -> jnp.ndarray:
-    """Final mappings of one input under every pattern.
-
-    ``tables``: (P, n, k) int32; ``symbols``: (L,) with L divisible by
-    ``n_chunks`` -> (P, n) int32: row ``p`` is the transition function of the
-    whole input under pattern ``p`` (apply to ``starts[p]`` for the final
-    state). Chunk functions for all (pattern, chunk) cells compute in one
-    doubly-vmapped batch; composition is one monoid reduce over the chunk
-    axis, batched over patterns.
-    """
-    L = symbols.shape[0]
-    assert L % n_chunks == 0, "pad input to a multiple of n_chunks"
-    chunks = symbols.reshape(n_chunks, L // n_chunks)
-    mappings = jax.vmap(
-        lambda t: jax.vmap(lambda c: chunk_mapping_enumeration(t, c))(chunks)
-    )(tables)                                  # (P, n_chunks, n)
-    return M.reduce(FN, mappings, axis=1)      # (P, n)
-
-
-@functools.partial(jax.jit, static_argnames=("n_chunks",))
-def bank_hits(tables: jnp.ndarray, accepting: jnp.ndarray, starts: jnp.ndarray,
-              corpus: jnp.ndarray, n_chunks: int = 8) -> jnp.ndarray:
-    """Hit matrix of a corpus against the bank.
-
-    ``corpus``: (D, L) int32 (equal-length encoded sequences; pad/crop the
-    raw strings first) -> (P, D) bool: ``[p, d]`` iff sequence ``d`` is
-    accepted by pattern ``p``.
-    """
-    D, L = corpus.shape
-    assert L % n_chunks == 0, "pad sequences to a multiple of n_chunks"
-    chunks = corpus.reshape(D, n_chunks, L // n_chunks)
-
-    def per_pattern(table, acc, start):
-        def per_doc(doc_chunks):
-            mappings = jax.vmap(lambda c: chunk_mapping_enumeration(table, c))(
-                doc_chunks
-            )
-            mapping = M.reduce(FN, mappings, axis=0)
-            return acc[mapping[start]]
-
-        return jax.vmap(per_doc)(chunks)
-
-    return jax.vmap(per_pattern)(tables, accepting, starts)
-
-
-@functools.partial(jax.jit, static_argnames=("n_chunks",))
-def census_bank(tables: jnp.ndarray, accepting: jnp.ndarray, starts: jnp.ndarray,
-                corpus: jnp.ndarray, n_chunks: int = 8) -> jnp.ndarray:
-    """Per-pattern hit counts over a corpus: (P,) int32 — the ScanProsite
-    census (how many database sequences carry each signature)."""
-    hits = bank_hits(tables, accepting, starts, corpus, n_chunks)
-    return jnp.sum(hits, axis=1, dtype=jnp.int32)
-
-
 def census_sequential(bank: PatternBank, corpus: np.ndarray) -> np.ndarray:
     """Reference census: plain per-pattern, per-sequence DFA loop (paper
     Fig. 1c applied P × D times). The differential-test oracle."""
@@ -264,69 +180,58 @@ def census_sequential(bank: PatternBank, corpus: np.ndarray) -> np.ndarray:
 
 
 # --------------------------------------------------------------------------
-# Distributed: patterns × chunks over the mesh
+# Legacy entry points -> engine shims (deprecated; see repro.engine.Scanner)
 # --------------------------------------------------------------------------
 
 
-def distributed_bank_matcher(mesh: Mesh, pattern_axis: str = "model",
+def match_bank_parallel(tables, symbols, n_chunks: int = 8):
+    """Deprecated: use ``repro.engine.Scanner.mapping`` (or
+    ``engine.executors.match_bank_parallel``)."""
+    from ..engine import executors
+    from ..engine.deprecation import warn_once
+
+    warn_once("core.multipattern.match_bank_parallel",
+              "engine.executors.match_bank_parallel or Scanner.mapping")
+    return executors.match_bank_parallel(tables, symbols, n_chunks)
+
+
+def bank_hits(tables, accepting, starts, corpus, n_chunks: int = 8):
+    """Deprecated: use ``Scanner.scan``."""
+    from ..engine import executors
+    from ..engine.deprecation import warn_once
+
+    warn_once("core.multipattern.bank_hits", "Scanner.scan")
+    return executors.bank_hits(tables, accepting, starts, corpus, n_chunks)
+
+
+def census_bank(tables, accepting, starts, corpus, n_chunks: int = 8):
+    """Deprecated: use ``Scanner.census``."""
+    from ..engine import executors
+    from ..engine.deprecation import warn_once
+
+    warn_once("core.multipattern.census_bank", "Scanner.census")
+    return executors.census_bank(tables, accepting, starts, corpus, n_chunks)
+
+
+def distributed_bank_matcher(mesh, pattern_axis: str = "model",
                              data_axis: str = "data"):
-    """Build a jitted matcher distributing patterns × chunks over ``mesh``.
+    """Deprecated: use ``ScanPlan(distribution='shard_map')``."""
+    from ..engine import executors
+    from ..engine.deprecation import warn_once
 
-    ``tables`` (P, n, k) shards over ``pattern_axis``; ``symbols`` (L,)
-    shards over ``data_axis``. Each device computes the chunk functions of
-    its pattern shard on its data shard, then a single fused monoid
-    reduction — ``shard_reduce`` batched over the local pattern axis, i.e.
-    ONE all_gather of (P_local, n) int vectors along ``data_axis`` — yields
-    the whole-input mapping per pattern. Output: (P, n), P-sharded over
-    ``pattern_axis`` and replicated along ``data_axis``.
-
-    P must divide the ``pattern_axis`` size and L the total chunk count
-    ``|data_axis| * sub_chunks``.
-    """
-
-    def local_match(tables, sym_shard, sub_chunks: int):
-        Lc = sym_shard.shape[0]
-        chunks = sym_shard.reshape(sub_chunks, Lc // sub_chunks)
-        mappings = jax.vmap(
-            lambda t: jax.vmap(lambda c: chunk_mapping_enumeration(t, c))(chunks)
-        )(tables)                                    # (P_local, sub_chunks, n)
-        local = M.reduce(FN, mappings, axis=1)       # (P_local, n)
-        return M.shard_reduce(FN, local, data_axis)  # fused over data axis
-
-    @functools.partial(jax.jit, static_argnames=("sub_chunks",))
-    def matcher(tables, symbols, sub_chunks: int = 8):
-        fn = compat_shard_map(
-            functools.partial(local_match, sub_chunks=sub_chunks),
-            mesh=mesh,
-            in_specs=(P(pattern_axis), P(data_axis)),
-            out_specs=P(pattern_axis),
-            check_vma=False,
-        )
-        return fn(tables, symbols)
-
-    return matcher
+    warn_once("core.multipattern.distributed_bank_matcher",
+              "Scanner with ScanPlan(distribution='shard_map')")
+    return executors.distributed_bank_matcher(mesh, pattern_axis, data_axis)
 
 
-def distributed_census_fn(mesh: Mesh, pattern_axis: str = "model",
+def distributed_census_fn(mesh, pattern_axis: str = "model",
                           data_axis: str = "data", n_chunks: int = 8):
-    """Distributed census: corpus rows shard over ``data_axis``, patterns
-    over ``pattern_axis``; per-device partial counts combine with one psum."""
+    """Deprecated: use ``Scanner.census`` with
+    ``ScanPlan(distribution='shard_map')``."""
+    from ..engine import executors
+    from ..engine.deprecation import warn_once
 
-    def local(tables, accepting, starts, corpus_shard):
-        hits = bank_hits(tables, accepting, starts, corpus_shard, n_chunks)
-        counts = jnp.sum(hits, axis=1, dtype=jnp.int32)
-        return jax.lax.psum(counts, data_axis)
-
-    @jax.jit
-    def census(tables, accepting, starts, corpus):
-        fn = compat_shard_map(
-            local,
-            mesh=mesh,
-            in_specs=(P(pattern_axis), P(pattern_axis), P(pattern_axis),
-                      P(data_axis)),
-            out_specs=P(pattern_axis),
-            check_vma=False,
-        )
-        return fn(tables, accepting, starts, corpus)
-
-    return census
+    warn_once("core.multipattern.distributed_census_fn",
+              "Scanner.census with ScanPlan(distribution='shard_map')")
+    return executors.distributed_census_fn(mesh, pattern_axis, data_axis,
+                                           n_chunks)

@@ -1,0 +1,33 @@
+"""The scan engine: one entry point for every matching configuration.
+
+    from repro.engine import Scanner, ScanPlan
+
+    scanner = Scanner.compile(["PS00016", "PS00017"], ScanPlan(mode="auto"))
+    hits = scanner.scan(proteins)          # (P, D) hit matrix
+    counts = scanner.census(proteins)      # ScanProsite census
+    result = scanner.stream(chunk_blocks)  # larger-than-memory inputs
+
+``Scanner.compile`` resolves mode (SFA vs enumeration, per pattern, under a
+state budget), backend (reference / xla / pallas), distribution (local /
+shard_map), and chunking from a :class:`ScanPlan`; every configuration
+produces bit-identical results. The pre-engine free functions in
+``repro.core.matching`` / ``repro.core.multipattern`` are deprecated shims
+over :mod:`repro.engine.executors`.
+"""
+
+from .plan import BACKENDS, DISTRIBUTIONS, MODES, ChunkPolicy, ScanPlan
+from .scanner import PatternGroup, Scanner, ScanResult
+from .streaming import StreamResult, StreamSession
+
+__all__ = [
+    "BACKENDS",
+    "DISTRIBUTIONS",
+    "MODES",
+    "ChunkPolicy",
+    "PatternGroup",
+    "ScanPlan",
+    "ScanResult",
+    "Scanner",
+    "StreamResult",
+    "StreamSession",
+]

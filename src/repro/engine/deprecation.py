@@ -1,0 +1,30 @@
+"""Warn-once bookkeeping for the legacy entry points shimmed onto the engine.
+
+Every pre-engine public function (``match_parallel_enumeration``,
+``match_bank_parallel``, ``distributed_bank_matcher``, ...) still works, but
+delegates to :mod:`repro.engine.executors` and announces itself exactly once
+per process so long-running scans aren't spammed.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+_SEEN: set = set()
+
+
+def warn_once(name: str, replacement: str) -> None:
+    """Emit a single ``DeprecationWarning`` for ``name`` per process."""
+    if name in _SEEN:
+        return
+    _SEEN.add(name)
+    warnings.warn(
+        f"{name} is deprecated; use {replacement} (see repro.engine.Scanner)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def reset() -> None:
+    """Forget which names already warned (test helper)."""
+    _SEEN.clear()

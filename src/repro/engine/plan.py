@@ -1,0 +1,116 @@
+"""Execution plans: the declarative half of the ``Scanner`` engine API.
+
+A :class:`ScanPlan` says *how* to run a scan — matching mode, backend,
+distribution, and chunking — while the :class:`~repro.engine.Scanner` facade
+says *what* to scan. Splitting the two keeps every matching configuration the
+repo supports (DFA vs SFA mode, single pattern vs bank, one device vs a mesh,
+XLA vs Pallas inner loops) behind one entry point, which is the paper's own
+framing: chunk transition functions combined by one associative monoid serve
+them all.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+MODES = ("auto", "sfa", "enumeration")
+BACKENDS = ("reference", "xla", "pallas")
+DISTRIBUTIONS = ("local", "shard_map")
+
+#: Default SFA state budget for ``mode="auto"``: patterns whose exact SFA
+#: closes within this many states get the paper's single-lookup inner loop;
+#: the rest fall back to enumeration (Mytkowicz-style n-wide gathers). 512
+#: splits the bundled PROSITE bank into a representative mix of both.
+DEFAULT_SFA_STATE_BUDGET = 512
+
+
+@dataclass(frozen=True)
+class ChunkPolicy:
+    """How inputs are cut into the paper's parallel chunks.
+
+    ``n_chunks``
+        chunk-level parallelism per document (and per stream block) — the
+        paper's thread count.
+    ``block_len``
+        symbols per chunk in the streaming path; one stream block is a fixed
+        ``(n_chunks, block_len)`` array, so every block reuses one compiled
+        program (and one VMEM-resident table in the Pallas inner loop).
+    ``bucket`` / ``bucket_edges``
+        size-bucketing of the pattern bank: patterns are grouped so no
+        pattern pays gathers more than ~2x wider than its own automaton
+        (``core.multipattern.bucket_by_size``'s padding argument).
+    """
+
+    n_chunks: int = 8
+    block_len: int = 256
+    bucket: bool = False
+    bucket_edges: tuple = (8, 16, 32, 64, 128, 256, 1024)
+
+    def validate(self) -> "ChunkPolicy":
+        if self.n_chunks < 1:
+            raise ValueError(f"n_chunks must be >= 1, got {self.n_chunks}")
+        if self.block_len < 1:
+            raise ValueError(f"block_len must be >= 1, got {self.block_len}")
+        if self.bucket and not self.bucket_edges:
+            raise ValueError("bucket=True requires non-empty bucket_edges")
+        return self
+
+
+@dataclass(frozen=True)
+class ScanPlan:
+    """One execution plan for a compiled :class:`~repro.engine.Scanner`.
+
+    ``mode``
+        ``"sfa"`` forces the paper's SFA matching (construction must fit the
+        budget for *every* pattern, else ``StateBlowup`` propagates);
+        ``"enumeration"`` forces the related-work all-states gather mode;
+        ``"auto"`` attempts SFA construction per pattern under
+        ``sfa_state_budget`` and falls back to enumeration per pattern on
+        ``StateBlowup`` — the crisp criterion the paper implies.
+    ``backend``
+        ``"reference"`` (pure NumPy oracle), ``"xla"`` (jitted vmapped
+        chunk matchers), or ``"pallas"`` (the ``match_bank_chunks_pallas``
+        inner loop with VMEM-resident transposed tables). All three produce
+        bit-identical results; they differ only in execution strategy.
+    ``distribution``
+        ``"local"`` or ``"shard_map"`` (documents shard over ``data_axis``
+        of ``mesh``; a 1-device mesh is built when ``mesh`` is None).
+    ``chunking``
+        a :class:`ChunkPolicy`.
+    """
+
+    mode: str = "auto"
+    backend: str = "xla"
+    distribution: str = "local"
+    chunking: ChunkPolicy = field(default_factory=ChunkPolicy)
+    sfa_state_budget: int = DEFAULT_SFA_STATE_BUDGET
+    mesh: Any = None
+    data_axis: str = "data"
+
+    def validate(self) -> "ScanPlan":
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {self.backend!r}"
+            )
+        if self.distribution not in DISTRIBUTIONS:
+            raise ValueError(
+                f"distribution must be one of {DISTRIBUTIONS}, "
+                f"got {self.distribution!r}"
+            )
+        if self.sfa_state_budget < 1:
+            raise ValueError("sfa_state_budget must be >= 1")
+        if self.distribution == "shard_map" and self.backend != "xla":
+            raise ValueError(
+                "distribution='shard_map' currently requires backend='xla' "
+                "(the reference backend has no mesh story and the Pallas "
+                "inner loop is local-only for now)"
+            )
+        self.chunking.validate()
+        return self
+
+    def with_(self, **overrides) -> "ScanPlan":
+        """Functional update (``dataclasses.replace`` with validation)."""
+        return replace(self, **overrides).validate()

@@ -1,0 +1,505 @@
+"""The ``Scanner`` facade: one entry point for every matching configuration.
+
+``Scanner.compile(patterns, plan)`` accepts one pattern or a bank — a string
+(PROSITE id, PROSITE signature, or framework regex), a compiled
+:class:`~repro.core.dfa.DFA`, a :class:`~repro.core.multipattern.PatternBank`,
+or a sequence/mapping of those — and a :class:`~repro.engine.plan.ScanPlan`
+saying how to run. Compilation resolves each pattern's matching mode
+(``auto`` attempts SFA construction under the plan's state budget, falling
+back to enumeration on :class:`~repro.core.sfa.StateBlowup`), stacks the
+per-pattern tables into padded device arrays (stacked SFA deltas + mapping
+lookups for SFA-mode patterns — the bank-axis version of the paper's
+single-lookup inner loop), and returns a scanner exposing:
+
+* ``scan(docs)``   — hit matrix of a document corpus against the bank;
+* ``census(docs)`` — per-pattern hit counts (the ScanProsite census);
+* ``stream(blocks)`` — corpora far larger than memory, fed as chunk blocks
+  through the backend inner loop while the running function-monoid prefix
+  carries across calls (see :mod:`repro.engine.streaming`);
+* ``mapping(doc)`` / ``accepts(doc)`` / ``locate(doc, pattern)`` helpers.
+
+Every backend (``reference`` / ``xla`` / ``pallas``) and every mode computes
+the same exact integer automaton semantics, so results are bit-identical
+across all plans — the differential property the test suite pins down.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..compat import make_mesh
+from ..core.dfa import DFA
+from ..core.multipattern import PatternBank
+from ..core.sfa import SFA, StateBlowup, construct_sfa
+from . import executors as X
+from .plan import ChunkPolicy, ScanPlan
+from .streaming import StreamResult, StreamSession
+
+
+# --------------------------------------------------------------------------
+# Pattern normalization
+# --------------------------------------------------------------------------
+
+
+def _compile_one(spec: Any) -> DFA:
+    """One pattern spec -> DFA. Strings resolve as: bundled PROSITE id,
+    then PROSITE signature syntax, then framework regex."""
+    from ..core.dfa import compile_dfa
+    from ..core.prosite import (
+        PROSITE_EXTRA,
+        PROSITE_SAMPLES,
+        PrositeSyntaxError,
+        compile_prosite,
+    )
+
+    if isinstance(spec, DFA):
+        return spec
+    if isinstance(spec, str):
+        pool = {**PROSITE_SAMPLES, **PROSITE_EXTRA}
+        if spec in pool:
+            return compile_prosite(pool[spec])
+        try:
+            return compile_prosite(spec)
+        except PrositeSyntaxError:
+            return compile_dfa(spec)
+    raise TypeError(
+        f"cannot compile pattern spec of type {type(spec).__name__}; "
+        "expected str, DFA, PatternBank, or a sequence/mapping of those"
+    )
+
+
+def _normalize(patterns: Any) -> tuple:
+    """-> (ids, dfas, single) where ``single`` marks a one-pattern input."""
+    if isinstance(patterns, PatternBank):
+        return (tuple(patterns.ids),
+                [patterns.dfa(p) for p in range(patterns.n_patterns)], False)
+    if isinstance(patterns, (str, DFA)):
+        dfa = _compile_one(patterns)
+        pid = patterns if isinstance(patterns, str) else "pattern_0"
+        return (pid,), [dfa], True
+    if isinstance(patterns, Mapping):
+        ids = tuple(patterns.keys())
+        return ids, [_compile_one(patterns[i]) for i in ids], False
+    if isinstance(patterns, Sequence):
+        dfas = [_compile_one(p) for p in patterns]
+        ids = tuple(
+            p if isinstance(p, str) else f"pattern_{i}"
+            for i, p in enumerate(patterns)
+        )
+        return ids, dfas, False
+    raise TypeError(f"cannot build a Scanner from {type(patterns).__name__}")
+
+
+# --------------------------------------------------------------------------
+# Compiled pattern groups
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class PatternGroup:
+    """One homogeneous slice of the compiled bank: same mode, one padded
+    table stack (and, for SFA mode, one stacked delta + mapping pair)."""
+
+    indices: np.ndarray          # positions in the scanner's pattern order
+    bank: PatternBank            # sub-bank (enumeration tables, padded)
+    mode: str                    # "sfa" | "enumeration"
+    tables: Any = None           # (Pg, n, k) jnp — enumeration tables
+    deltas: Any = None           # (Pg, S, k) jnp — stacked SFA tables
+    sfa_maps: Any = None         # (Pg, S, n) jnp — SFA state -> mapping
+    sfa_states: np.ndarray | None = None  # (Pg,) true SFA state counts
+    _dist_fn: Any = field(default=None, repr=False)
+
+    @property
+    def n(self) -> int:
+        return self.bank.n_max
+
+
+def _stack_sfas(sfas: Sequence[SFA], n_max: int) -> tuple:
+    """Stack per-pattern SFAs into padded (P, S_max, k) + (P, S_max, n_max).
+
+    The padding story mirrors ``PatternBank``: delta rows ``s >= S_i`` are
+    self-loops (inert, gathers stay in range) and mapping rows/columns pad
+    with the identity, so an SFA-mode chunk function equals the enumeration
+    chunk function on the padded layout entry for entry.
+    """
+    S_max = max(s.n_states for s in sfas)
+    k = sfas[0].delta.shape[1]
+    Pg = len(sfas)
+    deltas = np.empty((Pg, S_max, k), dtype=np.int32)
+    maps = np.empty((Pg, S_max, n_max), dtype=np.int32)
+    pad_rows = np.repeat(np.arange(S_max, dtype=np.int32)[:, None], k, axis=1)
+    ident = np.arange(n_max, dtype=np.int32)
+    for p, s in enumerate(sfas):
+        S_i = s.n_states
+        n_i = s.mappings.shape[1]
+        deltas[p] = pad_rows
+        deltas[p, :S_i] = s.delta
+        maps[p] = ident
+        maps[p, :S_i, :n_i] = s.mappings
+        maps[p, :S_i, n_i:] = ident[n_i:]
+    return deltas, maps, np.asarray([s.n_states for s in sfas], dtype=np.int32)
+
+
+def _size_partition(sizes: Sequence[int], edges: Sequence[int]):
+    """Partition indices by size buckets (bucket i holds sizes <= edges[i]);
+    oversized items land in one overflow bucket rather than erroring."""
+    buckets: dict = {}
+    for i, sz in enumerate(sizes):
+        for e in sorted(edges):
+            if sz <= e:
+                buckets.setdefault(e, []).append(i)
+                break
+        else:
+            buckets.setdefault(float("inf"), []).append(i)
+    return [idx for _, idx in sorted(buckets.items())]
+
+
+# --------------------------------------------------------------------------
+# Scan results
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ScanResult:
+    """Hit matrix of a scan: ``hits[p, d]`` iff doc ``d`` matches pattern ``p``."""
+
+    hits: np.ndarray      # (P, D) bool
+    ids: tuple
+
+    @property
+    def counts(self) -> np.ndarray:
+        """Per-pattern hit counts (the census row), (P,) int32."""
+        return np.sum(self.hits, axis=1, dtype=np.int32)
+
+    def by_id(self) -> dict:
+        return {pid: self.hits[p] for p, pid in enumerate(self.ids)}
+
+
+# --------------------------------------------------------------------------
+# The facade
+# --------------------------------------------------------------------------
+
+
+class Scanner:
+    """A compiled multi-pattern scan engine. Build with :meth:`compile`."""
+
+    def __init__(self, ids, dfas, groups, plan, single, mesh):
+        self.ids = ids
+        self.plan = plan
+        self.groups = groups
+        self.single = single
+        self.mesh = mesh
+        self.alphabet = dfas[0].alphabet
+        self.n_patterns = len(dfas)
+        self.n_max = max(d.n_states for d in dfas)
+        self.starts = np.asarray([d.start for d in dfas], dtype=np.int32)
+        self._dfas = dfas
+        self.pattern_modes = {}
+        for g in groups:
+            for i in g.indices:
+                self.pattern_modes[ids[i]] = g.mode
+
+    # -- compilation --------------------------------------------------------
+
+    @classmethod
+    def compile(cls, patterns: Any, plan: ScanPlan | None = None,
+                **overrides) -> "Scanner":
+        """Compile patterns under a plan (``overrides`` patch plan fields,
+        so ``Scanner.compile(bank, mode="sfa")`` works without a ScanPlan)."""
+        plan = (plan or ScanPlan()).with_(**overrides) if overrides else \
+            (plan or ScanPlan()).validate()
+        ids, dfas, single = _normalize(patterns)
+        if not dfas:
+            raise ValueError("empty pattern set")
+        alphabet = dfas[0].alphabet
+        for d in dfas:
+            if d.alphabet != alphabet:
+                raise ValueError("all patterns must share one alphabet")
+
+        # Resolve per-pattern mode. ``auto`` = the paper's criterion: use the
+        # SFA when construction closes under the budget, enumeration when it
+        # blows up (Mytkowicz-style fallback).
+        modes = []
+        sfas: dict = {}
+        for i, d in enumerate(dfas):
+            if plan.mode == "enumeration":
+                modes.append("enumeration")
+                continue
+            try:
+                sfas[i] = construct_sfa(
+                    d, engine="vectorized", max_states=plan.sfa_state_budget
+                )
+                modes.append("sfa")
+            except StateBlowup:
+                if plan.mode == "sfa":
+                    raise StateBlowup(
+                        f"pattern {ids[i]!r}: SFA exceeds the "
+                        f"{plan.sfa_state_budget}-state budget and "
+                        "mode='sfa' forbids the enumeration fallback"
+                    ) from None
+                modes.append("enumeration")
+
+        mesh = None
+        if plan.distribution == "shard_map":
+            mesh = plan.mesh if plan.mesh is not None else make_mesh(
+                (1,), (plan.data_axis,)
+            )
+
+        groups = []
+        for mode in ("sfa", "enumeration"):
+            member = [i for i, m in enumerate(modes) if m == mode]
+            if not member:
+                continue
+            if plan.chunking.bucket:
+                sizes = [
+                    sfas[i].n_states if mode == "sfa" else dfas[i].n_states
+                    for i in member
+                ]
+                parts = _size_partition(sizes, plan.chunking.bucket_edges)
+                parts = [[member[j] for j in p] for p in parts]
+            else:
+                parts = [member]
+            for part in parts:
+                groups.append(cls._build_group(
+                    part, [dfas[i] for i in part], [ids[i] for i in part],
+                    mode, [sfas.get(i) for i in part], plan, mesh,
+                ))
+        return cls(ids, dfas, groups, plan, single, mesh)
+
+    @staticmethod
+    def _build_group(indices, dfas, gids, mode, sfas, plan, mesh) -> PatternGroup:
+        bank = PatternBank.from_dfas(dfas, gids)
+        g = PatternGroup(
+            indices=np.asarray(indices, dtype=np.int64), bank=bank, mode=mode
+        )
+        g.tables = jnp.asarray(bank.tables)
+        if mode == "sfa":
+            deltas, maps, sizes = _stack_sfas(sfas, bank.n_max)
+            g.deltas = jnp.asarray(deltas)
+            g.sfa_maps = jnp.asarray(maps)
+            g.sfa_states = sizes
+        if mesh is not None:
+            g._dist_fn = X.distributed_doc_mappings_fn(
+                mesh, plan.data_axis, plan.chunking.n_chunks,
+                sfa_mode=(mode == "sfa"),
+            )
+        return g
+
+    # -- encoding helpers ---------------------------------------------------
+
+    def encode(self, text: str) -> np.ndarray:
+        sym = {c: i for i, c in enumerate(self.alphabet)}
+        return np.asarray([sym[c] for c in text], dtype=np.int32)
+
+    def _encode_docs(self, docs) -> list:
+        if isinstance(docs, str):
+            docs = [docs]
+        if isinstance(docs, np.ndarray) and docs.ndim == 2:
+            return [np.asarray(row, dtype=np.int32) for row in docs]
+        out = []
+        for d in docs:
+            out.append(self.encode(d) if isinstance(d, str)
+                       else np.asarray(d, dtype=np.int32))
+        return out
+
+    # -- the chunk-function core -------------------------------------------
+
+    def _group_doc_mappings(self, g: PatternGroup, corpus: np.ndarray
+                            ) -> np.ndarray:
+        """Final mapping of every (pattern-in-group, doc): -> (Pg, D, n).
+
+        The chunk-parallel backend handles the head (the largest prefix
+        divisible by ``n_chunks``); any ragged tail is composed sequentially
+        in NumPy — cheap (< one chunk per doc) and exact.
+        """
+        n_chunks = self.plan.chunking.n_chunks
+        D, L = corpus.shape
+        head_len = L - (L % n_chunks)
+        Pg, n = len(g.indices), g.n
+
+        if head_len:
+            head = corpus[:, :head_len]
+            maps = self._head_mappings(g, head, n_chunks)
+        else:
+            maps = np.broadcast_to(
+                np.arange(n, dtype=np.int32), (Pg, D, n)
+            ).copy()
+
+        if head_len < L:
+            if not maps.flags.writeable:
+                maps = maps.copy()
+            for d in range(D):
+                maps[:, d, :] = X.compose_sequential(
+                    g.bank.tables, maps[:, d, :], corpus[d, head_len:]
+                )
+        return maps
+
+    def _head_mappings(self, g: PatternGroup, head: np.ndarray,
+                       n_chunks: int) -> np.ndarray:
+        backend = self.plan.backend
+        corpus_j = jnp.asarray(head)
+        if self.mesh is not None:
+            D = head.shape[0]
+            n_dev = int(np.prod(list(self.mesh.shape.values())))
+            if D % n_dev:
+                raise ValueError(
+                    f"shard_map distribution needs doc count ({D}) divisible "
+                    f"by the mesh's {self.plan.data_axis} size ({n_dev})"
+                )
+            if g.mode == "sfa":
+                out = g._dist_fn(g.deltas, g.sfa_maps, corpus_j)
+            else:
+                out = g._dist_fn(g.tables, corpus_j)
+            return np.asarray(out)
+        if backend == "reference":
+            return _reference_doc_mappings(g.bank.tables, head)
+        if backend == "pallas":
+            if g.mode == "sfa":
+                out = X.bank_doc_mappings_sfa_pallas(
+                    g.deltas, g.sfa_maps, corpus_j, n_chunks
+                )
+            else:
+                out = X.bank_doc_mappings_pallas(g.tables, corpus_j, n_chunks)
+            return np.asarray(out)
+        # xla
+        if g.mode == "sfa":
+            out = X.bank_doc_mappings_sfa(g.deltas, g.sfa_maps, corpus_j, n_chunks)
+        else:
+            out = X.bank_doc_mappings(g.tables, corpus_j, n_chunks)
+        return np.asarray(out)
+
+    # -- public scan API ----------------------------------------------------
+
+    def scan(self, docs) -> ScanResult:
+        """Match a corpus against the bank -> :class:`ScanResult` (P, D)."""
+        enc = self._encode_docs(docs)
+        D = len(enc)
+        hits = np.zeros((self.n_patterns, D), dtype=bool)
+        # Batch docs of equal length together (one fixed-shape program each).
+        by_len: dict = {}
+        for d, e in enumerate(enc):
+            by_len.setdefault(len(e), []).append(d)
+        for L, idxs in sorted(by_len.items()):
+            corpus = np.stack([enc[d] for d in idxs]) if L else \
+                np.zeros((len(idxs), 0), dtype=np.int32)
+            for g in self.groups:
+                if L:
+                    maps = self._group_doc_mappings(g, corpus)  # (Pg, Dg, n)
+                else:
+                    maps = np.broadcast_to(
+                        np.arange(g.n, dtype=np.int32),
+                        (len(g.indices), len(idxs), g.n),
+                    )
+                starts = g.bank.starts                          # (Pg,)
+                finals = np.take_along_axis(
+                    maps, starts[:, None, None].astype(np.int64), axis=2
+                )[:, :, 0]                                      # (Pg, Dg)
+                acc = np.take_along_axis(
+                    g.bank.accepting, finals.astype(np.int64), axis=1
+                )
+                hits[np.ix_(g.indices, np.asarray(idxs))] = acc
+        return ScanResult(hits=hits, ids=self.ids)
+
+    def census(self, docs) -> np.ndarray:
+        """Per-pattern hit counts over a corpus, (P,) int32."""
+        return self.scan(docs).counts
+
+    def mapping(self, doc) -> np.ndarray:
+        """Transition function of one whole input under every pattern,
+        (P, n_max) int32 on the scanner's padded layout (identity beyond
+        each pattern's true state count)."""
+        enc = self._encode_docs([doc])[0]
+        out = np.broadcast_to(
+            np.arange(self.n_max, dtype=np.int32),
+            (self.n_patterns, self.n_max),
+        ).copy()
+        corpus = enc[None, :]
+        for g in self.groups:
+            maps = self._group_doc_mappings(g, corpus)[:, 0, :]  # (Pg, n_g)
+            out[g.indices, : g.n] = maps
+        return out
+
+    def accepts(self, doc):
+        """Accept flags of one input: bool for a single-pattern scanner,
+        (P,) bool for a bank."""
+        flags = self.scan([doc]).hits[:, 0]
+        return bool(flags[0]) if self.single else flags
+
+    def locate(self, doc, pattern=None) -> np.ndarray:
+        """Per-position accept flags of one doc under one pattern (two-pass
+        chunk-parallel match localization). ``pattern`` is an id or index;
+        defaults to the only pattern of a single-pattern scanner."""
+        if pattern is None:
+            if not self.single:
+                raise ValueError("bank scanner: pass pattern=<id or index>")
+            p = 0
+        else:
+            p = (self.ids.index(pattern) if isinstance(pattern, str)
+                 else int(pattern))
+        d = self._dfas[p]
+        enc = self._encode_docs([doc])[0]
+        n_chunks = self.plan.chunking.n_chunks
+        head_len = len(enc) - (len(enc) % n_chunks)
+        flags = np.zeros(len(enc), dtype=bool)
+        if head_len:
+            flags[:head_len] = np.asarray(X.find_matches_parallel(
+                jnp.asarray(d.table), jnp.asarray(d.accepting),
+                jnp.asarray(enc[:head_len]), d.start, n_chunks,
+            ))
+        # sequential tail from the head's final state
+        s = d.run(enc[:head_len]) if head_len else d.start
+        for i in range(head_len, len(enc)):
+            s = int(d.table[s, enc[i]])
+            flags[i] = bool(d.accepting[s])
+        return flags
+
+    # -- streaming ----------------------------------------------------------
+
+    def open_stream(self) -> StreamSession:
+        """Push API: feed chunk blocks incrementally, then ``finish()``."""
+        return StreamSession(self)
+
+    def stream(self, blocks) -> StreamResult:
+        """Scan one logically-concatenated input delivered as an iterable of
+        blocks (strings or encoded int arrays) without whole-corpus
+        residency. Equivalent to ``scan`` on the concatenation; the running
+        function-monoid prefix carries across fixed-shape block calls."""
+        sess = self.open_stream()
+        for b in blocks:
+            sess.feed(b)
+        return sess.finish()
+
+    # -- introspection ------------------------------------------------------
+
+    def describe(self) -> str:
+        lines = [
+            f"Scanner: {self.n_patterns} pattern(s), alphabet |Σ|="
+            f"{len(self.alphabet)}, plan=({self.plan.mode}/"
+            f"{self.plan.backend}/{self.plan.distribution}, "
+            f"n_chunks={self.plan.chunking.n_chunks})",
+        ]
+        for g in self.groups:
+            extra = ""
+            if g.mode == "sfa":
+                extra = f", S_max={int(g.deltas.shape[1])}"
+            lines.append(
+                f"  group[{g.mode}]: {len(g.indices)} pattern(s), "
+                f"n_max={g.n}{extra}"
+            )
+        return "\n".join(lines)
+
+
+def _reference_doc_mappings(tables: np.ndarray, corpus: np.ndarray) -> np.ndarray:
+    """Pure-NumPy oracle: compose each doc's transition function symbol by
+    symbol over all states at once. (Pg, n, k), (D, L) -> (Pg, D, n)."""
+    Pg, n, _ = tables.shape
+    D, _ = corpus.shape
+    out = np.empty((Pg, D, n), dtype=np.int32)
+    ident = np.broadcast_to(np.arange(n, dtype=np.int32), (Pg, n))
+    for d in range(D):
+        out[:, d] = X.compose_sequential(tables, ident, corpus[d])
+    return out

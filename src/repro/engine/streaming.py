@@ -1,0 +1,156 @@
+"""Streaming input: corpora far larger than memory through the bank.
+
+The paper's matching algorithm needs only each chunk's *transition function*
+and an associative combine — nothing about it requires the whole input to be
+resident. :class:`StreamSession` exploits that: callers feed arbitrary-sized
+pieces (strings or encoded int arrays) of one logically-concatenated input;
+the session buffers them into fixed-shape ``(n_chunks, block_len)`` chunk
+blocks, pushes each block through the plan's backend inner loop (the Pallas
+``match_bank_chunks_pallas`` kernel when ``backend="pallas"`` — the ROADMAP
+"wire the kernel in" item), and folds the block's transition function into a
+running function-monoid prefix. Memory high-water mark is one block plus the
+``(P, n)`` prefix, independent of corpus length; fixed shapes mean every
+block reuses one compiled program (and one VMEM-resident table block).
+
+``StreamSession.finish()`` composes any ragged tail sequentially (exact,
+< one block of work) and returns a :class:`StreamResult` whose mapping is
+bit-identical to ``Scanner.mapping`` of the concatenated input.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import executors as X
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .scanner import PatternGroup, Scanner
+
+
+@dataclass(frozen=True)
+class StreamResult:
+    """Outcome of a streamed scan over one concatenated input."""
+
+    mapping: np.ndarray       # (P, n_max) — transition function of the input
+    final_states: np.ndarray  # (P,) — mapping applied to each pattern's start
+    accepted: np.ndarray      # (P,) bool
+    n_symbols: int
+    ids: tuple
+    single: bool = False
+
+    @property
+    def accepts(self):
+        """bool for a single-pattern scanner, (P,) bool for a bank."""
+        return bool(self.accepted[0]) if self.single else self.accepted
+
+
+class StreamSession:
+    """Incremental (push-style) scan; create via ``Scanner.open_stream()``."""
+
+    def __init__(self, scanner: "Scanner"):
+        self.scanner = scanner
+        pol = scanner.plan.chunking
+        self.n_chunks = pol.n_chunks
+        self.block_len = pol.block_len
+        self.super_len = self.n_chunks * self.block_len
+        self._buf = np.zeros(0, dtype=np.int32)
+        self._n_symbols = 0
+        self._finished = False
+        # Running prefix per group: the function-monoid fold of everything
+        # consumed so far, carried across block calls.
+        self._prefix = [
+            np.broadcast_to(
+                np.arange(g.n, dtype=np.int32), (len(g.indices), g.n)
+            ).copy()
+            for g in scanner.groups
+        ]
+
+    # -- feeding ------------------------------------------------------------
+
+    def feed(self, piece) -> None:
+        """Append one piece of the input (str or 1-D int array)."""
+        if self._finished:
+            raise RuntimeError("stream already finished")
+        enc = (self.scanner.encode(piece) if isinstance(piece, str)
+               else np.asarray(piece, dtype=np.int32))
+        if enc.ndim != 1:
+            raise ValueError("stream pieces must be 1-D (one input's symbols)")
+        self._n_symbols += len(enc)
+        self._buf = np.concatenate([self._buf, enc]) if len(self._buf) else enc
+        while len(self._buf) >= self.super_len:
+            block = self._buf[: self.super_len]
+            self._buf = self._buf[self.super_len:]
+            self._advance(block)
+
+    def _advance(self, block: np.ndarray) -> None:
+        """Fold one full (n_chunks * block_len) block into the prefix."""
+        for gi, g in enumerate(self.scanner.groups):
+            bm = self._block_mapping(g, block)              # (Pg, n)
+            # combine(prefix, block): apply prefix first, then the block.
+            self._prefix[gi] = np.take_along_axis(bm, self._prefix[gi], axis=1)
+
+    def _block_mapping(self, g: "PatternGroup", block: np.ndarray) -> np.ndarray:
+        backend = self.scanner.plan.backend
+        if backend == "reference":
+            from .scanner import _reference_doc_mappings
+
+            return _reference_doc_mappings(g.bank.tables, block[None, :])[:, 0]
+        if backend == "pallas":
+            corpus = jnp.asarray(block[None, :])
+            if g.mode == "sfa":
+                out = X.bank_doc_mappings_sfa_pallas(
+                    g.deltas, g.sfa_maps, corpus, self.n_chunks
+                )
+            else:
+                out = X.bank_doc_mappings_pallas(g.tables, corpus, self.n_chunks)
+            return np.array(out[:, 0, :])
+        # xla (shard_map distribution still computes blocks locally: a block
+        # is one device's worth of work by construction)
+        syms = jnp.asarray(block)
+        if g.mode == "sfa":
+            out = X.match_bank_parallel_sfa(
+                g.deltas, g.sfa_maps, syms, self.n_chunks
+            )
+        else:
+            out = X.match_bank_parallel(g.tables, syms, self.n_chunks)
+        return np.array(out)
+
+    # -- finishing ----------------------------------------------------------
+
+    def finish(self) -> StreamResult:
+        """Compose the ragged tail, read off accepts, and close the stream."""
+        if self._finished:
+            raise RuntimeError("stream already finished")
+        self._finished = True
+        sc = self.scanner
+        if len(self._buf):
+            for gi, g in enumerate(sc.groups):
+                self._prefix[gi] = X.compose_sequential(
+                    g.bank.tables, self._prefix[gi], self._buf
+                )
+            self._buf = np.zeros(0, dtype=np.int32)
+
+        mapping = np.broadcast_to(
+            np.arange(sc.n_max, dtype=np.int32), (sc.n_patterns, sc.n_max)
+        ).copy()
+        final_states = np.zeros(sc.n_patterns, dtype=np.int32)
+        accepted = np.zeros(sc.n_patterns, dtype=bool)
+        for gi, g in enumerate(sc.groups):
+            pref = self._prefix[gi]                          # (Pg, n_g)
+            mapping[g.indices, : g.n] = pref
+            rows = np.arange(len(g.indices))
+            finals = pref[rows, g.bank.starts]
+            final_states[g.indices] = finals
+            accepted[g.indices] = g.bank.accepting[rows, finals]
+        return StreamResult(
+            mapping=mapping,
+            final_states=final_states,
+            accepted=accepted,
+            n_symbols=self._n_symbols,
+            ids=sc.ids,
+            single=sc.single,
+        )

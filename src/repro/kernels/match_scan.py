@@ -9,13 +9,15 @@ contractions instead of gathers:
     v'[b, q]    = Σ_j onehot(v)[b, q, j] · cols[b, j]
 
 ``table_T`` is the paper's transposed (symbol-major) table — here it is
-pinned in VMEM for the whole chunk, which is the TPU restatement of the
-paper's L1-locality argument (§III-B3): one HBM read of the table serves
+pinned in VMEM for the whole chunk block, which is the TPU restatement of
+the paper's L1-locality argument (§III-B3): one HBM read of the table serves
 every character of every chunk in the block.
 
-The kernel processes one chunk per grid cell with the time loop inside
-(``fori_loop``), so the sequential dependency stays on-chip; chunk-level
-parallelism comes from the grid.
+Both kernels process ``block_b`` chunks per grid cell with the time loop
+inside (``fori_loop``), so the sequential dependency stays on-chip; chunk-
+level parallelism comes from the grid, and the per-cell chunk block amortizes
+the table fetch across ``block_b`` chunks (the same ``block_*`` tiling knob
+the fingerprint/compose kernels expose).
 """
 
 from __future__ import annotations
@@ -27,116 +29,123 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _chunk_block_body(table_t, syms, out_ref, out_prefix=()):
+    """Run the all-states time loop for every chunk row of ``syms`` and write
+    each result row into ``out_ref`` at ``out_prefix + (row,)``."""
+    k, n = table_t.shape
+    bb, L = syms.shape
+
+    def one_chunk(b, _):
+        def step(t, v):
+            sym = syms[b, t]
+            sym_onehot = (
+                jax.lax.broadcasted_iota(jnp.int32, (1, k), 1) == sym
+            ).astype(jnp.float32)                            # (1, k)
+            cols = jax.lax.dot_general(                      # (1, n) = δ(., sym)
+                sym_onehot, table_t, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            v_onehot = (
+                v[:, None] == jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+            ).astype(jnp.float32)                            # (n, n)
+            nxt = jax.lax.dot_general(                       # (n, 1)
+                v_onehot, cols.T, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            return nxt[:, 0].astype(jnp.int32)
+
+        v0 = jax.lax.iota(jnp.int32, n)
+        out = jax.lax.fori_loop(0, L, step, v0)
+        out_ref[out_prefix + (pl.dslice(b, 1), slice(None))] = out[None]
+        return 0
+
+    jax.lax.fori_loop(0, bb, one_chunk, 0)
+
+
 def _match_kernel(table_t_ref, chunks_ref, out_ref):
     table_t = table_t_ref[...].astype(jnp.float32)       # (k, n)
-    syms = chunks_ref[...]                               # (1, L) int32
-    k, n = table_t.shape
-    L = syms.shape[-1]
-
-    def step(t, v):
-        sym = syms[0, t]
-        sym_onehot = (
-            jax.lax.broadcasted_iota(jnp.int32, (1, k), 1) == sym
-        ).astype(jnp.float32)                            # (1, k)
-        cols = jax.lax.dot_general(                      # (1, n) = δ(., sym)
-            sym_onehot, table_t, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        v_onehot = (
-            v[:, None] == jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
-        ).astype(jnp.float32)                            # (n, n)
-        nxt = jax.lax.dot_general(                       # (n, 1)
-            v_onehot, cols.T, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        return nxt[:, 0].astype(jnp.int32)
-
-    v0 = jax.lax.iota(jnp.int32, n)
-    out_ref[...] = jax.lax.fori_loop(0, L, step, v0)[None]
+    syms = chunks_ref[...]                               # (block_b, L) int32
+    _chunk_block_body(table_t, syms, out_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def match_chunks_pallas(
     table: jnp.ndarray,
     chunks: jnp.ndarray,
     *,
+    block_b: int = 8,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """table: (n, k) int32; chunks: (B, L) int32 -> (B, n) chunk mappings."""
+    """table: (n, k) int32; chunks: (B, L) int32 -> (B, n) chunk mappings.
+
+    ``block_b`` chunks share one grid cell (and one VMEM table residency);
+    B pads up to a multiple of ``block_b`` and the padding is cropped.
+    """
     n, k = table.shape
     B, L = chunks.shape
+    block_b = min(block_b, B)
+    pad = (-B) % block_b
+    if pad:
+        chunks = jnp.concatenate(
+            [chunks, jnp.zeros((pad, L), dtype=chunks.dtype)], axis=0
+        )
     table_t = table.T  # symbol-major (paper §III-B3)
     out = pl.pallas_call(
         _match_kernel,
-        grid=(B,),
+        grid=((B + pad) // block_b,),
         in_specs=[
             pl.BlockSpec((k, n), lambda b: (0, 0)),
-            pl.BlockSpec((1, L), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, L), lambda b: (b, 0)),
         ],
-        out_specs=pl.BlockSpec((1, n), lambda b: (b, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, n), jnp.int32),
+        out_specs=pl.BlockSpec((block_b, n), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B + pad, n), jnp.int32),
         interpret=interpret,
     )(table_t, chunks)
-    return out
+    return out[:B]
 
 
 def _match_bank_kernel(table_t_ref, chunks_ref, out_ref):
-    """One (pattern, chunk) grid cell: same time loop as ``_match_kernel``
-    with the pattern's transposed table as the VMEM-resident block."""
+    """One (pattern, chunk-block) grid cell: the pattern's transposed table
+    stays VMEM-resident across every chunk of the block."""
     table_t = table_t_ref[0].astype(jnp.float32)         # (k, n)
-    syms = chunks_ref[...]                               # (1, L) int32
-    k, n = table_t.shape
-    L = syms.shape[-1]
-
-    def step(t, v):
-        sym = syms[0, t]
-        sym_onehot = (
-            jax.lax.broadcasted_iota(jnp.int32, (1, k), 1) == sym
-        ).astype(jnp.float32)                            # (1, k)
-        cols = jax.lax.dot_general(                      # (1, n) = δ_p(., sym)
-            sym_onehot, table_t, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        v_onehot = (
-            v[:, None] == jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
-        ).astype(jnp.float32)                            # (n, n)
-        nxt = jax.lax.dot_general(                       # (n, 1)
-            v_onehot, cols.T, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        return nxt[:, 0].astype(jnp.int32)
-
-    v0 = jax.lax.iota(jnp.int32, n)
-    out_ref[...] = jax.lax.fori_loop(0, L, step, v0)[None, None]
+    syms = chunks_ref[...]                               # (block_b, L) int32
+    _chunk_block_body(table_t, syms, out_ref, out_prefix=(0,))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def match_bank_chunks_pallas(
     tables: jnp.ndarray,
     chunks: jnp.ndarray,
     *,
+    block_b: int = 8,
     interpret: bool = True,
 ) -> jnp.ndarray:
     """Multi-automaton chunk matching: every (pattern, chunk) cell at once.
 
     ``tables``: (P, n, k) int32 padded bank stack; ``chunks``: (B, L) int32
-    -> (P, B, n) chunk mappings. The grid is ``(pattern, chunk)`` with the
-    chunk axis innermost, so the VMEM-resident transposed table block is
+    -> (P, B, n) chunk mappings. The grid is ``(pattern, chunk-block)`` with
+    the chunk axis innermost, so the VMEM-resident transposed table block is
     swapped once per *pattern* and stays hot across all B chunks of that
     pattern — the §III-B3 table-locality argument applied to the bank axis.
     """
     Pn, n, k = tables.shape
     B, L = chunks.shape
+    block_b = min(block_b, B)
+    pad = (-B) % block_b
+    if pad:
+        chunks = jnp.concatenate(
+            [chunks, jnp.zeros((pad, L), dtype=chunks.dtype)], axis=0
+        )
     tables_t = jnp.swapaxes(tables, 1, 2)  # (P, k, n) symbol-major per pattern
     out = pl.pallas_call(
         _match_bank_kernel,
-        grid=(Pn, B),
+        grid=(Pn, (B + pad) // block_b),
         in_specs=[
             pl.BlockSpec((1, k, n), lambda p, b: (p, 0, 0)),
-            pl.BlockSpec((1, L), lambda p, b: (b, 0)),
+            pl.BlockSpec((block_b, L), lambda p, b: (b, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, n), lambda p, b: (p, b, 0)),
-        out_shape=jax.ShapeDtypeStruct((Pn, B, n), jnp.int32),
+        out_specs=pl.BlockSpec((1, block_b, n), lambda p, b: (p, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((Pn, B + pad, n), jnp.int32),
         interpret=interpret,
     )(tables_t, chunks)
-    return out
+    return out[:, :B]

@@ -8,6 +8,8 @@ from the active backend so call-sites never branch.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -18,7 +20,10 @@ from .compose import compose_pallas
 from .match_scan import match_bank_chunks_pallas, match_chunks_pallas
 
 
+@functools.lru_cache(maxsize=None)
 def _default_interpret() -> bool:
+    """Cached backend probe: the active platform cannot change mid-process,
+    so ``jax.default_backend()`` (which can trigger backend init) runs once."""
     return jax.default_backend() != "tpu"
 
 
@@ -55,21 +60,29 @@ def match_chunks(
     table: jnp.ndarray,
     chunks: jnp.ndarray,
     *,
+    block_b: int = 8,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Per-chunk transition functions: (n, k), (B, L) -> (B, n)."""
+    """Per-chunk transition functions: (n, k), (B, L) -> (B, n).
+
+    ``block_b`` chunks share one grid cell / VMEM table residency (the same
+    block-tiling knob as ``fingerprint``/``compose``).
+    """
     if interpret is None:
         interpret = _default_interpret()
-    return match_chunks_pallas(table, chunks, interpret=interpret)
+    return match_chunks_pallas(table, chunks, block_b=block_b,
+                               interpret=interpret)
 
 
 def match_bank_chunks(
     tables: jnp.ndarray,
     chunks: jnp.ndarray,
     *,
+    block_b: int = 8,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Multi-automaton chunk functions: (P, n, k), (B, L) -> (P, B, n)."""
     if interpret is None:
         interpret = _default_interpret()
-    return match_bank_chunks_pallas(tables, chunks, interpret=interpret)
+    return match_bank_chunks_pallas(tables, chunks, block_b=block_b,
+                                    interpret=interpret)

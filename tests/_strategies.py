@@ -13,7 +13,8 @@ import ``given, settings, st`` from here:
 * without it, ``@given`` runs the test body over deterministic seeded-random
   examples (seed derived from the test name + example index, so failures
   reproduce across runs and machines) for the strategies the suite actually
-  uses: ``integers``, ``sampled_from``, ``lists``, ``text``, ``booleans``.
+  uses: ``integers``, ``sampled_from``, ``lists``, ``text``, ``booleans``,
+  ``tuples``, ``one_of``.
 
 The fallback deliberately does NOT shrink — it exists to keep the properties
 exercised offline, not to replace hypothesis.
@@ -63,6 +64,15 @@ except ImportError:
                 return [elements.draw(rng) for _ in range(size)]
 
             return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+        @staticmethod
+        def one_of(*strategies):
+            choices = list(strategies)
+            return _Strategy(lambda rng: rng.choice(choices).draw(rng))
 
         @staticmethod
         def text(alphabet="abcdefghijklmnopqrstuvwxyz", min_size=0, max_size=20):

@@ -1,0 +1,354 @@
+"""The Scanner engine: one entry point, every configuration, one answer.
+
+Differential tests pin the engine's core contract: every (mode, backend,
+distribution, chunking) plan produces bit-identical results, ``auto`` mode
+picks SFA exactly when construction fits the budget, ``stream()`` equals
+``scan()`` on the concatenated input, and every pre-engine entry point still
+imports, warns once, and matches the engine's answer.
+"""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _strategies import given, settings, st
+
+from repro.compat import make_mesh
+from repro.core.dfa import random_dfa
+from repro.core.prosite import PROSITE_SAMPLES, compile_prosite, load_bank, synthetic_protein
+from repro.core.sfa import StateBlowup, construct_sfa
+from repro.engine import ChunkPolicy, ScanPlan, Scanner
+from repro.engine import deprecation
+
+
+def _random_docs(seed, n_docs, length, k):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, k, size=(n_docs, length)).astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# Plans / compilation
+# --------------------------------------------------------------------------
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        ScanPlan(mode="magic").validate()
+    with pytest.raises(ValueError):
+        ScanPlan(backend="cuda").validate()
+    with pytest.raises(ValueError):
+        ScanPlan(distribution="shard_map", backend="pallas").validate()
+    with pytest.raises(ValueError):
+        ScanPlan(chunking=ChunkPolicy(n_chunks=0)).validate()
+    assert ScanPlan().with_(mode="sfa").mode == "sfa"
+
+
+def test_compile_accepts_all_pattern_forms():
+    dfa = compile_prosite("R-G-D")
+    bank = load_bank(["PS00016", "PS00001"])
+    for pats, n in [
+        ("PS00016", 1),                      # bundled PROSITE id
+        ("R-G-D", 1),                        # PROSITE signature syntax
+        (dfa, 1),                            # compiled DFA
+        (bank, 2),                           # PatternBank
+        (["PS00016", dfa], 2),               # mixed sequence
+        ({"a": "R-G-D", "b": "C-x(2)-C"}, 2),  # mapping
+    ]:
+        sc = Scanner.compile(pats)
+        assert sc.n_patterns == n
+    assert Scanner.compile("PS00016").single
+    assert not Scanner.compile(["PS00016"]).single
+
+
+def test_auto_mode_respects_state_budget():
+    """The acceptance criterion: SFA iff construction fits the budget."""
+    sc = Scanner.compile(["PS00016", "PS00008"],
+                         ScanPlan(mode="auto", sfa_state_budget=20))
+    assert sc.pattern_modes["PS00016"] == "sfa"       # tiny SFA
+    assert sc.pattern_modes["PS00008"] == "enumeration"  # blows the budget
+    # the budget really is the boundary: PS00016's SFA fits in 20 states
+    assert construct_sfa(compile_prosite(
+        PROSITE_SAMPLES["PS00016"])).n_states <= 20
+    with pytest.raises(StateBlowup):
+        Scanner.compile("PS00008", ScanPlan(mode="sfa", sfa_state_budget=20))
+
+
+# --------------------------------------------------------------------------
+# auto == sfa == enumeration (property, random DFAs)
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    cfg=st.tuples(st.integers(min_value=0, max_value=400),
+                  st.sampled_from([1, 2, 4])),
+    forced=st.one_of(st.sampled_from(["sfa"]), st.sampled_from(["enumeration"])),
+)
+def test_auto_agrees_with_forced_modes(cfg, forced):
+    seed, n_chunks = cfg
+    k = 5
+    dfas = [random_dfa(3 + (seed + i) % 3, k, seed=seed * 7 + i) for i in range(3)]
+    docs = _random_docs(seed, 4, 33, k)  # 33: exercises the ragged tail
+    plan = ScanPlan(mode="auto", sfa_state_budget=10_000,
+                    chunking=ChunkPolicy(n_chunks=n_chunks))
+    auto = Scanner.compile(dfas, plan).scan(docs).hits
+    other = Scanner.compile(dfas, plan.with_(mode=forced)).scan(docs).hits
+    assert np.array_equal(auto, other)
+    # and both agree with the plain sequential DFA
+    for p, d in enumerate(dfas):
+        for j in range(docs.shape[0]):
+            assert auto[p, j] == bool(d.accepting[d.run(docs[j])]), (p, j)
+
+
+# --------------------------------------------------------------------------
+# Backends bit-identical on the bundled PROSITE bank
+# --------------------------------------------------------------------------
+
+
+def test_backends_bit_identical_on_bundled_bank():
+    bank = load_bank()
+    docs = [synthetic_protein(48, seed=i) for i in range(3)]
+    plan = ScanPlan(mode="auto", chunking=ChunkPolicy(n_chunks=4))
+    results = {}
+    mappings = {}
+    for backend in ("reference", "xla", "pallas"):
+        sc = Scanner.compile(bank, plan.with_(backend=backend))
+        results[backend] = sc.scan(docs).hits
+        mappings[backend] = sc.mapping(docs[0])
+    # mixed modes were actually exercised under the default budget
+    sc = Scanner.compile(bank, plan)
+    assert {"sfa", "enumeration"} <= set(sc.pattern_modes.values())
+    assert np.array_equal(results["reference"], results["xla"])
+    assert np.array_equal(results["xla"], results["pallas"])
+    assert np.array_equal(mappings["reference"], mappings["xla"])
+    assert np.array_equal(mappings["xla"], mappings["pallas"])
+
+
+def test_shard_map_distribution_matches_local():
+    k = 6
+    dfas = [random_dfa(4 + i, k, seed=50 + i) for i in range(3)]
+    docs = _random_docs(5, 4, 32, k)
+    plan = ScanPlan(mode="auto", sfa_state_budget=10_000,
+                    chunking=ChunkPolicy(n_chunks=4))
+    local = Scanner.compile(dfas, plan).scan(docs).hits
+    dist = Scanner.compile(
+        dfas, plan.with_(distribution="shard_map",
+                         mesh=make_mesh((1,), ("data",)))
+    ).scan(docs).hits
+    assert np.array_equal(local, dist)
+
+
+def test_bucketed_plan_matches_unbucketed():
+    k = 6
+    dfas = [random_dfa(n, k, seed=60 + n) for n in (2, 3, 9, 17, 5)]
+    docs = _random_docs(6, 3, 40, k)
+    plan = ScanPlan(mode="enumeration", chunking=ChunkPolicy(n_chunks=4))
+    plain = Scanner.compile(dfas, plan).scan(docs).hits
+    bucketed = Scanner.compile(dfas, plan.with_(
+        chunking=ChunkPolicy(n_chunks=4, bucket=True, bucket_edges=(4, 8, 16))
+    )).scan(docs).hits
+    assert np.array_equal(plain, bucketed)
+
+
+# --------------------------------------------------------------------------
+# stream() == scan() (property: arbitrary piece splits, every backend)
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=200),
+    sizes=st.lists(st.integers(min_value=1, max_value=57),
+                   min_size=1, max_size=8),
+    backend=st.sampled_from(["xla", "pallas", "reference"]),
+)
+def test_stream_equals_scan_on_concatenation(seed, sizes, backend):
+    k = 5
+    dfas = [random_dfa(3 + i, k, seed=seed * 3 + i) for i in range(2)]
+    plan = ScanPlan(mode="auto", sfa_state_budget=10_000, backend=backend,
+                    chunking=ChunkPolicy(n_chunks=2, block_len=8))
+    sc = Scanner.compile(dfas, plan)
+    # corpus >= 8x the (n_chunks * block_len) super-block, plus a ragged tail
+    rng = np.random.default_rng(seed)
+    total = 8 * (2 * 8) + int(rng.integers(0, 23))  # 8 super-blocks + tail
+    corpus = rng.integers(0, k, size=total).astype(np.int32)
+    # split the corpus into the drawn piece sizes (cycled to cover it all)
+    pieces, lo, i = [], 0, 0
+    while lo < total:
+        hi = min(total, lo + sizes[i % len(sizes)])
+        pieces.append(corpus[lo:hi])
+        lo, i = hi, i + 1
+    res = sc.stream(pieces)
+    assert res.n_symbols == total
+    assert np.array_equal(res.mapping, sc.mapping(corpus))
+    assert np.array_equal(res.accepted, sc.scan([corpus]).hits[:, 0])
+
+
+def test_stream_session_push_api_and_reuse_errors():
+    sc = Scanner.compile("R-G-D", ScanPlan(
+        chunking=ChunkPolicy(n_chunks=2, block_len=8)))
+    text = synthetic_protein(200, seed=0) + "RGD"
+    sess = sc.open_stream()
+    for i in range(0, len(text), 31):
+        sess.feed(text[i: i + 31])
+    res = sess.finish()
+    assert res.accepts is True
+    assert res.single
+    with pytest.raises(RuntimeError):
+        sess.feed("AAA")
+    with pytest.raises(RuntimeError):
+        sess.finish()
+
+
+def test_stream_matches_scan_on_long_corpus():
+    """Acceptance: corpus >= 8x the chunk-block size, block-parallel path hot."""
+    plan = ScanPlan(mode="auto", chunking=ChunkPolicy(n_chunks=4, block_len=16))
+    sc = Scanner.compile(["PS00016", "PS00001"], plan)
+    text = synthetic_protein(4 * 16 * 11 + 7, seed=3)   # 11 full super-blocks
+    res = sc.stream(text[i: i + 100] for i in range(0, len(text), 100))
+    assert np.array_equal(res.accepted, sc.scan([text]).hits[:, 0])
+    assert np.array_equal(res.mapping, sc.mapping(text))
+
+
+# --------------------------------------------------------------------------
+# Legacy entry points: import, warn once, agree with the engine
+# --------------------------------------------------------------------------
+
+LEGACY_NAMES = [
+    ("repro.core.matching", "match_parallel_enumeration"),
+    ("repro.core.matching", "match_parallel_sfa"),
+    ("repro.core.matching", "find_matches_parallel"),
+    ("repro.core.matching", "accepts_parallel"),
+    ("repro.core.matching", "distributed_match_fn"),
+    ("repro.core.matching", "throughput_matcher"),
+    ("repro.core.multipattern", "match_bank_parallel"),
+    ("repro.core.multipattern", "bank_hits"),
+    ("repro.core.multipattern", "census_bank"),
+    ("repro.core.multipattern", "distributed_bank_matcher"),
+    ("repro.core.multipattern", "distributed_census_fn"),
+]
+
+
+def test_legacy_names_all_importable():
+    import importlib
+
+    for module, name in LEGACY_NAMES:
+        fn = getattr(importlib.import_module(module), name)
+        assert callable(fn), f"{module}.{name}"
+        # and still re-exported from repro.core
+        import repro.core
+
+        assert getattr(repro.core, name) is fn
+
+
+def test_legacy_shims_warn_once_and_match_engine():
+    from repro.core import matching as mt
+    from repro.core import multipattern as mp
+    from repro.core.multipattern import PatternBank
+    from repro.engine import executors as X
+
+    k = 6
+    dfas = [random_dfa(n, k, seed=70 + n) for n in (3, 5, 4)]
+    bank = PatternBank.from_dfas(dfas)
+    tables, accepting, starts = bank.device_arrays()
+    rng = np.random.default_rng(7)
+    syms = rng.integers(0, k, size=64).astype(np.int32)
+    corpus = rng.integers(0, k, size=(4, 32)).astype(np.int32)
+    d0 = dfas[0]
+    sfa0 = construct_sfa(d0)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    mesh1 = make_mesh((1,), ("data",))
+
+    deprecation.reset()
+    calls = {
+        "match_parallel_enumeration": lambda: mt.match_parallel_enumeration(
+            jnp.asarray(d0.table), jnp.asarray(syms), 4),
+        "match_parallel_sfa": lambda: mt.match_parallel_sfa(
+            jnp.asarray(sfa0.delta), jnp.asarray(sfa0.mappings),
+            jnp.asarray(syms), 4),
+        "find_matches_parallel": lambda: mt.find_matches_parallel(
+            jnp.asarray(d0.table), jnp.asarray(d0.accepting),
+            jnp.asarray(syms), d0.start, 4),
+        "accepts_parallel": lambda: mt.accepts_parallel(
+            d0, "".join(d0.alphabet[i] for i in syms), 4),
+        "distributed_match_fn": lambda: mt.distributed_match_fn(
+            mesh1, d0.table.shape)(jnp.asarray(d0.table), jnp.asarray(syms), 4),
+        "throughput_matcher": lambda: mt.throughput_matcher(
+            mesh1, start=d0.start)(jnp.asarray(d0.table),
+                                   jnp.asarray(d0.accepting),
+                                   jnp.asarray(corpus)),
+        "match_bank_parallel": lambda: mp.match_bank_parallel(
+            tables, jnp.asarray(syms), 4),
+        "bank_hits": lambda: mp.bank_hits(
+            tables, accepting, starts, jnp.asarray(corpus), 4),
+        "census_bank": lambda: mp.census_bank(
+            tables, accepting, starts, jnp.asarray(corpus), 4),
+        "distributed_bank_matcher": lambda: mp.distributed_bank_matcher(mesh)(
+            tables, jnp.asarray(syms), 4),
+        "distributed_census_fn": lambda: mp.distributed_census_fn(
+            mesh, n_chunks=4)(tables, accepting, starts, jnp.asarray(corpus)),
+    }
+    assert set(n for _, n in LEGACY_NAMES) == set(calls)
+
+    results = {}
+    for name, call in calls.items():
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            results[name] = np.asarray(call())
+            call()  # second call must NOT warn again
+        got = [x for x in w if issubclass(x.category, DeprecationWarning)]
+        assert len(got) == 1, f"{name}: {len(got)} DeprecationWarnings"
+        assert name in str(got[0].message)
+
+    # identical results: legacy shims vs the engine executors / Scanner
+    assert np.array_equal(
+        results["match_parallel_enumeration"],
+        np.asarray(X.match_parallel_enumeration(jnp.asarray(d0.table),
+                                                jnp.asarray(syms), 4)))
+    assert int(results["match_parallel_sfa"][d0.start]) == d0.run(syms)
+    assert np.array_equal(
+        results["match_bank_parallel"],
+        np.asarray(X.match_bank_parallel(tables, jnp.asarray(syms), 4)))
+    sc = Scanner.compile(dfas, ScanPlan(mode="enumeration",
+                                        chunking=ChunkPolicy(n_chunks=4)))
+    assert np.array_equal(results["bank_hits"], sc.scan(corpus).hits)
+    assert np.array_equal(results["census_bank"], sc.census(corpus))
+    assert np.array_equal(results["distributed_census_fn"], sc.census(corpus))
+    assert np.array_equal(results["distributed_bank_matcher"],
+                          results["match_bank_parallel"])
+
+
+# --------------------------------------------------------------------------
+# kernels/ops block kwarg (satellite): blocked == unblocked
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("block_b", [1, 3, 8, 64])
+def test_match_chunks_block_b_invariant(block_b):
+    from repro.kernels import ops
+
+    d = random_dfa(6, 5, seed=9)
+    chunks = jnp.asarray(
+        np.random.default_rng(9).integers(0, 5, size=(5, 12)), dtype=jnp.int32)
+    want = ops.match_chunks(jnp.asarray(d.table), chunks, block_b=1,
+                            interpret=True)
+    got = ops.match_chunks(jnp.asarray(d.table), chunks, block_b=block_b,
+                           interpret=True)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("block_b", [1, 2, 8])
+def test_match_bank_chunks_block_b_invariant(block_b):
+    from repro.core.multipattern import PatternBank
+    from repro.kernels import ops
+
+    bank = PatternBank.from_dfas(
+        [random_dfa(n, 4, seed=80 + n) for n in (3, 7)])
+    chunks = jnp.asarray(
+        np.random.default_rng(8).integers(0, 4, size=(3, 10)), dtype=jnp.int32)
+    tables = jnp.asarray(bank.tables)
+    want = ops.match_bank_chunks(tables, chunks, block_b=1, interpret=True)
+    got = ops.match_bank_chunks(tables, chunks, block_b=block_b,
+                                interpret=True)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
