@@ -1,18 +1,28 @@
 """Paper Fig. 4: speedup of fingerprints and hashing over the sequential
-baseline SFA construction.
+baseline SFA construction — plus the bank-construction suite.
 
 Three sequential variants (baseline exhaustive-compare, +fingerprints,
 +fingerprints+hashing) run over a ladder of PROSITE-derived DFAs; reported
 exactly as the paper plots it: fp-vs-baseline and hash-vs-fp speedups.
+
+``run_bank`` measures the batched bank closure
+(:func:`repro.construction.construct_bank`: all ``P`` frontiers advance in
+one jitted bulk-synchronous round) against the sequential per-pattern loop
+for bank sizes {4, 16, 64}, and writes the comparison to
+``BENCH_construction.json`` (uploaded as a CI artifact by the bench-smoke
+job).
 """
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 from benchmarks import _config
+from repro.construction import construct_bank
 from repro.core.dfa import DFA, compile_dfa
-from repro.core.prosite import PROSITE_SAMPLES, compile_prosite
+from repro.core.prosite import PROSITE_EXTRA, PROSITE_SAMPLES, compile_prosite
 from repro.core.sfa import construct_sfa_sequential
 
 # small-to-medium patterns that the O(|Q_s|^2) baseline can still finish;
@@ -50,3 +60,73 @@ def run(emit) -> None:
              f"{t_base / t_fp:.2f}x_vs_baseline")
         emit(f"fig4/{pid}/hashing_speedup", t_hash * 1e6,
              f"{t_fp / t_hash:.2f}x_vs_fingerprints,total={t_base / t_hash:.2f}x")
+
+
+# --------------------------------------------------------------------------
+# Bank construction: batched bulk-synchronous rounds vs sequential loop
+# --------------------------------------------------------------------------
+
+BANK_SIZES = (4, 16, 64)
+SMOKE_BANK_SIZES = (4,)
+BANK_BUDGET = 512          # the Scanner's default SFA state budget
+BANK_TILE = 64
+
+# Banks are drawn from the bundled tractable signatures, cycled (with a
+# distinct suffix) past the roster size; patterns whose SFA blows the budget
+# stay in the mix — a realistic bank is a blend of closers and blowers.
+_BANK_ROSTER = [
+    "PS00016", "PS00005", "PS00001", "PS00006", "PS00009", "PS00004",
+    "SYN00001", "SYN00008", "PS00002", "SYN00005", "SYN00010", "SYN00006",
+    "PS00014", "PS00342", "SYN00004", "SYN00002", "SYN00009", "SYN00007",
+    "PS00008", "SYN00003", "PS00017", "PS00007", "PS00010",
+]
+
+
+def _bank_dfas(P: int) -> list:
+    pool = {**PROSITE_SAMPLES, **PROSITE_EXTRA}
+    return [
+        compile_prosite(pool[_BANK_ROSTER[i % len(_BANK_ROSTER)]])
+        for i in range(P)
+    ]
+
+
+def run_bank(emit) -> None:
+    report = {
+        "suite": "bank_construction",
+        "budget": BANK_BUDGET,
+        "tile": BANK_TILE,
+        "smoke": _config.SMOKE,
+        "results": [],
+    }
+    for P in _config.scaled(BANK_SIZES, SMOKE_BANK_SIZES):
+        dfas = _bank_dfas(P)
+        t_loop = _time(lambda: construct_bank(
+            dfas, method="loop", max_states=BANK_BUDGET))
+        last = {}
+
+        def batched():
+            last["res"] = construct_bank(
+                dfas, method="batched", max_states=BANK_BUDGET, tile=BANK_TILE)
+
+        # repeat=2: the first batched call pays the XLA compile, the best-of
+        # reports the warm round cost (what a long-lived scanner service sees).
+        t_batched = _time(batched, repeat=2)
+        res = last["res"]
+        row = {
+            "P": P,
+            "loop_s": t_loop,
+            "batched_s": t_batched,
+            "loop_patterns_per_s": P / t_loop,
+            "batched_patterns_per_s": P / t_batched,
+            "batched_speedup": t_loop / t_batched,
+            "rounds": int(res.stats.rounds),
+            "blown": int(res.blown.sum()),
+        }
+        report["results"].append(row)
+        emit(f"bank/P{P}/loop_s", t_loop * 1e6,
+             f"{row['loop_patterns_per_s']:.1f}_patterns_per_s")
+        emit(f"bank/P{P}/batched_s", t_batched * 1e6,
+             f"{row['batched_speedup']:.2f}x_vs_loop,"
+             f"rounds={row['rounds']},blown={row['blown']}")
+    out = Path(__file__).resolve().parents[1] / "BENCH_construction.json"
+    out.write_text(json.dumps(report, indent=2) + "\n")

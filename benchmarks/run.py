@@ -2,6 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV. Figure mapping:
   fig4    bench_construction          (fingerprints + hashing ablation)
+  bank    bench_construction.run_bank (batched bank closure vs per-pattern
+          loop @ P=4/16/64, writes BENCH_construction.json)
   fig5    bench_parallel_construction (parallel vs best sequential)
   fig6    bench_matching              (chunk-parallel matching scaling)
   census  bench_census                (PROSITE DFA -> SFA growth, §IV)
@@ -51,6 +53,7 @@ def main() -> None:
 
     suites = [
         bench_construction.run,
+        bench_construction.run_bank,
         bench_parallel_construction.run,
         bench_parallel_construction.run_jax_engine,
         bench_matching.run,

@@ -1,0 +1,71 @@
+"""SFA construction — the paper's core contribution, as one subsystem.
+
+Construction used to live in three near-duplicate single-pattern engines
+(``core/sfa.py`` sequential + vectorized, ``core/sfa_jax.py``); it is now
+one worklist closure (:mod:`.worklist`, fixed FIFO-BFS discovery order)
+over pluggable membership stores (:mod:`.stores` — the paper's §III-A
+baseline / fingerprint / hash-table ablation, plus the TPU-idiomatic
+fingerprint-sort bulk store), with three execution shapes:
+
+* :func:`construct_sfa_sequential` / :func:`construct_sfa_vectorized` —
+  scalar and bulk single-pattern closures (NumPy);
+* :func:`construct_sfa_jax` — the jitted fixed-capacity engine, now the
+  ``P = 1`` case of the batched rounds;
+* :func:`construct_bank` — the bank-native path (:mod:`.batched`): all ``P``
+  patterns' frontiers advance simultaneously in one jitted bulk-synchronous
+  round over stacked ``(P, capacity, n_max)`` buffers, with per-pattern
+  done/blowup/collision flags, per-pattern polynomial retry, host-side
+  compaction of finished patterns, and ``distribution="shard_map"``
+  sharding patterns across devices.
+
+All engines produce bit-identical exact SFAs (equal fingerprints never merge
+states silently), which is what makes the content-addressed :class:`SFACache`
+(:mod:`.cache`) sound: ``repro.engine.Scanner`` consults the shared cache so
+recompiling the same patterns performs zero construction rounds.
+
+``core/sfa.py`` and ``core/sfa_jax.py`` remain as thin re-export shims.
+"""
+
+from .cache import CacheInfo, SFACache, dfa_cache_key, shared_cache
+from .batched import construct_bank, construct_sfa_jax
+from .single import (
+    construct_sfa,
+    construct_sfa_sequential,
+    construct_sfa_vectorized,
+)
+from .stores import (
+    ExhaustiveStore,
+    FingerprintScanStore,
+    HashChainStore,
+    SortedFingerprintStore,
+)
+from .types import (
+    SFA,
+    BankConstructionResult,
+    BankStats,
+    FingerprintCollision,
+    SFAStats,
+    StateBlowup,
+)
+
+__all__ = [
+    "BankConstructionResult",
+    "BankStats",
+    "CacheInfo",
+    "ExhaustiveStore",
+    "FingerprintCollision",
+    "FingerprintScanStore",
+    "HashChainStore",
+    "SFA",
+    "SFACache",
+    "SFAStats",
+    "SortedFingerprintStore",
+    "StateBlowup",
+    "construct_bank",
+    "construct_sfa",
+    "construct_sfa_jax",
+    "construct_sfa_sequential",
+    "construct_sfa_vectorized",
+    "dfa_cache_key",
+    "shared_cache",
+]

@@ -1,0 +1,612 @@
+"""Batched SFA construction: every pattern's frontier advances at once.
+
+The paper's headline result is *construction* speed through task-level
+parallelism: hundreds of PROSITE signatures, each an independent worklist
+closure. This module expresses that task parallelism as a batch dimension.
+``construct_bank`` pads ``P`` DFAs to a common state count (the
+``PatternBank`` self-loop/identity padding story) and advances **all P
+frontiers simultaneously** in one jitted bulk-synchronous round over stacked
+``(P, capacity, n_max)`` state buffers:
+
+  1. each pattern slices a ``tile`` of unprocessed frontier states;
+  2. frontier × alphabet expands in one fused gather per pattern (vmapped);
+  3. candidates are fingerprinted with *per-pattern* fold constants — a
+     per-pattern word mask zeroes the padding tail, so the fingerprints (and
+     therefore the whole discovery sequence) are bit-identical to the
+     unpadded per-pattern engines;
+  4. membership is the sort-merge of (known ∪ candidates) fingerprints, per
+     pattern, batched by ``vmap`` — one XLA program for the whole bank;
+  5. per-pattern ``done`` / ``blowup`` / ``collision`` flags come back each
+     round. A collided pattern restarts alone with the next irreducible
+     polynomial (per-pattern retry: the other patterns keep their progress);
+     finished or blown patterns are *compacted out* of later rounds on the
+     host (padded to a few bucket sizes so XLA compiles O(log P) shapes, not
+     one per active-set size) — the paper's nonblocking construction: no
+     pattern waits on a straggler's barrier.
+
+``distribution="shard_map"`` shards the pattern axis of every buffer across
+the devices of a mesh, one bank shard per device, with the same host loop
+driving all shards — the multicore experiment of the paper at pod scale.
+
+The single-pattern jitted engine (``construct_sfa_jax``, formerly
+``core/sfa_jax.py``) is the ``P = 1`` special case of the same round.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as PSpec
+
+from ..compat import make_mesh, shard_map as compat_shard_map
+from ..core.dfa import DFA
+from ..core.fingerprint import (
+    BarrettConstants,
+    clmul32,
+    clmul64,
+    fingerprint_states_np,
+    fold_weights_u32,
+    nth_poly_low,
+    pack_states_u32,
+)
+from ..core.multipattern import PatternBank
+from .types import (
+    BankConstructionResult,
+    BankStats,
+    SFA,
+    SFAStats,
+    FingerprintCollision,
+    StateBlowup,
+)
+
+_U32MAX = jnp.uint32(0xFFFFFFFF)
+
+
+# --------------------------------------------------------------------------
+# The jitted round (one pattern; vmapped over the bank axis)
+# --------------------------------------------------------------------------
+
+
+def _masked_fingerprint(states, weights, word_mask, limbs):
+    """Fingerprint padded state vectors with per-pattern constants.
+
+    ``word_mask`` zeroes the packed words of the identity padding tail, so
+    the result equals the fingerprint of the *unpadded* vector — the bit
+    that keeps batched construction bit-identical to the per-pattern
+    engines. ``limbs`` are the Barrett constants as traced u32 scalars
+    [p_hi, p_lo, mu_hi, mu_lo].
+    """
+    words = pack_states_u32(states) & word_mask[None, :]
+    wh = weights[: words.shape[-1], 0]
+    wl = weights[: words.shape[-1], 1]
+    p_lo_h, p_lo_l = clmul32(words, wl)
+    p_hi_h, p_hi_l = clmul32(words, wh)
+
+    def xred(x):
+        return jax.lax.reduce(
+            x, jnp.zeros((), x.dtype), jax.lax.bitwise_xor, (x.ndim - 1,)
+        )
+
+    l0 = xred(p_lo_l)
+    l1 = xred(p_lo_h ^ p_hi_l)
+    l2 = xred(p_hi_h)
+    t1pre = (jnp.zeros_like(l2), l2)
+    m3, m2, _, _ = clmul64(t1pre, (limbs[2], limbs[3]))  # × mu
+    t2pre = (t1pre[0] ^ m3, t1pre[1] ^ m2)
+    _, _, q1, q0 = clmul64(t2pre, (limbs[0], limbs[1]))  # × p
+    return jnp.stack([l1 ^ q1, l0 ^ q0], axis=-1)
+
+
+def _pattern_round(
+    table,            # (n, k) int32 — padded transition table
+    states_buf,       # (C, n) int32
+    fp_hi, fp_lo,     # (C,) uint32
+    delta_buf,        # (C, k) int32
+    n_states,         # () int32
+    frontier_lo,      # () int32
+    active,           # () bool — this pattern still advancing
+    weights,          # (W, 2) uint32 per-pattern fold constants
+    limbs,            # (4,) uint32 per-pattern Barrett constants
+    word_mask,        # (W,) uint32 padding mask
+    *, tile: int, n: int, k: int, capacity: int,
+):
+    """One bulk-synchronous frontier round for one (padded) pattern."""
+    # ---- 1/2: slice frontier tile, fused expansion -------------------------
+    ft = jax.lax.dynamic_slice(states_buf, (frontier_lo, 0), (tile, n))
+    row_ids = frontier_lo + jnp.arange(tile, dtype=jnp.int32)
+    row_valid = (row_ids < n_states) & active            # (T,)
+    # next[f, a, q] = δ(f[q], a): one gather, symbol axis materialized.
+    cand = table[ft]                                     # (T, n, k)
+    cand = jnp.swapaxes(cand, 1, 2).reshape(tile * k, n)  # row-major (f, a)
+    cand_valid = jnp.repeat(row_valid, k)                # (T·k,)
+
+    # ---- 3: fingerprint all candidates (per-pattern constants) --------------
+    fp = _masked_fingerprint(cand, weights, word_mask, limbs)
+    c_hi, c_lo = fp[:, 0], fp[:, 1]
+
+    # ---- 4: sort-merge membership -------------------------------------------
+    C = capacity
+    total = C + tile * k
+    known_valid = jnp.arange(C, dtype=jnp.int32) < n_states
+    inval = jnp.concatenate([(~known_valid), (~cand_valid)]).astype(jnp.uint32)
+    hi = jnp.concatenate([fp_hi, c_hi])
+    lo = jnp.concatenate([fp_lo, c_lo])
+    is_cand = jnp.concatenate(
+        [jnp.zeros(C, jnp.uint32), jnp.ones(tile * k, jnp.uint32)]
+    )
+    payload = jnp.concatenate(
+        [jnp.arange(C, dtype=jnp.int32), jnp.arange(tile * k, dtype=jnp.int32)]
+    )
+    # Sort by (validity, fp_hi, fp_lo, known<cand, original index).
+    tie = payload.astype(jnp.uint32)
+    s_inval, s_hi, s_lo, s_isc, s_tie, s_pay = jax.lax.sort(
+        (inval, hi, lo, is_cand, tie, payload), num_keys=5
+    )
+
+    run_start = jnp.concatenate(
+        [jnp.ones(1, bool),
+         (s_hi[1:] != s_hi[:-1]) | (s_lo[1:] != s_lo[:-1])
+         | (s_inval[1:] != s_inval[:-1])]
+    )
+    pos = jnp.arange(total, dtype=jnp.int32)
+    head_pos = jax.lax.cummax(jnp.where(run_start, pos, -1), axis=0)
+    head_pay = s_pay[head_pos]
+    head_is_known = s_isc[head_pos] == 0
+
+    # New-state heads: candidate-headed runs that are valid.
+    s_valid = s_inval == 0
+    is_new_head = run_start & (s_isc == 1) & s_valid
+    # Rank new heads by original candidate index -> BFS discovery order.
+    rank_key = jnp.where(is_new_head, s_pay, jnp.int32(2**31 - 1))
+    order = jnp.argsort(rank_key)
+    ranks = jnp.zeros(total, jnp.int32).at[order].set(
+        jnp.arange(total, dtype=jnp.int32)
+    )
+    new_id_at_pos = n_states + ranks                     # valid where is_new_head
+
+    # id of each sorted position = head's id.
+    head_new_id = new_id_at_pos[head_pos]
+    id_sorted = jnp.where(head_is_known, head_pay, head_new_id)
+
+    # ---- 5: exactness check (candidates vs run-head vectors) ----------------
+    cand_rows = s_isc == 1
+    ref_known = states_buf[jnp.clip(head_pay, 0, C - 1)]
+    ref_cand = cand[jnp.clip(head_pay, 0, tile * k - 1)]
+    ref_vec = jnp.where(head_is_known[:, None], ref_known, ref_cand)
+    own_vec = cand[jnp.clip(s_pay, 0, tile * k - 1)]
+    mismatch = jnp.any(ref_vec != own_vec, axis=1) & cand_rows & s_valid
+    collision = jnp.any(mismatch)
+
+    # ---- append new states ---------------------------------------------------
+    num_new = jnp.sum(is_new_head.astype(jnp.int32))
+    tgt = jnp.where(is_new_head, new_id_at_pos, C)       # C = out-of-range drop
+    src_vec = cand[jnp.clip(s_pay, 0, tile * k - 1)]
+    states_buf = states_buf.at[tgt].set(src_vec, mode="drop")
+    fp_hi = fp_hi.at[tgt].set(s_hi, mode="drop")
+    fp_lo = fp_lo.at[tgt].set(s_lo, mode="drop")
+
+    # ---- write δ_s rows for the tile -----------------------------------------
+    # Candidate (f, a) order is row-major, so candidate ids scattered back to
+    # original order reshape straight into delta rows.
+    ids_orig = jnp.zeros(tile * k, jnp.int32).at[
+        jnp.where(cand_rows, s_pay, tile * k)
+    ].set(id_sorted, mode="drop")
+    delta_rows = ids_orig.reshape(tile, k)
+    delta_buf = jax.lax.dynamic_update_slice(
+        delta_buf, delta_rows, (frontier_lo, 0)
+    )
+
+    processed = jnp.where(
+        active, jnp.minimum(n_states - frontier_lo, tile), 0
+    )
+    return (
+        states_buf, fp_hi, fp_lo, delta_buf,
+        n_states + num_new, frontier_lo + processed, collision,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "n", "k", "capacity"))
+def _bank_round(tables, states, fp_hi, fp_lo, delta, n_states, frontier,
+                active, weights, limbs, word_mask,
+                *, tile: int, n: int, k: int, capacity: int):
+    """All patterns advance one tile: vmap of :func:`_pattern_round`."""
+    step = functools.partial(
+        _pattern_round, tile=tile, n=n, k=k, capacity=capacity
+    )
+    return jax.vmap(step)(tables, states, fp_hi, fp_lo, delta, n_states,
+                          frontier, active, weights, limbs, word_mask)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_bank_round(mesh, pattern_axis: str, tile: int, n: int, k: int,
+                        capacity: int):
+    """shard_map wrapper of the vmapped round: every buffer's pattern axis
+    shards over ``pattern_axis``; each device closes its bank shard."""
+
+    def local(*args):
+        step = functools.partial(
+            _pattern_round, tile=tile, n=n, k=k, capacity=capacity
+        )
+        return jax.vmap(step)(*args)
+
+    @jax.jit
+    def rounds(*args):
+        fn = compat_shard_map(
+            local,
+            mesh=mesh,
+            in_specs=tuple(PSpec(pattern_axis) for _ in range(11)),
+            out_specs=tuple(PSpec(pattern_axis) for _ in range(7)),
+            check_vma=False,
+        )
+        return fn(*args)
+
+    return rounds
+
+
+# --------------------------------------------------------------------------
+# Host-side bank driver
+# --------------------------------------------------------------------------
+
+
+def _word_mask(n_true: int, n_pad: int) -> np.ndarray:
+    """Packed-word mask selecting the unpadded prefix of a padded vector."""
+    W = (n_pad + 1) // 2
+    m = np.zeros(W, dtype=np.uint32)
+    m[: n_true // 2] = np.uint32(0xFFFFFFFF)
+    if n_true % 2:
+        m[n_true // 2] = np.uint32(0x0000FFFF)
+    return m
+
+
+def _state_cap(n: int, max_states: int) -> int:
+    """min(max_states, n^n): the SFA can never exceed n^n mappings, so small
+    automata get small buffers even under a huge budget."""
+    if n <= 1:
+        return 1
+    if n * math.log2(n) <= 40:
+        return min(max_states, n ** n)
+    return max_states
+
+
+def _bucket_sizes(P: int, quantum: int) -> list:
+    """Active-set padding buckets: halving from P, rounded up to multiples of
+    ``quantum`` (the mesh's pattern-axis size) — O(log P) compiled shapes."""
+
+    def up(x):
+        return max(quantum, ((x + quantum - 1) // quantum) * quantum)
+
+    sizes, b = [], up(P)
+    while True:
+        sizes.append(b)
+        if b == up(1):
+            break
+        b = up((b + 1) // 2)
+    return sorted(set(sizes))
+
+
+def _default_weight_fn(pattern: int, attempt: int, n_words: int,
+                       consts: BarrettConstants) -> np.ndarray:
+    return np.asarray(fold_weights_u32(n_words, consts))
+
+
+def _limbs_of(consts: BarrettConstants) -> np.ndarray:
+    return np.asarray(
+        [
+            (consts.poly_low >> 32) & 0xFFFFFFFF,
+            consts.poly_low & 0xFFFFFFFF,
+            (consts.mu_low >> 32) & 0xFFFFFFFF,
+            consts.mu_low & 0xFFFFFFFF,
+        ],
+        dtype=np.uint32,
+    )
+
+
+def construct_bank(
+    dfas: Sequence[DFA] | PatternBank,
+    *,
+    max_states: int = 200_000,
+    tile: int = 128,
+    max_retries: int = 4,
+    poly_index: int = 0,
+    method: str = "batched",
+    engine: str = "vectorized",
+    distribution: str = "local",
+    mesh=None,
+    pattern_axis: str = "pattern",
+    on_blowup: str = "skip",
+    _weight_fn=None,
+) -> BankConstructionResult:
+    """Construct the exact SFA of every pattern in one batched closure.
+
+    ``method="batched"`` runs the jitted bulk-synchronous bank rounds above;
+    ``method="loop"`` is the sequential-loop baseline (per-pattern
+    :func:`~repro.construction.construct_sfa` with ``engine=``), kept for
+    benchmarking and as the cheap path when only one pattern misses the
+    cache. Both return bit-identical SFAs.
+
+    ``on_blowup``: ``"skip"`` marks patterns whose closure exceeds
+    ``max_states`` in ``result.blown`` (their slot in ``sfas`` is ``None``);
+    ``"raise"`` raises :class:`StateBlowup` instead.
+
+    ``distribution="shard_map"`` (batched method only) shards the pattern
+    axis of every buffer over ``mesh`` (default: a fresh 1-axis mesh over
+    all devices named ``pattern_axis``).
+
+    ``_weight_fn(pattern, attempt, n_words, consts)`` is a test seam: it
+    supplies the fingerprint fold constants and lets tests force a
+    fingerprint collision for one pattern's first attempt.
+    """
+    if isinstance(dfas, PatternBank):
+        dfas = [dfas.dfa(p) for p in range(dfas.n_patterns)]
+    dfas = list(dfas)
+    if not dfas:
+        raise ValueError("empty pattern bank")
+    if method not in ("batched", "loop"):
+        raise ValueError(f"method must be 'batched' or 'loop', got {method!r}")
+
+    if method == "loop":
+        result = _construct_loop(
+            dfas, max_states=max_states, max_retries=max_retries,
+            engine=engine, poly_index=poly_index,
+        )
+    else:
+        result = _construct_batched(
+            dfas, max_states=max_states, tile=tile, max_retries=max_retries,
+            poly_index=poly_index, distribution=distribution, mesh=mesh,
+            pattern_axis=pattern_axis,
+            weight_fn=_weight_fn or _default_weight_fn,
+        )
+    if on_blowup == "raise":
+        result.require_all()
+    return result
+
+
+def _construct_loop(dfas, *, max_states, max_retries, engine, poly_index=0):
+    from .single import construct_sfa
+
+    t0 = time.perf_counter()
+    P = len(dfas)
+    stats = BankStats(
+        method="loop",
+        pattern_rounds=np.zeros(P, np.int64),
+        retries=np.zeros(P, np.int64),
+    )
+    sfas: list = [None] * P
+    blown = np.zeros(P, dtype=bool)
+    for p, d in enumerate(dfas):
+        try:
+            sfa = construct_sfa(
+                d, engine=engine, max_states=max_states,
+                max_retries=max_retries, poly_index=poly_index,
+            )
+        except StateBlowup:
+            blown[p] = True
+            continue
+        sfas[p] = sfa
+        stats.rounds += sfa.stats.rounds
+        stats.pattern_rounds[p] = sfa.stats.rounds
+        stats.candidates += sfa.stats.candidates
+    stats.wall_time_s = time.perf_counter() - t0
+    return BankConstructionResult(sfas=sfas, blown=blown, stats=stats)
+
+
+def _construct_batched(dfas, *, max_states, tile, max_retries, poly_index,
+                       distribution, mesh, pattern_axis, weight_fn):
+    t0 = time.perf_counter()
+    bank = PatternBank.from_dfas(dfas)  # validates the shared alphabet
+    P, n, k = bank.n_patterns, bank.n_max, bank.n_symbols
+    if n >= 1 << 16:
+        raise ValueError("batched engine packs 16-bit state ids")
+    W = (n + 1) // 2
+    # Buffers grow geometrically toward the full cap rather than starting
+    # there: a 200k-state budget must not mean 200k-row sorts for a bank
+    # that closes in a few hundred states. The growth guard below keeps
+    # ``capacity >= n_states + tile·k`` for every runnable pattern, so a
+    # round can never drop an append of a pattern that still fits the cap.
+    full_cap = _state_cap(n, max_states) + tile
+    capacity = min(full_cap, max(1024, 2 * (tile * k + tile)))
+
+    if distribution == "shard_map":
+        if mesh is None:
+            mesh = make_mesh((jax.device_count(),), (pattern_axis,))
+        quantum = int(np.prod(list(mesh.shape.values())))
+    elif distribution == "local":
+        quantum = 1
+    else:
+        raise ValueError(
+            f"distribution must be 'local' or 'shard_map', got {distribution!r}"
+        )
+
+    def make_round_fn():
+        if distribution == "shard_map":
+            return _sharded_bank_round(mesh, pattern_axis, tile, n, k, capacity)
+        return functools.partial(
+            _bank_round, tile=tile, n=n, k=k, capacity=capacity
+        )
+
+    round_fn = make_round_fn()
+    buckets = _bucket_sizes(P, quantum)
+
+    stats = BankStats(
+        method="batched",
+        pattern_rounds=np.zeros(P, np.int64),
+        retries=np.zeros(P, np.int64),
+    )
+
+    # -- per-pattern fingerprint constants + initial buffers ------------------
+    n_true = bank.n_states.astype(np.int64)
+    attempts = np.zeros(P, dtype=np.int64)
+
+    def consts_of(p):
+        return BarrettConstants.cached(
+            nth_poly_low(poly_index + int(attempts[p]))
+        )
+
+    weights_np = np.empty((P, W, 2), dtype=np.uint32)
+    limbs_np = np.empty((P, 4), dtype=np.uint32)
+    masks_np = np.empty((P, W), dtype=np.uint32)
+    fp0_np = np.empty((P, 2), dtype=np.uint32)
+    for p in range(P):
+        c = consts_of(p)
+        weights_np[p] = weight_fn(p, 0, W, c)
+        limbs_np[p] = _limbs_of(c)
+        masks_np[p] = _word_mask(int(n_true[p]), n)
+        fp0_np[p] = fingerprint_states_np(
+            np.arange(int(n_true[p]), dtype=np.int32)[None], c
+        )[0]
+
+    identity = np.arange(n, dtype=np.int32)
+    states = jnp.zeros((P, capacity, n), jnp.int32).at[:, 0].set(identity)
+    fp_hi = jnp.full((P, capacity), _U32MAX, jnp.uint32).at[:, 0].set(
+        jnp.asarray(fp0_np[:, 0])
+    )
+    fp_lo = jnp.full((P, capacity), _U32MAX, jnp.uint32).at[:, 0].set(
+        jnp.asarray(fp0_np[:, 1])
+    )
+    delta = jnp.zeros((P, capacity, k), jnp.int32)
+    n_states = jnp.ones(P, jnp.int32)
+    frontier = jnp.zeros(P, jnp.int32)
+    weights = jnp.asarray(weights_np)
+    limbs = jnp.asarray(limbs_np)
+    masks = jnp.asarray(masks_np)
+    tables = jnp.asarray(bank.tables)
+
+    n_states_h = np.ones(P, dtype=np.int64)
+    frontier_h = np.zeros(P, dtype=np.int64)
+    blown = np.zeros(P, dtype=bool)
+    cand_h = np.zeros(P, dtype=np.int64)
+
+    # -- the nonblocking host loop -------------------------------------------
+    while True:
+        runnable = (~blown) & (frontier_h < n_states_h)
+        act = np.flatnonzero(runnable)
+        if act.size == 0:
+            break
+        worst = int(n_states_h[act].max()) + tile * k
+        if worst > capacity and capacity < full_cap:
+            grown = min(full_cap, max(capacity * 4, worst))
+            pad = grown - capacity
+            states = jnp.pad(states, ((0, 0), (0, pad), (0, 0)))
+            fp_hi = jnp.pad(fp_hi, ((0, 0), (0, pad)),
+                            constant_values=np.uint32(0xFFFFFFFF))
+            fp_lo = jnp.pad(fp_lo, ((0, 0), (0, pad)),
+                            constant_values=np.uint32(0xFFFFFFFF))
+            delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+            capacity = grown
+            round_fn = make_round_fn()
+        bucket = next(b for b in buckets if b >= act.size)
+        idx = np.concatenate(
+            [act, np.full(bucket - act.size, act[0], dtype=act.dtype)]
+        )
+        act_mask = np.zeros(bucket, dtype=bool)
+        act_mask[: act.size] = True
+        jidx = jnp.asarray(idx)
+
+        cand_h[act] += np.minimum(n_states_h[act] - frontier_h[act], tile) * k
+        stats.candidates += int(
+            np.sum(np.minimum(n_states_h[act] - frontier_h[act], tile)) * k
+        )
+        out = round_fn(
+            tables[jidx], states[jidx], fp_hi[jidx], fp_lo[jidx],
+            delta[jidx], n_states[jidx], frontier[jidx],
+            jnp.asarray(act_mask), weights[jidx], limbs[jidx], masks[jidx],
+        )
+        o_states, o_fp_hi, o_fp_lo, o_delta, o_n, o_frontier, o_coll = out
+        live = jnp.asarray(act)
+        states = states.at[live].set(o_states[: act.size])
+        fp_hi = fp_hi.at[live].set(o_fp_hi[: act.size])
+        fp_lo = fp_lo.at[live].set(o_fp_lo[: act.size])
+        delta = delta.at[live].set(o_delta[: act.size])
+        n_states = n_states.at[live].set(o_n[: act.size])
+        frontier = frontier.at[live].set(o_frontier[: act.size])
+
+        stats.rounds += 1
+        stats.pattern_rounds[act] += 1
+        n_states_h[act] = np.asarray(o_n[: act.size], dtype=np.int64)
+        frontier_h[act] = np.asarray(o_frontier[: act.size], dtype=np.int64)
+        collided = act[np.asarray(o_coll[: act.size])]
+
+        # Per-pattern polynomial retry: only the collided pattern restarts.
+        for p in collided:
+            attempts[p] += 1
+            stats.retries[p] += 1
+            if attempts[p] >= max_retries:
+                raise FingerprintCollision(
+                    f"pattern {p}: {max_retries} polynomials all collided"
+                )
+            c = consts_of(p)
+            weights_np[p] = weight_fn(int(p), int(attempts[p]), W, c)
+            limbs_np[p] = _limbs_of(c)
+            fp0 = fingerprint_states_np(
+                np.arange(int(n_true[p]), dtype=np.int32)[None], c
+            )[0]
+            weights = weights.at[p].set(jnp.asarray(weights_np[p]))
+            limbs = limbs.at[p].set(jnp.asarray(limbs_np[p]))
+            fp_hi = fp_hi.at[p, 0].set(jnp.uint32(fp0[0]))
+            fp_lo = fp_lo.at[p, 0].set(jnp.uint32(fp0[1]))
+            n_states = n_states.at[p].set(1)
+            frontier = frontier.at[p].set(0)
+            n_states_h[p] = 1
+            frontier_h[p] = 0
+
+        blown |= n_states_h > max_states
+
+    # -- crop per-pattern results ---------------------------------------------
+    stats.wall_time_s = time.perf_counter() - t0
+    states_np = np.asarray(states)
+    delta_np = np.asarray(delta)
+    fp_hi_np = np.asarray(fp_hi)
+    fp_lo_np = np.asarray(fp_lo)
+    sfas: list = [None] * P
+    for p in range(P):
+        if blown[p]:
+            continue
+        S = int(n_states_h[p])
+        pstats = SFAStats(
+            engine="batched",
+            rounds=int(stats.pattern_rounds[p]),
+            candidates=int(cand_h[p]),
+            wall_time_s=stats.wall_time_s,
+        )
+        fps = np.stack([fp_hi_np[p, :S], fp_lo_np[p, :S]], axis=1).astype(
+            np.uint32
+        )
+        sfas[p] = SFA(
+            mappings=np.ascontiguousarray(states_np[p, :S, : int(n_true[p])]),
+            delta=np.ascontiguousarray(delta_np[p, :S]),
+            fingerprints=fps,
+            dfa=dfas[p],
+            stats=pstats,
+        )
+    return BankConstructionResult(sfas=sfas, blown=blown, stats=stats)
+
+
+# --------------------------------------------------------------------------
+# The single-pattern jitted engine (P = 1 special case)
+# --------------------------------------------------------------------------
+
+
+def construct_sfa_jax(
+    dfa: DFA,
+    *,
+    poly_index: int = 0,
+    max_states: int = 200_000,
+    tile: int = 256,
+) -> SFA:
+    """The jitted TPU-shaped engine — now literally the bank construction
+    with one pattern. Raises :class:`FingerprintCollision` on a detected
+    collision (the :func:`~repro.construction.construct_sfa` wrapper
+    retries with the next polynomial)."""
+    result = construct_bank(
+        [dfa], max_states=max_states, tile=tile, poly_index=poly_index,
+        max_retries=1, method="batched", on_blowup="raise",
+    )
+    sfa = result.sfas[0]
+    sfa.stats.engine = "jax"
+    return sfa

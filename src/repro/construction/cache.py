@@ -1,0 +1,183 @@
+"""Content-addressed SFA cache.
+
+Construction is the expensive half of the paper's pipeline (minutes for large
+PROSITE signatures, vs milliseconds to scan); it is also *pure*: every engine
+produces the bit-identical exact SFA for a given DFA and base polynomial. So
+SFAs are cached content-addressed — the key is a canonical byte serialization
+of the DFA (transition table, start, accepting set, alphabet) plus the base
+polynomial of the fingerprint retry sequence — and a hit is valid no matter
+which engine or scanner produced it.
+
+Entries are positive (the exact SFA) or negative (a *blowup marker*: the
+construction exceeded some state budget). Negative entries record the budget
+that failed, so a later request with a larger budget is a miss (the closure
+might fit) while an equal-or-smaller budget is a hit (known blowup, skip the
+work). A positive entry whose SFA is larger than the requested budget also
+answers "blowup" without constructing anything — the cache knows the exact
+state count.
+
+Eviction is LRU over a byte budget (``max_bytes``) with an entry-count lid
+(``max_entries``); blowup markers are near-free and only count against the
+entry lid. ``repro.engine.Scanner`` consults the shared process-wide
+instance (:func:`shared_cache`) by default, so recompiling the same patterns
+performs zero construction rounds.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+from ..core.dfa import DFA
+from ..core.fingerprint import DEFAULT_POLY_LOW
+from .types import SFA
+
+
+def dfa_cache_key(dfa: DFA, poly_low: int = DEFAULT_POLY_LOW) -> str:
+    """Canonical content hash of a DFA + fingerprint base polynomial.
+
+    Deliberately hashes the exact table layout (not an isomorphism-canonical
+    form): SFA mappings are vectors *of these state ids*, so only an
+    identically-numbered DFA may share the entry.
+    """
+    h = hashlib.sha256()
+    h.update(b"sfa-v1|")
+    h.update(str(dfa.n_states).encode())
+    h.update(b"|")
+    h.update(dfa.alphabet.encode())
+    h.update(b"|")
+    h.update(int(dfa.start).to_bytes(4, "little"))
+    h.update(dfa.table.astype("<i4", copy=False).tobytes())
+    h.update(dfa.accepting.astype("u1", copy=False).tobytes())
+    h.update(poly_low.to_bytes(8, "little"))
+    return h.hexdigest()
+
+
+@dataclass
+class CacheInfo:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    stores: int = 0
+    current_bytes: int = 0
+
+    def snapshot(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "stores": self.stores,
+            "current_bytes": self.current_bytes,
+        }
+
+
+@dataclass
+class _Blowup:
+    """Negative entry: construction exceeded ``budget`` states."""
+
+    budget: int
+    nbytes: int = 0
+
+
+class SFACache:
+    """LRU content-addressed cache of constructed SFAs (+ blowup markers)."""
+
+    def __init__(self, max_entries: int = 256,
+                 max_bytes: int = 256 * 1024 * 1024):
+        if max_entries < 1 or max_bytes < 1:
+            raise ValueError("max_entries and max_bytes must be >= 1")
+        self.max_entries = max_entries
+        self.max_bytes = max_bytes
+        self.info = CacheInfo()
+        self._entries: OrderedDict = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, dfa: DFA) -> bool:
+        return dfa_cache_key(dfa) in self._entries
+
+    # -- lookup / store -----------------------------------------------------
+
+    def lookup(self, dfa: DFA, *, max_states: int,
+               poly_low: int = DEFAULT_POLY_LOW) -> tuple:
+        """-> ("sfa", SFA) | ("blowup", None) | (None, None).
+
+        "blowup" means construction under ``max_states`` is *known* to fail:
+        either a marker recorded at an equal-or-larger budget, or a cached
+        SFA whose exact state count exceeds the budget.
+        """
+        key = dfa_cache_key(dfa, poly_low)
+        ent = self._entries.get(key)
+        if ent is None:
+            self.info.misses += 1
+            return None, None
+        if isinstance(ent, _Blowup):
+            if ent.budget >= max_states:
+                self.info.hits += 1
+                self._entries.move_to_end(key)
+                return "blowup", None
+            self.info.misses += 1  # bigger budget might close — reconstruct
+            return None, None
+        self.info.hits += 1
+        self._entries.move_to_end(key)
+        if ent.n_states > max_states:
+            return "blowup", None
+        return "sfa", ent
+
+    def store(self, dfa: DFA, sfa: SFA,
+              poly_low: int = DEFAULT_POLY_LOW) -> None:
+        """Insert/refresh the positive entry for ``dfa``."""
+        self._put(dfa_cache_key(dfa, poly_low), sfa, sfa.nbytes())
+
+    def store_blowup(self, dfa: DFA, budget: int,
+                     poly_low: int = DEFAULT_POLY_LOW) -> None:
+        """Record that construction under ``budget`` states blew up.
+
+        Never downgrades: a positive entry (the exact SFA) stays, and a
+        marker only grows its recorded budget.
+        """
+        key = dfa_cache_key(dfa, poly_low)
+        ent = self._entries.get(key)
+        if isinstance(ent, SFA):
+            return
+        if isinstance(ent, _Blowup):
+            ent.budget = max(ent.budget, budget)
+            self._entries.move_to_end(key)
+            return
+        self._put(key, _Blowup(budget=budget), 0)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.info.current_bytes = 0
+
+    # -- internals ----------------------------------------------------------
+
+    @staticmethod
+    def _size(ent) -> int:
+        return ent.nbytes() if isinstance(ent, SFA) else ent.nbytes
+
+    def _put(self, key: str, value, nbytes: int) -> None:
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.info.current_bytes -= self._size(old)
+        self._entries[key] = value
+        self.info.stores += 1
+        self.info.current_bytes += nbytes
+        while (len(self._entries) > self.max_entries
+               or self.info.current_bytes > self.max_bytes):
+            _, victim = self._entries.popitem(last=False)
+            self.info.evictions += 1
+            self.info.current_bytes -= self._size(victim)
+
+
+_SHARED: SFACache | None = None
+
+
+def shared_cache() -> SFACache:
+    """The process-wide cache ``Scanner.compile`` consults by default."""
+    global _SHARED
+    if _SHARED is None:
+        _SHARED = SFACache()
+    return _SHARED

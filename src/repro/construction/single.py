@@ -1,0 +1,143 @@
+"""Single-pattern construction entry points over the shared worklist core.
+
+These keep the exact public signatures that ``core/sfa.py`` has always
+exported (that module now re-exports from here):
+
+* :func:`construct_sfa_sequential` — paper Algorithm 1 with the §III-A
+  optimizations as toggles; the toggles now literally select a
+  :mod:`~repro.construction.stores` membership store (the Fig. 4 ablation
+  is a store swap, not a separate engine).
+* :func:`construct_sfa_vectorized` — the TPU-shaped bulk frontier closure on
+  NumPy (fast CPU path).
+* :func:`construct_sfa` — the exactness wrapper: on a detected fingerprint
+  collision, retry with a fresh random irreducible polynomial. Retries route
+  through the cached polynomial/Barrett-constant helpers
+  (:func:`~repro.core.fingerprint.nth_poly_low` /
+  :meth:`~repro.core.fingerprint.BarrettConstants.cached`), so a retry costs
+  one closure re-run — not a fresh irreducibility search plus a
+  t^128-division per attempt.  The ``engine="jax"`` path is the ``P = 1``
+  case of :func:`~repro.construction.batched.construct_bank`.
+"""
+
+from __future__ import annotations
+
+from ..core.dfa import DFA
+from ..core.fingerprint import BarrettConstants, nth_poly_low
+from .stores import (
+    ExhaustiveStore,
+    FingerprintScanStore,
+    HashChainStore,
+    SortedFingerprintStore,
+)
+from .types import SFA, FingerprintCollision, SFAStats
+from .worklist import close_bulk, close_scalar
+
+
+def _consts_for(poly_index: int) -> BarrettConstants:
+    return BarrettConstants.cached(nth_poly_low(poly_index))
+
+
+def construct_sfa_sequential(
+    dfa: DFA,
+    *,
+    use_fingerprints: bool = True,
+    use_hashing: bool = True,
+    poly_index: int = 0,
+    max_states: int = 1_000_000,
+) -> SFA:
+    """Algorithm 1 with the paper's §III-A optimizations as toggles.
+
+    - fingerprints off: membership is the exhaustive vector comparison against
+      every known state (the paper's baseline — O(|Q|·|Q_s|) per test).
+    - fingerprints on, hashing off: linear scan compares 64-bit fingerprints,
+      exact vector compare only on fingerprint equality.
+    - hashing on (requires fingerprints): dict keyed by fingerprint with
+      collision chains — the paper's hash table, O(1) expected.
+    """
+    if use_hashing and not use_fingerprints:
+        raise ValueError("hashing requires fingerprints (paper §III-A)")
+    stats = SFAStats(engine="sequential")
+    if not use_fingerprints:
+        store = ExhaustiveStore(stats)
+    elif use_hashing:
+        store = HashChainStore(stats, _consts_for(poly_index))
+    else:
+        store = FingerprintScanStore(stats, _consts_for(poly_index))
+    return close_scalar(dfa, store, stats, max_states=max_states)
+
+
+def construct_sfa_vectorized(
+    dfa: DFA,
+    *,
+    poly_index: int = 0,
+    max_states: int = 4_000_000,
+    tile: int = 4096,
+) -> SFA:
+    """Bulk-synchronous frontier closure on NumPy (the fast CPU path)."""
+    stats = SFAStats(engine="vectorized")
+    store = SortedFingerprintStore(stats, _consts_for(poly_index), dfa.n_states)
+    return close_bulk(dfa, store, stats, max_states=max_states, tile=tile)
+
+
+def construct_sfa(
+    dfa: DFA,
+    *,
+    engine: str = "vectorized",
+    max_states: int = 4_000_000,
+    max_retries: int = 4,
+    poly_index: int = 0,
+    cache=None,
+    **kwargs,
+) -> SFA:
+    """Construct the exact SFA; on a detected fingerprint collision, retry
+    with a fresh random irreducible polynomial (paper §II: P is random).
+    ``poly_index`` is the base of the retry sequence (attempt ``a`` uses
+    polynomial ``poly_index + a``), matching ``construct_bank``'s.
+
+    ``cache`` optionally names a :class:`~repro.construction.cache.SFACache`
+    consulted before (and populated after) construction; all engines are
+    bit-identical, so a hit is valid regardless of which engine produced it.
+    """
+    from .types import StateBlowup
+
+    base_poly = nth_poly_low(poly_index)
+    if cache is not None:
+        hit, sfa = cache.lookup(dfa, max_states=max_states,
+                                poly_low=base_poly)
+        if hit == "sfa":
+            return sfa
+        if hit == "blowup":  # known to exceed this budget: fail fast
+            raise StateBlowup(
+                f"SFA exceeds {max_states} states (cached blowup)"
+            )
+    last: Exception | None = None
+    try:
+        for attempt in range(max_retries):
+            poly = poly_index + attempt
+            try:
+                if engine == "sequential":
+                    sfa = construct_sfa_sequential(
+                        dfa, poly_index=poly, max_states=max_states, **kwargs
+                    )
+                elif engine == "vectorized":
+                    sfa = construct_sfa_vectorized(
+                        dfa, poly_index=poly, max_states=max_states, **kwargs
+                    )
+                elif engine == "jax":
+                    from .batched import construct_sfa_jax
+
+                    sfa = construct_sfa_jax(
+                        dfa, poly_index=poly, max_states=max_states, **kwargs
+                    )
+                else:
+                    raise ValueError(f"unknown engine {engine!r}")
+                if cache is not None:
+                    cache.store(dfa, sfa, poly_low=base_poly)
+                return sfa
+            except FingerprintCollision as e:  # pragma: no cover (rare)
+                last = e
+    except StateBlowup:
+        if cache is not None:
+            cache.store_blowup(dfa, max_states, poly_low=base_poly)
+        raise
+    raise last  # pragma: no cover

@@ -1,0 +1,224 @@
+"""Pluggable state stores: membership + id assignment for discovered states.
+
+The worklist closure (paper Alg. 1) is identical across every engine; what
+differs is how "have we seen this transition-function vector before?" is
+answered. That policy lives here, behind two small interfaces:
+
+* scalar stores (one candidate at a time — the faithful sequential engine):
+
+  - :class:`ExhaustiveStore`   — the paper's baseline: exact vector compare
+    against every known state, O(|Q|·|Q_s|) per test;
+  - :class:`FingerprintScanStore` — linear scan over 64-bit fingerprints,
+    exact compare only on fingerprint equality (paper §III-A, fp only);
+  - :class:`HashChainStore`    — dict keyed by fingerprint with exact-compare
+    collision chains: the paper's hash table, O(1) expected.
+
+* a bulk store (whole frontier × alphabet at once — the TPU-shaped engines):
+
+  - :class:`SortedFingerprintStore` — membership is fingerprint
+    ``searchsorted`` against the sorted known set, the bulk equivalent of the
+    hash table; fingerprint hits are confirmed with exact vector compares and
+    any mismatch raises :class:`~repro.construction.FingerprintCollision`.
+
+All stores share one exactness contract: equal fingerprints never merge
+states silently, so the closure always yields the exact SFA (or raises).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.fingerprint import (
+    BarrettConstants,
+    fingerprint_int,
+    fingerprint_words_np,
+    pack_states_np,
+)
+from .types import FingerprintCollision, SFAStats
+
+
+# --------------------------------------------------------------------------
+# Scalar stores (sequential engine)
+# --------------------------------------------------------------------------
+
+
+class ExhaustiveStore:
+    """Baseline membership: exact comparison against all known states."""
+
+    def __init__(self, stats: SFAStats):
+        self.stats = stats
+        self.mappings: list = []
+
+    def __len__(self) -> int:
+        return len(self.mappings)
+
+    def lookup_or_add(self, vec: np.ndarray) -> tuple:
+        """-> (state id, is_new)."""
+        for i, m in enumerate(self.mappings):
+            self.stats.exact_compares += 1
+            if np.array_equal(m, vec):
+                return i, False
+        return self._append(vec), True
+
+    def _append(self, vec: np.ndarray) -> int:
+        self.mappings.append(np.asarray(vec, dtype=np.int32))
+        return len(self.mappings) - 1
+
+    def fingerprint_pairs(self) -> np.ndarray:
+        return np.zeros((len(self.mappings), 2), dtype=np.uint32)
+
+
+class _FingerprintedStore(ExhaustiveStore):
+    """Shared fingerprint bookkeeping for the fp-based scalar stores."""
+
+    def __init__(self, stats: SFAStats, consts: BarrettConstants):
+        super().__init__(stats)
+        self.consts = consts
+        self.fps: list = []
+
+    def fp_of(self, vec: np.ndarray) -> int:
+        return fingerprint_int(pack_states_np(vec), self.consts)
+
+    def _append_fp(self, vec: np.ndarray, fp: int) -> int:
+        idx = self._append(vec)
+        self.fps.append(fp)
+        return idx
+
+    def fingerprint_pairs(self) -> np.ndarray:
+        out = np.zeros((len(self.fps), 2), dtype=np.uint32)
+        for i, f in enumerate(self.fps):
+            out[i, 0] = (f >> 32) & 0xFFFFFFFF
+            out[i, 1] = f & 0xFFFFFFFF
+        return out
+
+
+class FingerprintScanStore(_FingerprintedStore):
+    """Fingerprints without hashing: linear 64-bit scan, exact confirm."""
+
+    def lookup_or_add(self, vec: np.ndarray) -> tuple:
+        f = self.fp_of(vec)
+        for i, fi in enumerate(self.fps):
+            self.stats.fp_compares += 1
+            if fi == f:
+                self.stats.exact_compares += 1
+                if np.array_equal(self.mappings[i], vec):
+                    return i, False
+                self.stats.collisions_detected += 1
+        return self._append_fp(vec, f), True
+
+
+class HashChainStore(_FingerprintedStore):
+    """The paper's hash table: dict keyed by fingerprint, exact-chain."""
+
+    def __init__(self, stats: SFAStats, consts: BarrettConstants):
+        super().__init__(stats, consts)
+        self.table: dict = {}
+
+    def lookup_or_add(self, vec: np.ndarray) -> tuple:
+        f = self.fp_of(vec)
+        chain = self.table.setdefault(f, [])
+        self.stats.fp_compares += 1
+        for i in chain:
+            self.stats.exact_compares += 1
+            if np.array_equal(self.mappings[i], vec):
+                return i, False
+            self.stats.collisions_detected += 1
+        idx = self._append_fp(vec, f)
+        chain.append(idx)
+        return idx, True
+
+
+# --------------------------------------------------------------------------
+# Bulk store (vectorized frontier engine)
+# --------------------------------------------------------------------------
+
+
+class SortedFingerprintStore:
+    """Bulk membership: fingerprint sort + ``searchsorted`` (paper's hash
+    table, restated for data-parallel hardware). Holds the growing known set
+    as dense arrays; candidates arrive whole-tile at a time.
+    """
+
+    def __init__(self, stats: SFAStats, consts: BarrettConstants, n: int):
+        self.stats = stats
+        self.consts = consts
+        self._pack_scratch: np.ndarray | None = None  # reused across tiles
+        identity = np.arange(n, dtype=np.int32)[None]
+        self.mappings = identity.copy()              # (S, n)
+        self.fps = self._fp64(identity)              # (S,) uint64
+        self.order = np.argsort(self.fps, kind="stable")
+
+    def __len__(self) -> int:
+        return int(self.mappings.shape[0])
+
+    def _fp64(self, states: np.ndarray) -> np.ndarray:
+        # Reuse one packed-word scratch buffer across tiles and collision
+        # retries: packing is polynomial-independent, only the fold changes.
+        self._pack_scratch = pack_states_np(states, out=self._pack_scratch)
+        pair = fingerprint_words_np(self._pack_scratch, self.consts)
+        return (pair[..., 0].astype(np.uint64) << np.uint64(32)) | pair[
+            ..., 1
+        ].astype(np.uint64)
+
+    def assign(self, cand: np.ndarray) -> np.ndarray:
+        """Map candidate rows (m, n) to SFA ids, appending unseen states in
+        first-occurrence order. Raises :class:`FingerprintCollision` on any
+        fp-equal-but-vector-unequal pair (vs the known set or intra-tile)."""
+        n_cand = cand.shape[0]
+        cfps = self._fp64(cand)
+
+        # --- membership test against the known set -------------------------
+        sorted_fps = self.fps[self.order]
+        pos = np.searchsorted(sorted_fps, cfps)
+        pos_c = np.minimum(pos, len(sorted_fps) - 1)
+        fp_hit = sorted_fps[pos_c] == cfps
+        self.stats.fp_compares += n_cand
+        known_idx = np.where(fp_hit, self.order[pos_c], -1)
+
+        hit_rows = np.flatnonzero(fp_hit)
+        if hit_rows.size:
+            self.stats.exact_compares += int(hit_rows.size)
+            exact = np.all(
+                cand[hit_rows] == self.mappings[known_idx[hit_rows]], axis=1
+            )
+            if not np.all(exact):
+                self.stats.collisions_detected += int(np.sum(~exact))
+                raise FingerprintCollision(
+                    f"{int(np.sum(~exact))} fingerprint collisions detected"
+                )
+
+        ids = known_idx.copy()
+
+        # --- dedup + append the genuinely new candidates -------------------
+        new_rows = np.flatnonzero(known_idx < 0)
+        if new_rows.size:
+            new_fps = cfps[new_rows]
+            uniq_fp, first_pos, inverse = np.unique(
+                new_fps, return_index=True, return_inverse=True
+            )
+            # Exactness within the tile: all rows in an fp-group must equal
+            # the group representative.
+            reps = cand[new_rows[first_pos]]          # (U, n)
+            same = np.all(cand[new_rows] == reps[inverse], axis=1)
+            if not np.all(same):
+                self.stats.collisions_detected += int(np.sum(~same))
+                raise FingerprintCollision("intra-round fingerprint collision")
+            # Renumber unique states by first occurrence (BFS order).
+            occ_order = np.argsort(first_pos, kind="stable")
+            rank_of_uniq = np.empty_like(occ_order)
+            rank_of_uniq[occ_order] = np.arange(occ_order.size)
+            base = self.mappings.shape[0]
+            ids[new_rows] = base + rank_of_uniq[inverse]
+
+            self.mappings = np.concatenate(
+                [self.mappings, reps[occ_order]], axis=0
+            )
+            self.fps = np.concatenate([self.fps, uniq_fp[occ_order]])
+            self.order = np.argsort(self.fps, kind="stable")
+        return ids.astype(np.int32)
+
+    def fingerprint_pairs(self) -> np.ndarray:
+        out = np.empty((self.fps.shape[0], 2), dtype=np.uint32)
+        out[:, 0] = (self.fps >> np.uint64(32)).astype(np.uint32)
+        out[:, 1] = (self.fps & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        return out

@@ -1,0 +1,112 @@
+"""The one worklist closure every construction engine shares (paper Alg. 1).
+
+Given a DFA, the SFA is the closure of the identity mapping under
+``f ↦ λq. δ(f[q], σ)`` for every symbol σ.  Discovery order is FIFO BFS with
+symbols in order — fixed here, once, so *all* engines (scalar stores, the
+bulk store, the jitted batched rounds in :mod:`.batched`) produce
+bit-identical SFAs.  What varies is only the membership policy
+(:mod:`.stores`) and the execution shape:
+
+* :func:`close_scalar` — one candidate at a time through a scalar store
+  (the faithful sequential engine, with the paper's §III-A ablation toggles
+  expressed as store choice);
+* :func:`close_bulk` — whole frontier × alphabet tiles through the
+  :class:`~repro.construction.stores.SortedFingerprintStore` (the TPU-shaped
+  algorithm on NumPy: fused gather on the transposed table, vectorized
+  fingerprint fold, searchsorted membership).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from ..core.dfa import DFA
+from .stores import SortedFingerprintStore
+from .types import SFA, SFAStats, StateBlowup
+
+
+def close_scalar(dfa: DFA, store, stats: SFAStats, *,
+                 max_states: int) -> SFA:
+    """Algorithm 1 with membership delegated to a scalar store."""
+    t0 = time.perf_counter()
+    n, k = dfa.n_states, dfa.n_symbols
+    table = dfa.table
+
+    identity = np.arange(n, dtype=np.int32)
+    store.lookup_or_add(identity)
+    delta_rows: list = []
+    head = 0
+
+    while head < len(store):
+        cur_vec = store.mappings[head]
+        head += 1
+        stats.rounds += 1
+        row = np.empty(k, dtype=np.int32)
+        for a in range(k):
+            nxt = table[cur_vec, a]  # f_next(q) = δ(f(q), σ) (paper line 6)
+            stats.candidates += 1
+            idx, is_new = store.lookup_or_add(nxt)
+            if is_new and idx >= max_states:
+                raise StateBlowup(f"SFA exceeded {max_states} states")
+            row[a] = idx
+        delta_rows.append(row)
+
+    stats.wall_time_s = time.perf_counter() - t0
+    return SFA(
+        mappings=np.stack(store.mappings).astype(np.int32),
+        delta=np.stack(delta_rows).astype(np.int32),
+        fingerprints=store.fingerprint_pairs(),
+        dfa=dfa,
+        stats=stats,
+    )
+
+
+def close_bulk(dfa: DFA, store: SortedFingerprintStore, stats: SFAStats, *,
+               max_states: int, tile: int) -> SFA:
+    """Bulk-synchronous frontier closure.
+
+    Per round, the *whole frontier × alphabet* expands in one fused gather on
+    the transposed transition table (paper §III-B3: symbol-major layout), all
+    candidates are fingerprinted in one vectorized fold (paper §III-A), and
+    membership is the store's fingerprint ``searchsorted``. Discovery order
+    is row-major (frontier, symbol), identical to :func:`close_scalar`'s
+    FIFO BFS, so the engines produce bit-identical SFAs.
+    """
+    t0 = time.perf_counter()
+    n, k = dfa.n_states, dfa.n_symbols
+    if n >= 1 << 16:
+        raise ValueError("bulk engine packs 16-bit state ids (paper layout)")
+    tableT = dfa.transposed()  # (k, n) symbol-major
+
+    delta = np.zeros((0, k), dtype=np.int32)
+    frontier_lo = 0            # store.mappings[frontier_lo:] unprocessed
+
+    while frontier_lo < len(store):
+        stats.rounds += 1
+        frontier = store.mappings[frontier_lo:]
+        new_rows = []
+        for t in range(0, frontier.shape[0], tile):
+            ft = frontier[t : t + tile]              # (m, n)
+            m = ft.shape[0]
+            # Fused expansion: next[f, σ, q] = δT[σ, f[q]]  — one gather.
+            cand = tableT[:, ft]                     # (k, m, n)
+            cand = np.ascontiguousarray(np.swapaxes(cand, 0, 1))  # (m, k, n)
+            cand = cand.reshape(m * k, n)
+            stats.candidates += m * k
+            ids = store.assign(cand)
+            if len(store) > max_states:
+                raise StateBlowup(f"SFA exceeded {max_states} states")
+            new_rows.append(ids.reshape(m, k))
+        delta = np.concatenate([delta, *new_rows], axis=0)
+        frontier_lo = delta.shape[0]
+
+    stats.wall_time_s = time.perf_counter() - t0
+    return SFA(
+        mappings=store.mappings,
+        delta=delta,
+        fingerprints=store.fingerprint_pairs(),
+        dfa=dfa,
+        stats=stats,
+    )

@@ -1,5 +1,12 @@
 """Core library: the paper's contribution (SFA construction + parallel
 matching with Rabin fingerprints) and the monoid machinery it generalizes to.
+
+Construction lives in :mod:`repro.construction` (re-exported here, lazily,
+through the long-standing ``core.sfa`` names); parallel matching lives in
+:mod:`repro.engine` behind the ``Scanner`` facade. The pre-engine free
+functions (``match_parallel_enumeration``, ``match_bank_parallel``,
+``census_bank``, ...) were removed after the PR-2 deprecation window —
+import from ``repro.engine.executors`` instead.
 """
 
 from .dfa import DFA, compile_dfa, example_fa, minimize, random_dfa, subset_construct
@@ -17,22 +24,13 @@ from .fingerprint import (
     random_irreducible_poly64,
 )
 from .matching import (
-    accepts_parallel,
-    distributed_match_fn,
-    find_matches_parallel,
-    match_parallel_enumeration,
-    match_parallel_sfa,
-    throughput_matcher,
+    chunk_accept_trace,
+    chunk_mapping_enumeration,
+    chunk_state_sfa,
+    match_ends_sequential,
+    match_sequential,
 )
-from .multipattern import (
-    PatternBank,
-    bank_hits,
-    census_bank,
-    census_sequential,
-    distributed_bank_matcher,
-    distributed_census_fn,
-    match_bank_parallel,
-)
+from .multipattern import PatternBank, bucket_by_size, census_sequential
 from .monoid import (
     Monoid,
     affine_monoid,
@@ -53,14 +51,29 @@ from .prosite import (
     translate,
 )
 from .regex import AMINO_ACIDS, compile_nfa, parse
-from .sfa import (
-    SFA,
-    FingerprintCollision,
-    SFAStats,
-    StateBlowup,
-    construct_sfa,
-    construct_sfa_sequential,
-    construct_sfa_vectorized,
+
+# Construction names resolve lazily through core.sfa / core.sfa_jax (PEP 562):
+# repro.construction imports core submodules while it initializes, so an eager
+# import here would be circular when repro.construction is imported first.
+_CONSTRUCTION_NAMES = (
+    "SFA",
+    "FingerprintCollision",
+    "SFAStats",
+    "StateBlowup",
+    "construct_sfa",
+    "construct_sfa_sequential",
+    "construct_sfa_vectorized",
 )
 
-__all__ = [k for k in dir() if not k.startswith("_")]
+
+def __getattr__(name: str):
+    if name in _CONSTRUCTION_NAMES:
+        from .. import construction
+
+        return getattr(construction, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = sorted(
+    [k for k in dir() if not k.startswith("_")] + list(_CONSTRUCTION_NAMES)
+)

@@ -42,11 +42,14 @@ MASK64 = (1 << 64) - 1
 DEFAULT_POLY_LOW = 0x000000000000001B
 
 
+@functools.lru_cache(maxsize=None)
 def nth_poly_low(i: int) -> int:
     """Deterministic sequence of irreducible degree-64 polys: index 0 is the
     default; higher indices draw random irreducibles (used to re-randomize on
     a detected fingerprint collision — exactness by detection + retry,
-    see core/sfa.py)."""
+    see repro.construction). Cached: a collision retry in one pattern of a
+    bank must not re-run the Rabin irreducibility search for every caller.
+    """
     if i == 0:
         return DEFAULT_POLY_LOW
     return random_irreducible_poly64(seed=i) & MASK64
@@ -169,6 +172,13 @@ class BarrettConstants:
         mu = poly_div_int(1 << 128, p)
         assert mu >> 64 == 1, "M = t^128 / P must have degree exactly 64"
         return cls(poly_low=poly_low & MASK64, mu_low=mu & MASK64)
+
+    @classmethod
+    @functools.lru_cache(maxsize=None)
+    def cached(cls, poly_low: int = DEFAULT_POLY_LOW) -> "BarrettConstants":
+        """Memoized :meth:`create`: collision retries and per-pattern bank
+        polynomials share one μ = t^128 / P division per polynomial."""
+        return cls.create(poly_low)
 
     @property
     def poly(self) -> int:
@@ -351,17 +361,25 @@ def fingerprint_states(states: jnp.ndarray, consts: BarrettConstants) -> jnp.nda
     return jnp.stack([hi, lo], axis=-1)
 
 
-def fingerprint_states_np(states: np.ndarray, consts: BarrettConstants) -> np.ndarray:
-    """NumPy twin of :func:`fingerprint_states` (vectorized, used by the fast
-    CPU constructor). Works in 32-bit word space mirroring the JAX path
-    exactly. Returns (..., 2) uint32 [hi, lo]."""
+def pack_states_np(states: np.ndarray, out: np.ndarray | None = None) -> np.ndarray:
+    """NumPy twin of :func:`pack_states_u32`: (..., n) ids -> (..., ceil(n/2))
+    uint32 words, two 16-bit ids per word. ``out`` lets callers reuse one
+    scratch buffer across construction tiles and collision-retry attempts
+    (packing is polynomial-independent, so the packed words survive a retry
+    with a fresh P(t))."""
     states = np.asarray(states, dtype=np.uint32)
     n = states.shape[-1]
-    if n % 2:
-        states = np.pad(states, [(0, 0)] * (states.ndim - 1) + [(0, 1)])
-    words = (states[..., 0::2] & np.uint32(0xFFFF)) | (
-        (states[..., 1::2] & np.uint32(0xFFFF)) << np.uint32(16)
-    )
+    n_words = (n + 1) // 2
+    shape = states.shape[:-1] + (n_words,)
+    if out is None or out.shape != shape:
+        out = np.empty(shape, dtype=np.uint32)
+    np.bitwise_and(states[..., 0::2], np.uint32(0xFFFF), out=out)
+    out[..., : n // 2] |= (states[..., 1::2] & np.uint32(0xFFFF)) << np.uint32(16)
+    return out
+
+
+def fingerprint_words_np(words: np.ndarray, consts: BarrettConstants) -> np.ndarray:
+    """Fold + Barrett-reduce pre-packed words: (..., W) u32 -> (..., 2) u32."""
     ws = fold_weights_int(words.shape[-1], consts)
     w_lo = np.asarray([w & 0xFFFFFFFF for w in ws], dtype=np.uint32)
     w_hi = np.asarray([(w >> 32) & 0xFFFFFFFF for w in ws], dtype=np.uint32)
@@ -374,6 +392,13 @@ def fingerprint_states_np(states: np.ndarray, consts: BarrettConstants) -> np.nd
     l3 = np.zeros_like(l2)
     hi, lo = _barrett_np((l3, l2, l1, l0), consts)
     return np.stack([hi, lo], axis=-1)
+
+
+def fingerprint_states_np(states: np.ndarray, consts: BarrettConstants) -> np.ndarray:
+    """NumPy twin of :func:`fingerprint_states` (vectorized, used by the fast
+    CPU constructor). Works in 32-bit word space mirroring the JAX path
+    exactly. Returns (..., 2) uint32 [hi, lo]."""
+    return fingerprint_words_np(pack_states_np(states), consts)
 
 
 def _clmul32_np(a: np.ndarray, b: np.ndarray) -> tuple:

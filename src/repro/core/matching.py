@@ -17,8 +17,9 @@ function:
 This module now holds only the *per-chunk* primitives and the sequential
 references; the parallel entry points that used to live here moved to
 ``repro.engine.executors`` behind the :class:`repro.engine.Scanner` facade.
-The old names below still work but are deprecated shims that delegate to the
-engine (one ``DeprecationWarning`` per name per process).
+(The deprecation shims that bridged the move were removed after two further
+PRs touched every call site, per the PR-2 policy — import from
+``repro.engine.executors`` or use the ``Scanner``.)
 """
 
 from __future__ import annotations
@@ -28,7 +29,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from .dfa import DFA
-from .sfa import SFA
 
 
 # --------------------------------------------------------------------------
@@ -95,65 +95,3 @@ def chunk_accept_trace(table: jnp.ndarray, accepting: jnp.ndarray,
     return flags
 
 
-# --------------------------------------------------------------------------
-# Legacy entry points -> engine shims (deprecated; see repro.engine.Scanner)
-# --------------------------------------------------------------------------
-
-
-def match_parallel_enumeration(table, symbols, n_chunks: int = 8):
-    """Deprecated: use ``repro.engine.Scanner`` (mode="enumeration")."""
-    from ..engine import executors
-    from ..engine.deprecation import warn_once
-
-    warn_once("core.matching.match_parallel_enumeration",
-              "engine.executors.match_parallel_enumeration or Scanner.scan")
-    return executors.match_parallel_enumeration(table, symbols, n_chunks)
-
-
-def match_parallel_sfa(delta_s, sfa_mappings, symbols, n_chunks: int = 8):
-    """Deprecated: use ``repro.engine.Scanner`` (mode="sfa")."""
-    from ..engine import executors
-    from ..engine.deprecation import warn_once
-
-    warn_once("core.matching.match_parallel_sfa",
-              "engine.executors.match_parallel_sfa or Scanner.scan")
-    return executors.match_parallel_sfa(delta_s, sfa_mappings, symbols, n_chunks)
-
-
-def find_matches_parallel(table, accepting, symbols, start, n_chunks: int = 8):
-    """Deprecated: use ``Scanner.locate``."""
-    from ..engine import executors
-    from ..engine.deprecation import warn_once
-
-    warn_once("core.matching.find_matches_parallel", "Scanner.locate")
-    return executors.find_matches_parallel(table, accepting, symbols, start,
-                                           n_chunks)
-
-
-def accepts_parallel(dfa: DFA, text: str, n_chunks: int = 8,
-                     sfa: SFA | None = None) -> bool:
-    """Deprecated: use ``Scanner.accepts``."""
-    from ..engine import executors
-    from ..engine.deprecation import warn_once
-
-    warn_once("core.matching.accepts_parallel", "Scanner.accepts")
-    return executors.accepts_parallel(dfa, text, n_chunks, sfa)
-
-
-def distributed_match_fn(mesh, table_shape: tuple, axis_name: str = "data"):
-    """Deprecated: use ``ScanPlan(distribution='shard_map')``."""
-    from ..engine import executors
-    from ..engine.deprecation import warn_once
-
-    warn_once("core.matching.distributed_match_fn",
-              "Scanner with ScanPlan(distribution='shard_map')")
-    return executors.distributed_match_fn(mesh, table_shape, axis_name)
-
-
-def throughput_matcher(mesh, start: int = 0, axis_name: str = "data"):
-    """Deprecated: use ``Scanner.scan`` over a doc batch."""
-    from ..engine import executors
-    from ..engine.deprecation import warn_once
-
-    warn_once("core.matching.throughput_matcher", "Scanner.scan")
-    return executors.throughput_matcher(mesh, start, axis_name)

@@ -22,8 +22,9 @@ The batched, distributed, and Pallas matchers that used to live here moved
 to ``repro.engine.executors`` behind the :class:`repro.engine.Scanner`
 facade (which also adds the stacked-SFA bank mode this module's enumeration
 matchers lacked). This module keeps the data structures — ``PatternBank``,
-``bucket_by_size``, and the ``census_sequential`` oracle — plus deprecated
-shims for the old entry points (one ``DeprecationWarning`` per name).
+``bucket_by_size``, and the ``census_sequential`` oracle. (The deprecation
+shims that bridged the move were removed after two further PRs touched every
+call site, per the PR-2 policy.)
 """
 
 from __future__ import annotations
@@ -179,59 +180,3 @@ def census_sequential(bank: PatternBank, corpus: np.ndarray) -> np.ndarray:
     return counts
 
 
-# --------------------------------------------------------------------------
-# Legacy entry points -> engine shims (deprecated; see repro.engine.Scanner)
-# --------------------------------------------------------------------------
-
-
-def match_bank_parallel(tables, symbols, n_chunks: int = 8):
-    """Deprecated: use ``repro.engine.Scanner.mapping`` (or
-    ``engine.executors.match_bank_parallel``)."""
-    from ..engine import executors
-    from ..engine.deprecation import warn_once
-
-    warn_once("core.multipattern.match_bank_parallel",
-              "engine.executors.match_bank_parallel or Scanner.mapping")
-    return executors.match_bank_parallel(tables, symbols, n_chunks)
-
-
-def bank_hits(tables, accepting, starts, corpus, n_chunks: int = 8):
-    """Deprecated: use ``Scanner.scan``."""
-    from ..engine import executors
-    from ..engine.deprecation import warn_once
-
-    warn_once("core.multipattern.bank_hits", "Scanner.scan")
-    return executors.bank_hits(tables, accepting, starts, corpus, n_chunks)
-
-
-def census_bank(tables, accepting, starts, corpus, n_chunks: int = 8):
-    """Deprecated: use ``Scanner.census``."""
-    from ..engine import executors
-    from ..engine.deprecation import warn_once
-
-    warn_once("core.multipattern.census_bank", "Scanner.census")
-    return executors.census_bank(tables, accepting, starts, corpus, n_chunks)
-
-
-def distributed_bank_matcher(mesh, pattern_axis: str = "model",
-                             data_axis: str = "data"):
-    """Deprecated: use ``ScanPlan(distribution='shard_map')``."""
-    from ..engine import executors
-    from ..engine.deprecation import warn_once
-
-    warn_once("core.multipattern.distributed_bank_matcher",
-              "Scanner with ScanPlan(distribution='shard_map')")
-    return executors.distributed_bank_matcher(mesh, pattern_axis, data_axis)
-
-
-def distributed_census_fn(mesh, pattern_axis: str = "model",
-                          data_axis: str = "data", n_chunks: int = 8):
-    """Deprecated: use ``Scanner.census`` with
-    ``ScanPlan(distribution='shard_map')``."""
-    from ..engine import executors
-    from ..engine.deprecation import warn_once
-
-    warn_once("core.multipattern.distributed_census_fn",
-              "Scanner.census with ScanPlan(distribution='shard_map')")
-    return executors.distributed_census_fn(mesh, pattern_axis, data_axis,
-                                           n_chunks)

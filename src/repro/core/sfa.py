@@ -1,409 +1,32 @@
-"""Simultaneous DFA (SFA) construction — the paper's core contribution.
+"""Compatibility shim: SFA construction moved to :mod:`repro.construction`.
 
-Given a DFA ``A`` with ``n`` states, the SFA ``S(A)`` has one state per
-*reachable transition function*: an SFA state is a vector ``f`` of ``n`` DFA
-states (``f[q]`` = where ``A`` lands starting from ``q``), the start state is
-the identity mapping, and ``δ_s(f, σ)[q] = δ(f[q], σ)``. Matching a string
-chunk through the SFA yields the transition function of the whole chunk, so
-chunks can be matched in parallel and combined by function composition
-(see ``core.matching``).
-
-Construction is a worklist closure (paper Alg. 1) that can blow up to
-``O(n^n)`` states; the paper's optimizations — Rabin fingerprints, fingerprint
-hashing, parallel expansion over frontier states × symbols, transposed
-transition tables — are all reproduced here in three engines:
-
-* ``engine="sequential"``: the faithful Algorithm 1 with independent toggles
-  for fingerprints and hashing (reproduces the paper's Fig. 4 ablation).
-* ``engine="vectorized"``: the TPU-shaped algorithm run on NumPy — the whole
-  frontier × alphabet expands in one fused gather on the *transposed*
-  transition table; membership is fingerprint sort + searchsorted (the
-  TPU-idiomatic equivalent of the paper's hash table). This is the fast CPU
-  path used by benchmarks.
-* ``engine="jax"``: the same bulk-synchronous frontier algorithm expressed in
-  jitted JAX with fixed-capacity buffers — the path that runs on TPU and that
-  ``shard_map`` distributes (see ``core/matching.py`` and benchmarks).
-
-Exactness: like the paper, equal fingerprints never merge states silently.
-The sequential engine chains and exact-compares; the bulk engines detect
-fp-equal-but-vector-unequal events and raise ``FingerprintCollision``; the
-``construct_sfa`` wrapper retries with a fresh random irreducible polynomial,
-so the returned SFA is always the exact SFA.
+The three engines that used to live here (sequential, vectorized, and the
+jitted jax engine in ``sfa_jax.py``) were consolidated behind one worklist
+core with pluggable membership stores, plus the bank-native
+``construct_bank`` batched path and the content-addressed ``SFACache`` —
+see :mod:`repro.construction`. This module re-exports the long-standing
+public names so existing imports keep working; new code should import from
+``repro.construction`` directly.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-
-import numpy as np
-
-from .dfa import DFA
-from .fingerprint import (
-    BarrettConstants,
-    fingerprint_int,
-    fingerprint_states_np,
-    nth_poly_low,
+from ..construction import (  # noqa: F401
+    SFA,
+    FingerprintCollision,
+    SFAStats,
+    StateBlowup,
+    construct_sfa,
+    construct_sfa_sequential,
+    construct_sfa_vectorized,
 )
 
-
-class FingerprintCollision(RuntimeError):
-    """Two distinct state vectors produced the same 64-bit fingerprint."""
-
-
-class StateBlowup(RuntimeError):
-    """SFA state count exceeded the configured cap (the O(n^n) problem)."""
-
-
-@dataclass
-class SFAStats:
-    engine: str
-    rounds: int = 0
-    candidates: int = 0
-    fp_compares: int = 0
-    exact_compares: int = 0
-    collisions_detected: int = 0
-    wall_time_s: float = 0.0
-
-
-@dataclass
-class SFA:
-    """The simultaneous automaton.
-
-    ``mappings[i]`` is the state vector of SFA state ``i``; ``delta[i, a]`` is
-    the SFA transition table; state 0 is the start (identity mapping).
-    """
-
-    mappings: np.ndarray      # (S, n) int32
-    delta: np.ndarray         # (S, |Σ|) int32
-    fingerprints: np.ndarray  # (S, 2) uint32 [hi, lo]
-    dfa: DFA
-    stats: SFAStats
-
-    @property
-    def n_states(self) -> int:
-        return int(self.mappings.shape[0])
-
-    @property
-    def start(self) -> int:
-        return 0
-
-    def accepting_states(self) -> np.ndarray:
-        """F_s = { f | f(q0) ∈ F } (paper line 11, with I = {q0})."""
-        return self.dfa.accepting[self.mappings[:, self.dfa.start]]
-
-    def run(self, symbols: np.ndarray, state: int | None = None) -> int:
-        """Run the SFA like a plain DFA (one table lookup per character)."""
-        s = 0 if state is None else state
-        tbl = self.delta
-        for x in np.asarray(symbols, dtype=np.int64):
-            s = int(tbl[s, x])
-        return s
-
-    def mapping_of(self, symbols: np.ndarray) -> np.ndarray:
-        """Transition function of the whole input string, as a vector."""
-        return self.mappings[self.run(symbols)]
-
-
-# ==========================================================================
-# Faithful sequential construction (paper Algorithm 1, with §III-A toggles)
-# ==========================================================================
-
-
-def construct_sfa_sequential(
-    dfa: DFA,
-    *,
-    use_fingerprints: bool = True,
-    use_hashing: bool = True,
-    poly_index: int = 0,
-    max_states: int = 1_000_000,
-) -> SFA:
-    """Algorithm 1 with the paper's §III-A optimizations as toggles.
-
-    - fingerprints off: membership is the exhaustive vector comparison against
-      every known state (the paper's baseline — O(|Q|·|Q_s|) per test).
-    - fingerprints on, hashing off: linear scan compares 64-bit fingerprints,
-      exact vector compare only on fingerprint equality.
-    - hashing on (requires fingerprints): dict keyed by fingerprint with
-      collision chains — the paper's hash table, O(1) expected.
-    """
-    if use_hashing and not use_fingerprints:
-        raise ValueError("hashing requires fingerprints (paper §III-A)")
-    t0 = time.perf_counter()
-    stats = SFAStats(engine="sequential")
-    consts = BarrettConstants.create(nth_poly_low(poly_index))
-    n, k = dfa.n_states, dfa.n_symbols
-    table = dfa.table
-
-    def fp_of(vec: np.ndarray) -> int:
-        packed = _pack16(vec)
-        return fingerprint_int(packed, consts)
-
-    identity = np.arange(n, dtype=np.int32)
-    mappings: list = [identity]
-    fps: list = [fp_of(identity) if use_fingerprints else 0]
-    hash_table: dict = {fps[0]: [0]} if use_hashing else {}
-    delta_rows: list = []
-    worklist = [0]  # FIFO -> BFS discovery order (shared by all engines)
-    head = 0
-
-    while head < len(worklist):
-        cur = worklist[head]
-        head += 1
-        stats.rounds += 1
-        row = np.empty(k, dtype=np.int32)
-        cur_vec = mappings[cur]
-        for a in range(k):
-            nxt = table[cur_vec, a]  # f_next(q) = δ(f(q), σ) (paper line 6)
-            stats.candidates += 1
-            idx = _lookup_sequential(
-                nxt, mappings, fps, hash_table, stats,
-                use_fingerprints, use_hashing, fp_of,
-            )
-            if idx is None:
-                idx = len(mappings)
-                if idx >= max_states:
-                    raise StateBlowup(f"SFA exceeded {max_states} states")
-                mappings.append(np.asarray(nxt, dtype=np.int32))
-                f = fp_of(nxt) if use_fingerprints else 0
-                fps.append(f)
-                if use_hashing:
-                    hash_table.setdefault(f, []).append(idx)
-                worklist.append(idx)
-            row[a] = idx
-        delta_rows.append(row)
-
-    stats.wall_time_s = time.perf_counter() - t0
-    mapped = np.stack(mappings).astype(np.int32)
-    return SFA(
-        mappings=mapped,
-        delta=np.stack(delta_rows).astype(np.int32),
-        fingerprints=_fps_to_u32_pairs(fps),
-        dfa=dfa,
-        stats=stats,
-    )
-
-
-def _lookup_sequential(nxt, mappings, fps, hash_table, stats,
-                       use_fingerprints, use_hashing, fp_of):
-    if not use_fingerprints:
-        # Paper baseline: exhaustive comparison against all known states.
-        for i, m in enumerate(mappings):
-            stats.exact_compares += 1
-            if np.array_equal(m, nxt):
-                return i
-        return None
-    f = fp_of(nxt)
-    if use_hashing:
-        chain = hash_table.get(f, ())
-        stats.fp_compares += 1
-        for i in chain:
-            stats.exact_compares += 1
-            if np.array_equal(mappings[i], nxt):
-                return i
-            stats.collisions_detected += 1
-        return None
-    # fingerprints without hashing: linear fingerprint scan.
-    for i, fi in enumerate(fps):
-        stats.fp_compares += 1
-        if fi == f:
-            stats.exact_compares += 1
-            if np.array_equal(mappings[i], nxt):
-                return i
-            stats.collisions_detected += 1
-    return None
-
-
-def _pack16(vec: np.ndarray) -> np.ndarray:
-    v = np.asarray(vec, dtype=np.uint32)
-    if v.shape[0] % 2:
-        v = np.pad(v, (0, 1))
-    return (v[0::2] & 0xFFFF) | ((v[1::2] & 0xFFFF) << 16)
-
-
-def _fps_to_u32_pairs(fps: list) -> np.ndarray:
-    arr = np.zeros((len(fps), 2), dtype=np.uint32)
-    for i, f in enumerate(fps):
-        arr[i, 0] = (f >> 32) & 0xFFFFFFFF
-        arr[i, 1] = f & 0xFFFFFFFF
-    return arr
-
-
-# ==========================================================================
-# Vectorized frontier construction (the TPU-shaped algorithm, on NumPy)
-# ==========================================================================
-
-
-def construct_sfa_vectorized(
-    dfa: DFA,
-    *,
-    poly_index: int = 0,
-    max_states: int = 4_000_000,
-    tile: int = 4096,
-) -> SFA:
-    """Bulk-synchronous frontier closure.
-
-    Per round, the *whole frontier × alphabet* expands in one fused gather on
-    the transposed transition table (paper §III-B3: symbol-major layout), all
-    candidates are fingerprinted in one vectorized fold (paper §III-A), and
-    set membership is fingerprint ``searchsorted`` against the sorted known
-    set — the bulk equivalent of the paper's hash table. Discovery order is
-    row-major (frontier, symbol), identical to the sequential engine's FIFO
-    BFS, so the two engines produce bit-identical SFAs.
-    """
-    t0 = time.perf_counter()
-    stats = SFAStats(engine="vectorized")
-    consts = BarrettConstants.create(nth_poly_low(poly_index))
-    n, k = dfa.n_states, dfa.n_symbols
-    if n >= 1 << 16:
-        raise ValueError("vectorized engine packs 16-bit state ids (paper layout)")
-    tableT = dfa.transposed()  # (k, n) symbol-major
-
-    identity = np.arange(n, dtype=np.int32)[None]
-    mappings = identity.copy()                       # (S, n)
-    fps = _fp64_np(identity, consts)                 # (S,) uint64
-    order = np.argsort(fps, kind="stable")           # sorted view indices
-    delta = np.zeros((0, k), dtype=np.int32)
-    frontier_lo = 0                                  # mappings[frontier_lo:] unprocessed
-
-    while frontier_lo < mappings.shape[0]:
-        stats.rounds += 1
-        frontier = mappings[frontier_lo:]
-        new_rows = []
-        for t in range(0, frontier.shape[0], tile):
-            ft = frontier[t : t + tile]              # (m, n)
-            m = ft.shape[0]
-            # Fused expansion: next[f, σ, q] = δT[σ, f[q]]  — one gather.
-            cand = tableT[:, ft]                     # (k, m, n)
-            cand = np.ascontiguousarray(np.swapaxes(cand, 0, 1))  # (m, k, n)
-            cand = cand.reshape(m * k, n)
-            stats.candidates += m * k
-            cfps = _fp64_np(cand, consts)            # (m*k,)
-
-            ids, mappings, fps, order, n_new = _assign_ids_bulk(
-                cand, cfps, mappings, fps, order, stats, max_states
-            )
-            new_rows.append(ids.reshape(m, k))
-        delta = np.concatenate([delta, *new_rows], axis=0)
-        frontier_lo = delta.shape[0]
-
-    stats.wall_time_s = time.perf_counter() - t0
-    return SFA(
-        mappings=mappings,
-        delta=delta,
-        fingerprints=_u64_to_pairs(fps),
-        dfa=dfa,
-        stats=stats,
-    )
-
-
-def _fp64_np(states: np.ndarray, consts: BarrettConstants) -> np.ndarray:
-    pair = fingerprint_states_np(states, consts)
-    return (pair[..., 0].astype(np.uint64) << np.uint64(32)) | pair[..., 1].astype(
-        np.uint64
-    )
-
-
-def _u64_to_pairs(fps: np.ndarray) -> np.ndarray:
-    out = np.empty((fps.shape[0], 2), dtype=np.uint32)
-    out[:, 0] = (fps >> np.uint64(32)).astype(np.uint32)
-    out[:, 1] = (fps & np.uint64(0xFFFFFFFF)).astype(np.uint32)
-    return out
-
-
-def _assign_ids_bulk(cand, cfps, mappings, fps, order, stats, max_states):
-    """Map each candidate row to its SFA id, appending unseen states.
-
-    Candidates are deduplicated *in first-occurrence order* and checked
-    against the known set via fingerprint searchsorted; fingerprint hits are
-    confirmed with an exact vector compare (collision -> raise).
-    """
-    n_cand = cand.shape[0]
-
-    # --- membership test against the known set -----------------------------
-    sorted_fps = fps[order]
-    pos = np.searchsorted(sorted_fps, cfps)
-    pos_c = np.minimum(pos, len(sorted_fps) - 1)
-    fp_hit = sorted_fps[pos_c] == cfps
-    stats.fp_compares += n_cand
-    known_idx = np.where(fp_hit, order[pos_c], -1)
-
-    hit_rows = np.flatnonzero(fp_hit)
-    if hit_rows.size:
-        stats.exact_compares += int(hit_rows.size)
-        exact = np.all(cand[hit_rows] == mappings[known_idx[hit_rows]], axis=1)
-        if not np.all(exact):
-            stats.collisions_detected += int(np.sum(~exact))
-            raise FingerprintCollision(
-                f"{int(np.sum(~exact))} fingerprint collisions detected"
-            )
-
-    ids = known_idx.copy()
-
-    # --- dedup + append the genuinely new candidates ------------------------
-    new_rows = np.flatnonzero(known_idx < 0)
-    if new_rows.size:
-        new_fps = cfps[new_rows]
-        uniq_fp, first_pos, inverse = np.unique(
-            new_fps, return_index=True, return_inverse=True
-        )
-        # Exactness within the round: all rows in an fp-group must be equal
-        # to the group representative.
-        reps = cand[new_rows[first_pos]]          # (U, n)
-        same = np.all(cand[new_rows] == reps[inverse], axis=1)
-        if not np.all(same):
-            stats.collisions_detected += int(np.sum(~same))
-            raise FingerprintCollision("intra-round fingerprint collision")
-        # Renumber unique states by first occurrence (BFS order).
-        occ_order = np.argsort(first_pos, kind="stable")
-        rank_of_uniq = np.empty_like(occ_order)
-        rank_of_uniq[occ_order] = np.arange(occ_order.size)
-        base = mappings.shape[0]
-        if base + occ_order.size > max_states:
-            raise StateBlowup(f"SFA exceeded {max_states} states")
-        ids[new_rows] = base + rank_of_uniq[inverse]
-
-        append_states = reps[occ_order]
-        append_fps = uniq_fp[occ_order]
-        mappings = np.concatenate([mappings, append_states], axis=0)
-        fps = np.concatenate([fps, append_fps])
-        order = np.argsort(fps, kind="stable")  # re-sort the known set
-    return ids.astype(np.int32), mappings, fps, order, int(new_rows.size)
-
-
-# ==========================================================================
-# Public wrapper: exactness via collision retry
-# ==========================================================================
-
-
-def construct_sfa(
-    dfa: DFA,
-    *,
-    engine: str = "vectorized",
-    max_states: int = 4_000_000,
-    max_retries: int = 4,
-    **kwargs,
-) -> SFA:
-    """Construct the exact SFA; on a detected fingerprint collision, retry
-    with a fresh random irreducible polynomial (paper §II: P is random)."""
-    last: Exception | None = None
-    for attempt in range(max_retries):
-        try:
-            if engine == "sequential":
-                return construct_sfa_sequential(
-                    dfa, poly_index=attempt, max_states=max_states, **kwargs
-                )
-            if engine == "vectorized":
-                return construct_sfa_vectorized(
-                    dfa, poly_index=attempt, max_states=max_states, **kwargs
-                )
-            if engine == "jax":
-                from . import sfa_jax
-
-                return sfa_jax.construct_sfa_jax(
-                    dfa, poly_index=attempt, max_states=max_states, **kwargs
-                )
-            raise ValueError(f"unknown engine {engine!r}")
-        except FingerprintCollision as e:  # pragma: no cover (astronomically rare)
-            last = e
-    raise last  # pragma: no cover
+__all__ = [
+    "SFA",
+    "FingerprintCollision",
+    "SFAStats",
+    "StateBlowup",
+    "construct_sfa",
+    "construct_sfa_sequential",
+    "construct_sfa_vectorized",
+]

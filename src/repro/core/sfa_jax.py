@@ -1,259 +1,18 @@
-"""SFA construction as a jitted, fixed-capacity JAX program — the form of the
-paper's algorithm that runs on a TPU.
+"""Compatibility shim: the jitted engine moved to :mod:`repro.construction`.
 
-The bulk-synchronous round is one jitted call with static shapes:
-
-  1. slice a tile of ``T`` unprocessed frontier states from the state buffer;
-  2. expand frontier × alphabet in one fused gather (paper's coarse+medium
-     parallelism collapsed into a single data-parallel tensor op);
-  3. fingerprint all ``T·|Σ|`` candidates with the bit-sliced Rabin/Barrett
-     fold (``core.fingerprint``);
-  4. set membership for all candidates at once: one multi-key ``lax.sort``
-     over (known ∪ candidates) fingerprints groups equal fingerprints into
-     runs; each run's head decides the id (known id, or a freshly assigned
-     one in BFS first-occurrence order). This is the TPU-idiomatic
-     replacement for the paper's hash table — no pointer chasing, O(log)
-     depth, fully vectorized.
-  5. exactness (paper §III-A, non-probabilistic): every candidate is
-     vector-compared against its run head; any fingerprint-equal but
-     vector-unequal pair sets a collision flag, and the host-side wrapper
-     retries with a fresh irreducible polynomial.
-
-Dynamic sizes (frontier length, number of new states) live in scalars; all
-arrays are fixed capacity, so one XLA compilation serves the whole closure.
-Discovery order is identical to the sequential/vectorized engines (FIFO BFS,
-symbols in order), so all three engines produce bit-identical SFAs.
+``construct_sfa_jax`` is now the ``P = 1`` special case of
+:func:`repro.construction.construct_bank` (the batched bank rounds); import
+it from ``repro.construction`` in new code.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from .dfa import DFA
-from .fingerprint import (
-    BarrettConstants,
-    fingerprint_states,
-    nth_poly_low,
+from ..construction import (  # noqa: F401
+    SFA,
+    FingerprintCollision,
+    SFAStats,
+    StateBlowup,
+    construct_sfa_jax,
 )
-from .sfa import SFA, FingerprintCollision, SFAStats, StateBlowup
 
-_U32MAX = jnp.uint32(0xFFFFFFFF)
-
-
-@functools.partial(jax.jit, static_argnames=("tile", "n", "k", "capacity"))
-def _round_step(
-    table,            # (n, k) int32
-    states_buf,       # (C, n) int32
-    fp_hi, fp_lo,     # (C,) uint32
-    delta_buf,        # (C, k) int32
-    n_states,         # () int32
-    frontier_lo,      # () int32
-    weights,          # (W, 2) uint32 fingerprint fold constants
-    poly_limbs,       # (4,) uint32 [p_hi, p_lo, mu_hi, mu_lo]
-    *, tile: int, n: int, k: int, capacity: int,
-):
-    consts = _consts_from_limbs(poly_limbs)
-
-    # ---- 1/2: slice frontier tile, fused expansion -------------------------
-    ft = jax.lax.dynamic_slice(states_buf, (frontier_lo, 0), (tile, n))
-    row_ids = frontier_lo + jnp.arange(tile, dtype=jnp.int32)
-    row_valid = row_ids < n_states                          # (T,)
-    # next[f, a, q] = δ(f[q], a): one gather, symbol axis materialized.
-    cand = table[ft]                                        # (T, n, k)
-    cand = jnp.swapaxes(cand, 1, 2).reshape(tile * k, n)    # (T·k, n) row-major (f, a)
-    cand_valid = jnp.repeat(row_valid, k)                   # (T·k,)
-
-    # ---- 3: fingerprint all candidates --------------------------------------
-    fp = _fingerprint_with(cand, weights, consts)           # (T·k, 2) uint32
-    c_hi, c_lo = fp[:, 0], fp[:, 1]
-
-    # ---- 4: sort-merge membership -------------------------------------------
-    C = capacity
-    total = C + tile * k
-    known_valid = jnp.arange(C, dtype=jnp.int32) < n_states
-    inval = jnp.concatenate([(~known_valid), (~cand_valid)]).astype(jnp.uint32)
-    hi = jnp.concatenate([fp_hi, c_hi])
-    lo = jnp.concatenate([fp_lo, c_lo])
-    is_cand = jnp.concatenate(
-        [jnp.zeros(C, jnp.uint32), jnp.ones(tile * k, jnp.uint32)]
-    )
-    payload = jnp.concatenate(
-        [jnp.arange(C, dtype=jnp.int32), jnp.arange(tile * k, dtype=jnp.int32)]
-    )
-    # Sort by (validity, fp_hi, fp_lo, known<cand, original index).
-    tie = payload.astype(jnp.uint32)
-    s_inval, s_hi, s_lo, s_isc, s_tie, s_pay = jax.lax.sort(
-        (inval, hi, lo, is_cand, tie, payload), num_keys=5
-    )
-
-    run_start = jnp.concatenate(
-        [jnp.ones(1, bool),
-         (s_hi[1:] != s_hi[:-1]) | (s_lo[1:] != s_lo[:-1]) | (s_inval[1:] != s_inval[:-1])]
-    )
-    pos = jnp.arange(total, dtype=jnp.int32)
-    head_pos = jax.lax.cummax(jnp.where(run_start, pos, -1), axis=0)
-    head_pay = s_pay[head_pos]
-    head_is_known = s_isc[head_pos] == 0
-
-    # New-state heads: candidate-headed runs that are valid.
-    s_valid = s_inval == 0
-    is_new_head = run_start & (s_isc == 1) & s_valid
-    # Rank new heads by original candidate index -> BFS discovery order.
-    rank_key = jnp.where(is_new_head, s_pay, jnp.int32(2**31 - 1))
-    order = jnp.argsort(rank_key)
-    ranks = jnp.zeros(total, jnp.int32).at[order].set(jnp.arange(total, dtype=jnp.int32))
-    new_id_at_pos = n_states + ranks                         # valid where is_new_head
-
-    # id of each sorted position = head's id.
-    head_new_id = new_id_at_pos[head_pos]
-    id_sorted = jnp.where(head_is_known, head_pay, head_new_id)
-
-    # ---- 5: exactness check (candidates vs run head vectors) ----------------
-    cand_rows = s_isc == 1
-    # Reference vector for every sorted position's run head:
-    ref_known = states_buf[jnp.clip(head_pay, 0, C - 1)]
-    ref_cand = cand[jnp.clip(head_pay, 0, tile * k - 1)]
-    ref_vec = jnp.where(head_is_known[:, None], ref_known, ref_cand)
-    own_vec = cand[jnp.clip(s_pay, 0, tile * k - 1)]
-    mismatch = jnp.any(ref_vec != own_vec, axis=1) & cand_rows & s_valid
-    collision = jnp.any(mismatch)
-
-    # ---- append new states ----------------------------------------------------
-    num_new = jnp.sum(is_new_head.astype(jnp.int32))
-    # Scatter new states / fps into the buffers.
-    tgt = jnp.where(is_new_head, new_id_at_pos, C)  # C = out-of-range drop
-    src_vec = cand[jnp.clip(s_pay, 0, tile * k - 1)]
-    states_buf = states_buf.at[tgt].set(src_vec, mode="drop")
-    fp_hi = fp_hi.at[tgt].set(s_hi, mode="drop")
-    fp_lo = fp_lo.at[tgt].set(s_lo, mode="drop")
-
-    # ---- write δ_s rows for the tile -----------------------------------------
-    # Candidate (f, a) order is row-major, so ids for candidates (scattered
-    # back to original order) reshape straight into delta rows. Non-candidate
-    # rows scatter out of range and drop.
-    ids_orig = jnp.zeros(tile * k, jnp.int32).at[
-        jnp.where(cand_rows, s_pay, tile * k)
-    ].set(id_sorted, mode="drop")
-    delta_rows = ids_orig.reshape(tile, k)
-    delta_buf = jax.lax.dynamic_update_slice(delta_buf, delta_rows, (frontier_lo, 0))
-
-    processed = jnp.minimum(n_states - frontier_lo, tile)
-    return (
-        states_buf, fp_hi, fp_lo, delta_buf,
-        n_states + num_new, frontier_lo + processed, collision,
-    )
-
-
-def _consts_from_limbs(limbs):
-    # Rebuild python-int constants is impossible inside jit; we only need the
-    # limb values, so mirror BarrettConstants with traced uint32 scalars.
-    class _C:
-        pass
-
-    c = _C()
-    c.p_hi, c.p_lo, c.mu_hi, c.mu_lo = limbs[0], limbs[1], limbs[2], limbs[3]
-    return c
-
-
-def _fingerprint_with(states, weights, c):
-    """fingerprint_states with traced Barrett constants (limb form)."""
-    from .fingerprint import clmul32, clmul64, pack_states_u32
-
-    words = pack_states_u32(states)
-    wh = weights[: words.shape[-1], 0]
-    wl = weights[: words.shape[-1], 1]
-    p_lo_h, p_lo_l = clmul32(words, wl)
-    p_hi_h, p_hi_l = clmul32(words, wh)
-
-    def xred(x):
-        return jax.lax.reduce(x, jnp.zeros((), x.dtype), jax.lax.bitwise_xor, (x.ndim - 1,))
-
-    l0 = xred(p_lo_l)
-    l1 = xred(p_lo_h ^ p_hi_l)
-    l2 = xred(p_hi_h)
-    # Barrett with traced limbs:
-    t1pre = (jnp.zeros_like(l2), l2)
-    m3, m2, _, _ = clmul64(t1pre, (c.mu_hi, c.mu_lo))
-    t2pre = (t1pre[0] ^ m3, t1pre[1] ^ m2)
-    _, _, q1, q0 = clmul64(t2pre, (c.p_hi, c.p_lo))
-    return jnp.stack([l1 ^ q1, l0 ^ q0], axis=-1)
-
-
-def construct_sfa_jax(
-    dfa: DFA,
-    *,
-    poly_index: int = 0,
-    max_states: int = 200_000,
-    tile: int = 256,
-) -> SFA:
-    """Host loop driving the jitted round; returns the exact SFA."""
-    import time
-
-    t0 = time.perf_counter()
-    stats = SFAStats(engine="jax")
-    n, k = dfa.n_states, dfa.n_symbols
-    if n >= 1 << 16:
-        raise ValueError("jax engine packs 16-bit state ids")
-    consts = BarrettConstants.create(nth_poly_low(poly_index))
-    # Buffers are over-allocated by one tile so the frontier dynamic_slice
-    # never clamps (XLA clamps out-of-range starts, which would silently
-    # misalign the final tile).
-    C = int(max_states) + tile
-
-    from .fingerprint import fold_weights_u32
-
-    n_words = (n + 1) // 2
-    weights = fold_weights_u32(n_words, consts)
-    poly_limbs = jnp.asarray(
-        [
-            (consts.poly_low >> 32) & 0xFFFFFFFF,
-            consts.poly_low & 0xFFFFFFFF,
-            (consts.mu_low >> 32) & 0xFFFFFFFF,
-            consts.mu_low & 0xFFFFFFFF,
-        ],
-        dtype=jnp.uint32,
-    )
-
-    table = jnp.asarray(dfa.table)
-    states_buf = jnp.zeros((C, n), jnp.int32)
-    states_buf = states_buf.at[0].set(jnp.arange(n, dtype=jnp.int32))
-    fp0 = np.asarray(
-        fingerprint_states(jnp.arange(n, dtype=jnp.int32)[None], consts)
-    )[0]
-    fp_hi = jnp.full((C,), _U32MAX, jnp.uint32).at[0].set(jnp.uint32(fp0[0]))
-    fp_lo = jnp.full((C,), _U32MAX, jnp.uint32).at[0].set(jnp.uint32(fp0[1]))
-    delta_buf = jnp.zeros((C, k), jnp.int32)
-    n_states = jnp.asarray(1, jnp.int32)
-    frontier_lo = jnp.asarray(0, jnp.int32)
-
-    while int(frontier_lo) < int(n_states):
-        stats.rounds += 1
-        stats.candidates += min(tile, int(n_states) - int(frontier_lo)) * k
-        (states_buf, fp_hi, fp_lo, delta_buf, n_states, frontier_lo, collision) = (
-            _round_step(
-                table, states_buf, fp_hi, fp_lo, delta_buf, n_states, frontier_lo,
-                weights, poly_limbs, tile=tile, n=n, k=k, capacity=C,
-            )
-        )
-        if bool(collision):
-            stats.collisions_detected += 1
-            raise FingerprintCollision("jax engine detected a collision")
-        if int(n_states) >= max_states:
-            raise StateBlowup(f"SFA exceeded capacity {max_states}")
-
-    S = int(n_states)
-    stats.wall_time_s = time.perf_counter() - t0
-    fps = np.stack(
-        [np.asarray(fp_hi[:S]), np.asarray(fp_lo[:S])], axis=1
-    ).astype(np.uint32)
-    return SFA(
-        mappings=np.asarray(states_buf[:S]),
-        delta=np.asarray(delta_buf[:S]),
-        fingerprints=fps,
-        dfa=dfa,
-        stats=stats,
-    )
+__all__ = ["construct_sfa_jax"]

@@ -9,21 +9,36 @@
 
 ``Scanner.compile`` resolves mode (SFA vs enumeration, per pattern, under a
 state budget), backend (reference / xla / pallas), distribution (local /
-shard_map), and chunking from a :class:`ScanPlan`; every configuration
-produces bit-identical results. The pre-engine free functions in
-``repro.core.matching`` / ``repro.core.multipattern`` are deprecated shims
-over :mod:`repro.engine.executors`.
+shard_map), chunking, and construction (batched bank rounds + the
+content-addressed SFA cache — recompiling the same patterns performs zero
+construction rounds) from a :class:`ScanPlan`; every configuration produces
+bit-identical results. :mod:`repro.engine.executors` is the single home of
+the parallel entry points (the pre-engine shims in ``repro.core`` were
+removed after the PR-2 deprecation window).
 """
 
-from .plan import BACKENDS, DISTRIBUTIONS, MODES, ChunkPolicy, ScanPlan
-from .scanner import PatternGroup, Scanner, ScanResult
+from .plan import (
+    BACKENDS,
+    CONSTRUCTION_ENGINES,
+    CONSTRUCTION_METHODS,
+    DISTRIBUTIONS,
+    MODES,
+    ChunkPolicy,
+    ConstructionPolicy,
+    ScanPlan,
+)
+from .scanner import ConstructionReport, PatternGroup, Scanner, ScanResult
 from .streaming import StreamResult, StreamSession
 
 __all__ = [
     "BACKENDS",
+    "CONSTRUCTION_ENGINES",
+    "CONSTRUCTION_METHODS",
     "DISTRIBUTIONS",
     "MODES",
     "ChunkPolicy",
+    "ConstructionPolicy",
+    "ConstructionReport",
     "PatternGroup",
     "ScanPlan",
     "ScanResult",

@@ -31,6 +31,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map as compat_shard_map
+from ..construction import SFA
 from ..core import monoid as M
 from ..core.dfa import DFA
 from ..core.matching import (
@@ -38,7 +39,6 @@ from ..core.matching import (
     chunk_mapping_enumeration,
     chunk_state_sfa,
 )
-from ..core.sfa import SFA
 
 FN = M.function_monoid()
 

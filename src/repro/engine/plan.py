@@ -17,6 +17,8 @@ from typing import Any
 MODES = ("auto", "sfa", "enumeration")
 BACKENDS = ("reference", "xla", "pallas")
 DISTRIBUTIONS = ("local", "shard_map")
+CONSTRUCTION_METHODS = ("auto", "batched", "loop")
+CONSTRUCTION_ENGINES = ("vectorized", "sequential", "jax")
 
 #: Default SFA state budget for ``mode="auto"``: patterns whose exact SFA
 #: closes within this many states get the paper's single-lookup inner loop;
@@ -58,6 +60,86 @@ class ChunkPolicy:
 
 
 @dataclass(frozen=True)
+class ConstructionPolicy:
+    """How ``Scanner.compile`` builds the SFAs its plan needs.
+
+    ``method``
+        ``"batched"`` constructs every cache-missing pattern in one
+        :func:`repro.construction.construct_bank` call (all frontiers advance
+        simultaneously in jitted bulk-synchronous rounds — the paper's
+        task-level construction parallelism); ``"loop"`` is the per-pattern
+        sequential loop (``engine=`` picks the single-pattern engine);
+        ``"auto"`` batches when at least 4 patterns miss the cache and loops
+        otherwise (a bank round has to amortize its XLA compilation).
+    ``cache``
+        ``"shared"`` (the process-wide content-addressed
+        :class:`repro.construction.SFACache` — recompiling the same patterns
+        performs zero construction rounds), ``"off"``, or an explicit
+        :class:`~repro.construction.SFACache` instance (isolated caches for
+        tests and multi-tenant serving).
+    ``distribution``
+        ``"shard_map"`` shards the *pattern* axis of the batched construction
+        buffers over ``mesh`` (default: a fresh 1-axis mesh named
+        ``pattern_axis``); ``"local"`` keeps construction on one device.
+    ``tile`` / ``max_retries``
+        frontier states processed per pattern per round, and the per-pattern
+        polynomial retry budget on a detected fingerprint collision.
+    """
+
+    method: str = "auto"
+    engine: str = "vectorized"
+    tile: int = 128
+    cache: Any = "shared"
+    distribution: str = "local"
+    mesh: Any = None
+    pattern_axis: str = "pattern"
+    max_retries: int = 4
+
+    def validate(self) -> "ConstructionPolicy":
+        if self.method not in CONSTRUCTION_METHODS:
+            raise ValueError(
+                f"construction method must be one of {CONSTRUCTION_METHODS}, "
+                f"got {self.method!r}"
+            )
+        if self.engine not in CONSTRUCTION_ENGINES:
+            raise ValueError(
+                f"construction engine must be one of {CONSTRUCTION_ENGINES}, "
+                f"got {self.engine!r}"
+            )
+        if self.tile < 1:
+            raise ValueError(f"construction tile must be >= 1, got {self.tile}")
+        if self.max_retries < 1:
+            raise ValueError("construction max_retries must be >= 1")
+        if self.distribution not in DISTRIBUTIONS:
+            raise ValueError(
+                f"construction distribution must be one of {DISTRIBUTIONS}, "
+                f"got {self.distribution!r}"
+            )
+        from ..construction import SFACache
+
+        if not (self.cache in ("shared", "off", None)
+                or isinstance(self.cache, SFACache)):
+            raise ValueError(
+                "construction cache must be 'shared', 'off', None, or an "
+                f"SFACache instance, got {self.cache!r}"
+            )
+        return self
+
+    def resolve_cache(self):
+        """-> the SFACache to consult, or None when caching is off."""
+        from ..construction import SFACache, shared_cache
+
+        if isinstance(self.cache, SFACache):
+            return self.cache
+        if self.cache == "shared":
+            return shared_cache()
+        return None
+
+    def with_(self, **overrides) -> "ConstructionPolicy":
+        return replace(self, **overrides).validate()
+
+
+@dataclass(frozen=True)
 class ScanPlan:
     """One execution plan for a compiled :class:`~repro.engine.Scanner`.
 
@@ -78,12 +160,17 @@ class ScanPlan:
         of ``mesh``; a 1-device mesh is built when ``mesh`` is None).
     ``chunking``
         a :class:`ChunkPolicy`.
+    ``construction``
+        a :class:`ConstructionPolicy`: how the SFAs behind ``mode="sfa"`` /
+        ``"auto"`` get built (batched bank rounds vs per-pattern loop,
+        content-addressed caching, pattern-sharded construction meshes).
     """
 
     mode: str = "auto"
     backend: str = "xla"
     distribution: str = "local"
     chunking: ChunkPolicy = field(default_factory=ChunkPolicy)
+    construction: ConstructionPolicy = field(default_factory=ConstructionPolicy)
     sfa_state_budget: int = DEFAULT_SFA_STATE_BUDGET
     mesh: Any = None
     data_axis: str = "data"
@@ -109,6 +196,7 @@ class ScanPlan:
                 "inner loop is local-only for now)"
             )
         self.chunking.validate()
+        self.construction.validate()
         return self
 
     def with_(self, **overrides) -> "ScanPlan":

@@ -5,8 +5,10 @@
 :class:`~repro.core.dfa.DFA`, a :class:`~repro.core.multipattern.PatternBank`,
 or a sequence/mapping of those — and a :class:`~repro.engine.plan.ScanPlan`
 saying how to run. Compilation resolves each pattern's matching mode
-(``auto`` attempts SFA construction under the plan's state budget, falling
-back to enumeration on :class:`~repro.core.sfa.StateBlowup`), stacks the
+(``auto`` attempts SFA construction under the plan's state budget — through
+the content-addressed cache and the batched bank closure of
+:mod:`repro.construction` — falling back to enumeration on
+:class:`~repro.construction.StateBlowup`), stacks the
 per-pattern tables into padded device arrays (stacked SFA deltas + mapping
 lookups for SFA-mode patterns — the bank-axis version of the paper's
 single-lookup inner loop), and returns a scanner exposing:
@@ -32,9 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..compat import make_mesh
+from ..construction import SFA, StateBlowup, construct_bank
 from ..core.dfa import DFA
 from ..core.multipattern import PatternBank
-from ..core.sfa import SFA, StateBlowup, construct_sfa
 from . import executors as X
 from .plan import ChunkPolicy, ScanPlan
 from .streaming import StreamResult, StreamSession
@@ -159,6 +161,107 @@ def _size_partition(sizes: Sequence[int], edges: Sequence[int]):
 
 
 # --------------------------------------------------------------------------
+# Construction resolution (cache + bank rounds)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ConstructionReport:
+    """What ``Scanner.compile`` did to obtain its SFAs.
+
+    ``rounds`` is zero when every pattern was answered by the cache — the
+    "recompiling the same patterns performs zero construction rounds"
+    contract the cache tests assert.
+    """
+
+    rounds: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    constructed: int = 0
+    blown: int = 0
+    method: str = "none"
+    retries: int = 0
+
+
+def _resolve_sfas(ids, dfas, plan: ScanPlan):
+    """Per-pattern mode resolution: cache lookups first, then one bank
+    construction for the misses. -> (modes, {index: SFA}, report)."""
+    P = len(dfas)
+    if plan.mode == "enumeration":
+        return ["enumeration"] * P, {}, ConstructionReport()
+
+    policy = plan.construction
+    budget = plan.sfa_state_budget
+    cache = policy.resolve_cache()
+
+    def fallback(i):
+        if plan.mode == "sfa":
+            raise StateBlowup(
+                f"pattern {ids[i]!r}: SFA exceeds the "
+                f"{budget}-state budget and "
+                "mode='sfa' forbids the enumeration fallback"
+            ) from None
+        return "enumeration"
+
+    modes: list = [None] * P
+    sfas: dict = {}
+    hits = misses = 0
+    need = []
+    for i, d in enumerate(dfas):
+        kind, sfa = (None, None) if cache is None else cache.lookup(
+            d, max_states=budget
+        )
+        if kind == "sfa":
+            hits += 1
+            sfas[i], modes[i] = sfa, "sfa"
+        elif kind == "blowup":
+            hits += 1
+            modes[i] = fallback(i)
+        else:
+            misses += 1
+            need.append(i)
+
+    rounds = retries = blown_count = 0
+    method = "none"
+    if need:
+        method = policy.method
+        if method == "auto":
+            # A bank round only pays once the missing set amortizes its XLA
+            # compilation; small miss sets close faster on the NumPy loop.
+            method = "batched" if len(need) >= 4 else "loop"
+        result = construct_bank(
+            [dfas[i] for i in need],
+            max_states=budget,
+            tile=policy.tile,
+            max_retries=policy.max_retries,
+            method=method,
+            engine=policy.engine,
+            distribution=policy.distribution,
+            mesh=policy.mesh,
+            pattern_axis=policy.pattern_axis,
+        )
+        rounds = result.stats.rounds
+        retries = int(np.sum(result.stats.retries))
+        for j, i in enumerate(need):
+            if result.blown[j]:
+                blown_count += 1
+                if cache is not None:
+                    cache.store_blowup(dfas[i], budget)
+                modes[i] = fallback(i)
+            else:
+                sfas[i] = result.sfas[j]
+                modes[i] = "sfa"
+                if cache is not None:
+                    cache.store(dfas[i], result.sfas[j])
+    report = ConstructionReport(
+        rounds=rounds, cache_hits=hits, cache_misses=misses,
+        constructed=len(need) - blown_count, blown=blown_count,
+        method=method, retries=retries,
+    )
+    return modes, sfas, report
+
+
+# --------------------------------------------------------------------------
 # Scan results
 # --------------------------------------------------------------------------
 
@@ -187,12 +290,14 @@ class ScanResult:
 class Scanner:
     """A compiled multi-pattern scan engine. Build with :meth:`compile`."""
 
-    def __init__(self, ids, dfas, groups, plan, single, mesh):
+    def __init__(self, ids, dfas, groups, plan, single, mesh,
+                 construction_report: ConstructionReport | None = None):
         self.ids = ids
         self.plan = plan
         self.groups = groups
         self.single = single
         self.mesh = mesh
+        self.construction_report = construction_report or ConstructionReport()
         self.alphabet = dfas[0].alphabet
         self.n_patterns = len(dfas)
         self.n_max = max(d.n_states for d in dfas)
@@ -222,26 +327,10 @@ class Scanner:
 
         # Resolve per-pattern mode. ``auto`` = the paper's criterion: use the
         # SFA when construction closes under the budget, enumeration when it
-        # blows up (Mytkowicz-style fallback).
-        modes = []
-        sfas: dict = {}
-        for i, d in enumerate(dfas):
-            if plan.mode == "enumeration":
-                modes.append("enumeration")
-                continue
-            try:
-                sfas[i] = construct_sfa(
-                    d, engine="vectorized", max_states=plan.sfa_state_budget
-                )
-                modes.append("sfa")
-            except StateBlowup:
-                if plan.mode == "sfa":
-                    raise StateBlowup(
-                        f"pattern {ids[i]!r}: SFA exceeds the "
-                        f"{plan.sfa_state_budget}-state budget and "
-                        "mode='sfa' forbids the enumeration fallback"
-                    ) from None
-                modes.append("enumeration")
+        # blows up (Mytkowicz-style fallback). Construction goes through the
+        # content-addressed cache + the batched bank closure (see
+        # repro.construction): recompiling the same patterns is free.
+        modes, sfas, report = _resolve_sfas(ids, dfas, plan)
 
         mesh = None
         if plan.distribution == "shard_map":
@@ -268,7 +357,7 @@ class Scanner:
                     part, [dfas[i] for i in part], [ids[i] for i in part],
                     mode, [sfas.get(i) for i in part], plan, mesh,
                 ))
-        return cls(ids, dfas, groups, plan, single, mesh)
+        return cls(ids, dfas, groups, plan, single, mesh, report)
 
     @staticmethod
     def _build_group(indices, dfas, gids, mode, sfas, plan, mesh) -> PatternGroup:
@@ -476,11 +565,15 @@ class Scanner:
     # -- introspection ------------------------------------------------------
 
     def describe(self) -> str:
+        r = self.construction_report
         lines = [
             f"Scanner: {self.n_patterns} pattern(s), alphabet |Σ|="
             f"{len(self.alphabet)}, plan=({self.plan.mode}/"
             f"{self.plan.backend}/{self.plan.distribution}, "
             f"n_chunks={self.plan.chunking.n_chunks})",
+            f"  construction: {r.rounds} round(s) via {r.method}, "
+            f"cache {r.cache_hits} hit(s) / {r.cache_misses} miss(es), "
+            f"{r.constructed} built, {r.blown} blown",
         ]
         for g in self.groups:
             extra = ""

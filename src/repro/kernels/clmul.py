@@ -41,10 +41,11 @@ def _clmul32_block(a: jnp.ndarray, b: jnp.ndarray) -> tuple:
     return hi, lo
 
 
-def _fingerprint_kernel(words_ref, weights_ref, consts_ref, out_ref):
-    words = words_ref[...]            # (Bb, W) uint32
-    w_hi = weights_ref[..., 0][None]  # (1, W)
-    w_lo = weights_ref[..., 1][None]
+def _fold_block(words, weights, c):
+    """Fold + Barrett-reduce one block: (Bb, W) words with (W, 2) fold
+    constants and (4,) Barrett limbs -> ((Bb,) hi, (Bb,) lo)."""
+    w_hi = weights[..., 0][None]      # (1, W)
+    w_lo = weights[..., 1][None]
 
     # Fold: 96-bit partial products, XOR-reduced over the word axis.
     p_lo_h, p_lo_l = _clmul32_block(words, jnp.broadcast_to(w_lo, words.shape))
@@ -58,7 +59,6 @@ def _fingerprint_kernel(words_ref, weights_ref, consts_ref, out_ref):
     l2 = xred(p_hi_h)
 
     # Barrett reduction with constants [p_hi, p_lo, mu_hi, mu_lo].
-    c = consts_ref[...]
     p = (jnp.broadcast_to(c[0], l2.shape), jnp.broadcast_to(c[1], l2.shape))
     mu = (jnp.broadcast_to(c[2], l2.shape), jnp.broadcast_to(c[3], l2.shape))
 
@@ -67,8 +67,13 @@ def _fingerprint_kernel(words_ref, weights_ref, consts_ref, out_ref):
     m3, m2 = _clmul64_hi(t1pre, mu)
     t2pre = (t1pre[0] ^ m3, t1pre[1] ^ m2)
     q1, q0 = _clmul64_lo(t2pre, p)
-    out_ref[..., 0] = l1 ^ q1
-    out_ref[..., 1] = l0 ^ q0
+    return l1 ^ q1, l0 ^ q0
+
+
+def _fingerprint_kernel(words_ref, weights_ref, consts_ref, out_ref):
+    hi, lo = _fold_block(words_ref[...], weights_ref[...], consts_ref[...])
+    out_ref[..., 0] = hi
+    out_ref[..., 1] = lo
 
 
 def _clmul64_hi(a: tuple, b: tuple) -> tuple:
@@ -138,3 +143,59 @@ def consts_limbs_of(consts: BarrettConstants) -> jnp.ndarray:
         ],
         dtype=jnp.uint32,
     )
+
+
+# --------------------------------------------------------------------------
+# Bank variant: the fold batched over the pattern axis
+# --------------------------------------------------------------------------
+#
+# Batched construction (repro.construction.batched) fingerprints every
+# pattern's candidate tile each round, and each pattern carries its *own*
+# fold/Barrett constants (per-pattern polynomial retry re-randomizes one
+# pattern's P(t) without touching the others). The bank kernel adds the
+# pattern axis to the grid: cell (p, i) folds block i of pattern p with
+# pattern p's constants, which stay VMEM-resident across that pattern's
+# whole block row — the same residency argument as the multi-automaton
+# match kernel.
+
+
+def _fingerprint_bank_kernel(words_ref, weights_ref, consts_ref, out_ref):
+    hi, lo = _fold_block(words_ref[0], weights_ref[0], consts_ref[0])
+    out_ref[0, :, 0] = hi
+    out_ref[0, :, 1] = lo
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def fingerprint_bank_pallas(
+    words: jnp.ndarray,
+    weights: jnp.ndarray,
+    consts_limbs: jnp.ndarray,
+    *,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-pattern batched fingerprints.
+
+    words: (P, B, W) u32; weights: (P, W, 2) u32 per-pattern fold constants;
+    consts_limbs: (P, 4) u32 per-pattern Barrett constants -> (P, B, 2) u32.
+    Grid (pattern, block): pattern p's constants load once per row of blocks.
+    """
+    P, B, W = words.shape
+    block_b = min(block_b, B)
+    if B % block_b:
+        pad = block_b - B % block_b
+        words = jnp.pad(words, ((0, 0), (0, pad), (0, 0)))
+    grid = (P, words.shape[1] // block_b)
+    out = pl.pallas_call(
+        _fingerprint_bank_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_b, W), lambda p, i: (p, i, 0)),
+            pl.BlockSpec((1, W, 2), lambda p, i: (p, 0, 0)),
+            pl.BlockSpec((1, 4), lambda p, i: (p, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_b, 2), lambda p, i: (p, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, words.shape[1], 2), jnp.uint32),
+        interpret=interpret,
+    )(words, weights, consts_limbs)
+    return out[:, :B]

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.core.fingerprint import BarrettConstants, fold_weights_u32
 
-from .clmul import consts_limbs_of, fingerprint_pallas
+from .clmul import consts_limbs_of, fingerprint_bank_pallas, fingerprint_pallas
 from .compose import compose_pallas
 from .match_scan import match_bank_chunks_pallas, match_chunks_pallas
 
@@ -40,6 +40,38 @@ def fingerprint(
     weights = fold_weights_u32(words.shape[-1], consts)
     return fingerprint_pallas(
         words, weights, consts_limbs_of(consts), block_b=block_b, interpret=interpret
+    )
+
+
+def fingerprint_bank(
+    words: jnp.ndarray,
+    consts_list,
+    *,
+    block_b: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Batched Rabin fingerprints over the pattern axis: (P, B, W) packed
+    words with one :class:`BarrettConstants` per pattern -> (P, B, 2).
+
+    This is the fold of the batched construction rounds
+    (:mod:`repro.construction.batched`) as a standalone kernel: per-pattern
+    constants (each pattern may sit on a different polynomial after a
+    collision retry) ride the grid's pattern axis and stay VMEM-resident
+    across that pattern's block row. On CPU the construction rounds keep
+    their fused-XLA fold (interpret-mode Pallas would dominate); on a TPU
+    runtime this kernel is the drop-in fold.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    P, B, W = words.shape
+    if len(consts_list) != P:
+        raise ValueError(f"expected {P} per-pattern constants, got "
+                         f"{len(consts_list)}")
+    weights = jnp.stack(
+        [fold_weights_u32(W, c) for c in consts_list])         # (P, W, 2)
+    limbs = jnp.stack([consts_limbs_of(c) for c in consts_list])  # (P, 4)
+    return fingerprint_bank_pallas(
+        words, weights, limbs, block_b=block_b, interpret=interpret
     )
 
 

@@ -14,7 +14,7 @@ import ``given, settings, st`` from here:
   examples (seed derived from the test name + example index, so failures
   reproduce across runs and machines) for the strategies the suite actually
   uses: ``integers``, ``sampled_from``, ``lists``, ``text``, ``booleans``,
-  ``tuples``, ``one_of``.
+  ``tuples``, ``one_of``, ``dictionaries``.
 
 The fallback deliberately does NOT shrink — it exists to keep the properties
 exercised offline, not to replace hypothesis.
@@ -73,6 +73,22 @@ except ImportError:
         def one_of(*strategies):
             choices = list(strategies)
             return _Strategy(lambda rng: rng.choice(choices).draw(rng))
+
+        @staticmethod
+        def dictionaries(keys, values, min_size=0, max_size=10):
+            """Dict strategy: unique drawn keys -> drawn values (the subset
+            of hypothesis semantics the construction-cache tests use)."""
+
+            def draw(rng):
+                size = rng.randint(min_size, max_size)
+                out = {}
+                attempts = 0
+                while len(out) < size and attempts < size * 10 + 10:
+                    out[keys.draw(rng)] = values.draw(rng)
+                    attempts += 1
+                return out
+
+            return _Strategy(draw)
 
         @staticmethod
         def text(alphabet="abcdefghijklmnopqrstuvwxyz", min_size=0, max_size=20):

@@ -1,0 +1,388 @@
+"""The construction subsystem: batched bank closure, stores, cache, kernels.
+
+Pins the PR's contracts:
+
+* ``construct_bank`` is bit-identical to per-pattern ``construct_sfa`` on
+  all 23 bundled PROSITE signatures, against all three single-pattern
+  engines (vectorized over the full exact bank; sequential and jax under a
+  shared budget, including blowup agreement);
+* the content-addressed ``SFACache``: hit/miss/eviction semantics, budget-
+  dependent blowup answers, and the Scanner acceptance criterion — a second
+  ``Scanner.compile`` of the same patterns performs **zero** construction
+  rounds, answered entirely by the cache's hit counter;
+* a forced fingerprint collision inside a batch retries only the collided
+  pattern (fresh polynomial) while the other patterns keep their progress;
+* the pattern-axis Pallas fingerprint kernel matches the NumPy fold.
+"""
+
+import numpy as np
+import pytest
+from _strategies import given, settings, st
+
+from repro.compat import make_mesh
+from repro.construction import (
+    BankConstructionResult,
+    SFACache,
+    StateBlowup,
+    construct_bank,
+    construct_sfa,
+    construct_sfa_vectorized,
+    dfa_cache_key,
+)
+from repro.core.dfa import random_dfa
+from repro.core.fingerprint import (
+    BarrettConstants,
+    fold_weights_u32,
+    nth_poly_low,
+)
+from repro.core.prosite import load_bank, synthetic_protein
+from repro.engine import ConstructionPolicy, ScanPlan, Scanner
+
+FULL_BANK_CAP = 7300   # all 23 bundled signatures close below this
+SHARED_BUDGET = 160    # splits the bank into closers and blowers
+
+
+@pytest.fixture(scope="module")
+def prosite_bank():
+    return load_bank()
+
+
+@pytest.fixture(scope="module")
+def full_bank_result(prosite_bank):
+    """One exact batched construction of the whole bundled bank."""
+    res = construct_bank(prosite_bank, max_states=FULL_BANK_CAP, tile=256)
+    assert not res.blown.any()
+    return res
+
+
+def _assert_sfa_equal(a, b, ctx):
+    assert np.array_equal(a.mappings, b.mappings), ctx
+    assert np.array_equal(a.delta, b.delta), ctx
+    assert np.array_equal(a.fingerprints, b.fingerprints), ctx
+
+
+# --------------------------------------------------------------------------
+# construct_bank == per-pattern construct_sfa (all 23 signatures, 3 engines)
+# --------------------------------------------------------------------------
+
+
+def test_bank_bit_identical_to_vectorized_all_prosite(prosite_bank,
+                                                      full_bank_result):
+    """Acceptance: the batched bank equals per-pattern construction on every
+    bundled signature — mappings, delta table, and fingerprints."""
+    for p in range(prosite_bank.n_patterns):
+        ref = construct_sfa(prosite_bank.dfa(p), engine="vectorized",
+                            max_states=FULL_BANK_CAP)
+        _assert_sfa_equal(full_bank_result.sfas[p], ref, prosite_bank.ids[p])
+
+
+def test_bank_agrees_with_sequential_engine_under_budget(prosite_bank,
+                                                         full_bank_result):
+    """Sequential engine leg: every signature either closes under the shared
+    budget with the bit-identical SFA, or blows up exactly when the bank's
+    exact state count exceeds the budget."""
+    closed = blown = 0
+    for p in range(prosite_bank.n_patterns):
+        d = prosite_bank.dfa(p)
+        try:
+            ref = construct_sfa(d, engine="sequential",
+                                max_states=SHARED_BUDGET)
+        except StateBlowup:
+            blown += 1
+            assert full_bank_result.sfas[p].n_states > SHARED_BUDGET
+            continue
+        closed += 1
+        _assert_sfa_equal(full_bank_result.sfas[p], ref, prosite_bank.ids[p])
+    assert closed >= 10 and blown >= 3  # the budget really splits the bank
+
+
+def test_bank_agrees_with_jax_engine_under_budget(prosite_bank,
+                                                  full_bank_result):
+    """Jax engine leg: same budget split as the sequential leg. (The jax
+    engine *is* the P=1 batched round, so this pins the padding/masking
+    story: per-pattern construction on the unpadded DFA equals the padded
+    bank rows.)"""
+    closed = blown = 0
+    for p in range(prosite_bank.n_patterns):
+        d = prosite_bank.dfa(p)
+        if d.n_states > 10:
+            continue  # bound jit-compile variety; sizes n<=10 cover 17/23
+        try:
+            ref = construct_sfa(d, engine="jax", max_states=SHARED_BUDGET,
+                                tile=32)
+        except StateBlowup:
+            blown += 1
+            assert full_bank_result.sfas[p].n_states > SHARED_BUDGET
+            continue
+        closed += 1
+        _assert_sfa_equal(full_bank_result.sfas[p], ref, prosite_bank.ids[p])
+    assert closed >= 10
+
+
+def test_bank_methods_and_shard_map_agree():
+    """batched == loop == shard_map-distributed batched, bit for bit."""
+    dfas = [random_dfa(n, 5, seed=200 + i) for i, n in enumerate((3, 5, 4, 2))]
+    batched = construct_bank(dfas, max_states=2000, tile=32)
+    loop = construct_bank(dfas, max_states=2000, method="loop")
+    sharded = construct_bank(
+        dfas, max_states=2000, tile=32, distribution="shard_map",
+        mesh=make_mesh((1,), ("pattern",)),
+    )
+    assert batched.stats.method == "batched" and loop.stats.method == "loop"
+    for p in range(len(dfas)):
+        _assert_sfa_equal(batched.sfas[p], loop.sfas[p], p)
+        _assert_sfa_equal(batched.sfas[p], sharded.sfas[p], p)
+
+
+def test_bank_capacity_growth_is_bit_exact():
+    """Buffers start small and grow geometrically toward the cap; results
+    must be capacity-invariant (a big budget is not a big allocation)."""
+    dfas = [random_dfa(3, 5, seed=100), random_dfa(6, 5, seed=103)]
+    # seed 103's SFA has ~5.4k states: far beyond the initial capacity, so
+    # construction crosses several growth tiers on the way.
+    res = construct_bank(dfas, max_states=6000, tile=64)
+    assert not res.blown.any()
+    assert res.sfas[1].n_states > 2048
+    for p, d in enumerate(dfas):
+        _assert_sfa_equal(res.sfas[p],
+                          construct_sfa(d, engine="vectorized",
+                                        max_states=6000), p)
+
+
+def test_bank_blowup_flags_and_raise():
+    dfas = [random_dfa(2, 8, seed=1), random_dfa(8, 8, seed=1)]
+    res = construct_bank(dfas, max_states=12, tile=8)
+    assert list(res.blown) == [False, True]
+    assert res.sfas[0] is not None and res.sfas[1] is None
+    # flags agree with the per-pattern engine's verdict
+    construct_sfa(dfas[0], max_states=12)
+    with pytest.raises(StateBlowup):
+        construct_sfa(dfas[1], max_states=12)
+    with pytest.raises(StateBlowup):
+        construct_bank(dfas, max_states=12, tile=8, on_blowup="raise")
+
+
+def test_bank_input_validation():
+    with pytest.raises(ValueError):
+        construct_bank([])
+    with pytest.raises(ValueError):
+        construct_bank([random_dfa(3, 4, seed=0)], method="parallel")
+    with pytest.raises(ValueError):
+        construct_bank([random_dfa(3, 4, seed=0)], distribution="pmap")
+
+
+# --------------------------------------------------------------------------
+# Forced fingerprint collision: one pattern retries, the rest don't re-run
+# --------------------------------------------------------------------------
+
+
+def test_forced_collision_retries_only_the_collided_pattern():
+    dfas = [random_dfa(n, 5, seed=300 + i) for i, n in enumerate((4, 5, 3))]
+    kwargs = dict(max_states=4000, tile=16)
+    clean = construct_bank(dfas, **kwargs)
+    assert not clean.stats.retries.any()
+
+    def sabotaged_weights(p, attempt, n_words, consts):
+        w = np.asarray(fold_weights_u32(n_words, consts))
+        if p == 1 and attempt == 0:
+            return np.zeros_like(w)  # all fingerprints equal -> collision
+        return w
+
+    res = construct_bank(dfas, _weight_fn=sabotaged_weights, **kwargs)
+    assert list(res.stats.retries) == [0, 1, 0]
+    # The collided pattern restarted (strictly more rounds than clean); the
+    # passengers kept their progress (round counts unchanged).
+    assert res.stats.pattern_rounds[1] > clean.stats.pattern_rounds[1]
+    assert res.stats.pattern_rounds[0] == clean.stats.pattern_rounds[0]
+    assert res.stats.pattern_rounds[2] == clean.stats.pattern_rounds[2]
+    # Untouched patterns: bit-identical to the clean run (polynomial 0).
+    _assert_sfa_equal(res.sfas[0], clean.sfas[0], 0)
+    _assert_sfa_equal(res.sfas[2], clean.sfas[2], 2)
+    # The retried pattern lands on polynomial index 1 — same SFA, the
+    # fingerprints of the retry polynomial.
+    retry_ref = construct_sfa_vectorized(dfas[1], poly_index=1,
+                                         max_states=4000)
+    _assert_sfa_equal(res.sfas[1], retry_ref, 1)
+    assert not np.array_equal(res.sfas[1].fingerprints,
+                              clean.sfas[1].fingerprints)
+
+
+# --------------------------------------------------------------------------
+# SFACache semantics
+# --------------------------------------------------------------------------
+
+
+def test_cache_hit_miss_and_budget_semantics():
+    cache = SFACache()
+    d = random_dfa(4, 5, seed=7)
+    assert cache.lookup(d, max_states=100) == (None, None)
+    sfa = construct_sfa(d, max_states=10_000)
+    cache.store(d, sfa)
+    kind, got = cache.lookup(d, max_states=10_000)
+    assert kind == "sfa" and got is sfa
+    # a positive entry answers "blowup" for budgets below its exact size
+    assert cache.lookup(d, max_states=sfa.n_states - 1) == ("blowup", None)
+    assert cache.lookup(d, max_states=sfa.n_states)[0] == "sfa"
+    # a different DFA (different content hash) misses
+    other = random_dfa(4, 5, seed=8)
+    assert cache.lookup(other, max_states=100) == (None, None)
+    assert dfa_cache_key(d) != dfa_cache_key(other)
+    assert cache.info.hits == 3 and cache.info.misses == 2
+
+
+def test_cache_blowup_markers_upgrade_but_never_downgrade():
+    cache = SFACache()
+    d = random_dfa(6, 6, seed=9)
+    cache.store_blowup(d, 50)
+    assert cache.lookup(d, max_states=50) == ("blowup", None)
+    assert cache.lookup(d, max_states=40) == ("blowup", None)
+    # larger budget: unknown -> miss, then the marker upgrades
+    assert cache.lookup(d, max_states=80) == (None, None)
+    cache.store_blowup(d, 80)
+    assert cache.lookup(d, max_states=80) == ("blowup", None)
+    # a positive entry wins over any later marker
+    sfa = construct_sfa(d, max_states=1_000_000)
+    cache.store(d, sfa)
+    cache.store_blowup(d, 10)
+    assert cache.lookup(d, max_states=1_000_000)[0] == "sfa"
+
+
+def test_cache_lru_eviction_by_entries_and_bytes():
+    cache = SFACache(max_entries=2)
+    ds = [random_dfa(3, 4, seed=20 + i) for i in range(3)]
+    sfas = [construct_sfa(d) for d in ds]
+    cache.store(ds[0], sfas[0])
+    cache.store(ds[1], sfas[1])
+    assert len(cache) == 2
+    # touch ds[0] so ds[1] is the LRU victim
+    assert cache.lookup(ds[0], max_states=10_000)[0] == "sfa"
+    cache.store(ds[2], sfas[2])
+    assert cache.info.evictions == 1
+    assert cache.lookup(ds[1], max_states=10_000) == (None, None)  # evicted
+    assert cache.lookup(ds[0], max_states=10_000)[0] == "sfa"      # kept
+
+    # byte-budget eviction: room for either SFA alone, never both
+    tiny = SFACache(max_entries=64,
+                    max_bytes=sfas[0].nbytes() + sfas[1].nbytes() - 1)
+    tiny.store(ds[0], sfas[0])
+    tiny.store(ds[1], sfas[1])          # pushes the first out by bytes
+    assert tiny.info.evictions == 1
+    assert tiny.info.current_bytes <= tiny.max_bytes
+    assert tiny.lookup(ds[1], max_states=10_000)[0] == "sfa"
+    assert tiny.lookup(ds[0], max_states=10_000) == (None, None)
+    with pytest.raises(ValueError):
+        SFACache(max_entries=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(spec=st.dictionaries(st.integers(min_value=0, max_value=5),
+                            st.integers(min_value=4, max_value=60),
+                            min_size=1, max_size=5))
+def test_cache_property_answers_match_direct_construction(spec):
+    """Property (via st.dictionaries): for any {seed: budget} workload, the
+    cache answers exactly like direct construction — "sfa" iff the exact SFA
+    fits the budget, with the bit-identical SFA object on every later hit."""
+    cache = SFACache()
+    exact = {}
+    for seed in spec:
+        d = random_dfa(3 + seed % 3, 4, seed=seed)
+        exact[seed] = construct_sfa(d, max_states=100_000)
+        cache.store(d, exact[seed])
+    for seed, budget in spec.items():
+        d = random_dfa(3 + seed % 3, 4, seed=seed)
+        kind, got = cache.lookup(d, max_states=budget)
+        if exact[seed].n_states <= budget:
+            assert kind == "sfa"
+            assert np.array_equal(got.delta, exact[seed].delta)
+        else:
+            assert kind == "blowup"
+
+
+# --------------------------------------------------------------------------
+# Scanner integration: zero construction rounds on recompile (acceptance)
+# --------------------------------------------------------------------------
+
+
+def test_scanner_recompile_hits_cache_zero_rounds(prosite_bank):
+    """Acceptance: a second Scanner.compile of the same patterns performs
+    zero construction rounds, reported via the cache's hit counter."""
+    cache = SFACache()
+    plan = ScanPlan(construction=ConstructionPolicy(cache=cache,
+                                                    method="batched"))
+    sc1 = Scanner.compile(prosite_bank, plan)
+    r1 = sc1.construction_report
+    assert r1.cache_misses == prosite_bank.n_patterns
+    assert r1.rounds > 0 and r1.method == "batched"
+    assert {"sfa", "enumeration"} <= set(sc1.pattern_modes.values())
+    hits_before = cache.info.hits
+
+    sc2 = Scanner.compile(prosite_bank, plan)
+    r2 = sc2.construction_report
+    assert r2.rounds == 0 and r2.constructed == 0
+    assert r2.cache_hits == prosite_bank.n_patterns
+    assert cache.info.hits - hits_before == prosite_bank.n_patterns
+    assert sc2.pattern_modes == sc1.pattern_modes
+
+    docs = [synthetic_protein(64, seed=i) for i in range(4)]
+    assert np.array_equal(sc1.scan(docs).hits, sc2.scan(docs).hits)
+
+
+def test_scanner_construction_policy_controls():
+    d = [random_dfa(4, 5, seed=i) for i in range(2)]
+    # cache="off": every compile reconstructs
+    plan = ScanPlan(construction=ConstructionPolicy(cache="off"))
+    r1 = Scanner.compile(d, plan).construction_report
+    r2 = Scanner.compile(d, plan).construction_report
+    assert r1.rounds > 0 and r2.rounds > 0 and r2.cache_hits == 0
+    # loop method is reported as such
+    plan = ScanPlan(construction=ConstructionPolicy(cache="off", method="loop"))
+    assert Scanner.compile(d, plan).construction_report.method == "loop"
+    # validation
+    with pytest.raises(ValueError):
+        ConstructionPolicy(method="magic").validate()
+    with pytest.raises(ValueError):
+        ConstructionPolicy(engine="numpy").validate()
+    with pytest.raises(ValueError):
+        ConstructionPolicy(tile=0).validate()
+    with pytest.raises(ValueError):
+        ConstructionPolicy(cache=42).validate()
+    with pytest.raises(ValueError):
+        ScanPlan(construction=ConstructionPolicy(max_retries=0)).validate()
+    assert ConstructionPolicy().with_(method="batched").method == "batched"
+
+
+def test_scanner_shard_map_construction_matches_local():
+    dfas = [random_dfa(3 + i, 5, seed=40 + i) for i in range(4)]
+    docs = np.random.default_rng(3).integers(0, 5, size=(3, 32)).astype(np.int32)
+    local = Scanner.compile(dfas, ScanPlan(
+        construction=ConstructionPolicy(cache="off", method="batched")))
+    sharded = Scanner.compile(dfas, ScanPlan(
+        construction=ConstructionPolicy(
+            cache="off", method="batched", distribution="shard_map",
+            mesh=make_mesh((1,), ("pattern",)))))
+    assert np.array_equal(local.scan(docs).hits, sharded.scan(docs).hits)
+    assert np.array_equal(local.mapping(docs[0]), sharded.mapping(docs[0]))
+
+
+# --------------------------------------------------------------------------
+# Pattern-axis fingerprint kernel (kernels satellite)
+# --------------------------------------------------------------------------
+
+
+def test_fingerprint_bank_kernel_matches_numpy_fold():
+    from repro.core.fingerprint import fingerprint_states_np, pack_states_np
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    P, B, n = 3, 10, 7
+    states = rng.integers(0, 1 << 14, size=(P, B, n)).astype(np.int32)
+    words = pack_states_np(states)
+    consts = [BarrettConstants.cached(nth_poly_low(i)) for i in range(P)]
+    got = np.asarray(ops.fingerprint_bank(jnp.asarray(words), consts,
+                                          block_b=4, interpret=True))
+    for p in range(P):
+        assert np.array_equal(got[p], fingerprint_states_np(states[p],
+                                                            consts[p])), p
+    with pytest.raises(ValueError):
+        ops.fingerprint_bank(jnp.asarray(words), consts[:2], interpret=True)

@@ -3,11 +3,9 @@
 Differential tests pin the engine's core contract: every (mode, backend,
 distribution, chunking) plan produces bit-identical results, ``auto`` mode
 picks SFA exactly when construction fits the budget, ``stream()`` equals
-``scan()`` on the concatenated input, and every pre-engine entry point still
-imports, warns once, and matches the engine's answer.
+``scan()`` on the concatenated input, and the executors module is the one
+home of the parallel entry points (the PR-2 deprecation shims are gone).
 """
-
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -19,7 +17,6 @@ from repro.core.dfa import random_dfa
 from repro.core.prosite import PROSITE_SAMPLES, compile_prosite, load_bank, synthetic_protein
 from repro.core.sfa import StateBlowup, construct_sfa
 from repro.engine import ChunkPolicy, ScanPlan, Scanner
-from repro.engine import deprecation
 
 
 def _random_docs(seed, n_docs, length, k):
@@ -212,10 +209,11 @@ def test_stream_matches_scan_on_long_corpus():
 
 
 # --------------------------------------------------------------------------
-# Legacy entry points: import, warn once, agree with the engine
+# Legacy entry points: removed after the PR-2 deprecation window; executors
+# is the single home and it agrees with the Scanner
 # --------------------------------------------------------------------------
 
-LEGACY_NAMES = [
+REMOVED_LEGACY_NAMES = [
     ("repro.core.matching", "match_parallel_enumeration"),
     ("repro.core.matching", "match_parallel_sfa"),
     ("repro.core.matching", "find_matches_parallel"),
@@ -230,21 +228,27 @@ LEGACY_NAMES = [
 ]
 
 
-def test_legacy_names_all_importable():
+def test_legacy_shims_are_gone():
+    """The PR-2 deprecation policy ran its course: two further PRs touched
+    every call site, so the shims (and the warn-once machinery) are removed.
+    The engine executors remain the single home of these entry points."""
     import importlib
 
-    for module, name in LEGACY_NAMES:
-        fn = getattr(importlib.import_module(module), name)
-        assert callable(fn), f"{module}.{name}"
-        # and still re-exported from repro.core
-        import repro.core
+    import repro.core
+    from repro.engine import executors as X
 
-        assert getattr(repro.core, name) is fn
+    for module, name in REMOVED_LEGACY_NAMES:
+        assert not hasattr(importlib.import_module(module), name), \
+            f"{module}.{name} should be removed"
+        assert not hasattr(repro.core, name), f"repro.core.{name}"
+        assert callable(getattr(X, name)), f"executors.{name} must remain"
+    with pytest.raises(ImportError):
+        importlib.import_module("repro.engine.deprecation")
 
 
-def test_legacy_shims_warn_once_and_match_engine():
-    from repro.core import matching as mt
-    from repro.core import multipattern as mp
+def test_executors_match_scanner():
+    """The executors' free functions agree with the Scanner facade (the
+    identity half of the old shim test, now shim-free)."""
     from repro.core.multipattern import PatternBank
     from repro.engine import executors as X
 
@@ -258,65 +262,31 @@ def test_legacy_shims_warn_once_and_match_engine():
     d0 = dfas[0]
     sfa0 = construct_sfa(d0)
     mesh = make_mesh((1, 1), ("data", "model"))
-    mesh1 = make_mesh((1,), ("data",))
 
-    deprecation.reset()
-    calls = {
-        "match_parallel_enumeration": lambda: mt.match_parallel_enumeration(
-            jnp.asarray(d0.table), jnp.asarray(syms), 4),
-        "match_parallel_sfa": lambda: mt.match_parallel_sfa(
-            jnp.asarray(sfa0.delta), jnp.asarray(sfa0.mappings),
-            jnp.asarray(syms), 4),
-        "find_matches_parallel": lambda: mt.find_matches_parallel(
-            jnp.asarray(d0.table), jnp.asarray(d0.accepting),
-            jnp.asarray(syms), d0.start, 4),
-        "accepts_parallel": lambda: mt.accepts_parallel(
-            d0, "".join(d0.alphabet[i] for i in syms), 4),
-        "distributed_match_fn": lambda: mt.distributed_match_fn(
-            mesh1, d0.table.shape)(jnp.asarray(d0.table), jnp.asarray(syms), 4),
-        "throughput_matcher": lambda: mt.throughput_matcher(
-            mesh1, start=d0.start)(jnp.asarray(d0.table),
-                                   jnp.asarray(d0.accepting),
-                                   jnp.asarray(corpus)),
-        "match_bank_parallel": lambda: mp.match_bank_parallel(
-            tables, jnp.asarray(syms), 4),
-        "bank_hits": lambda: mp.bank_hits(
-            tables, accepting, starts, jnp.asarray(corpus), 4),
-        "census_bank": lambda: mp.census_bank(
-            tables, accepting, starts, jnp.asarray(corpus), 4),
-        "distributed_bank_matcher": lambda: mp.distributed_bank_matcher(mesh)(
-            tables, jnp.asarray(syms), 4),
-        "distributed_census_fn": lambda: mp.distributed_census_fn(
-            mesh, n_chunks=4)(tables, accepting, starts, jnp.asarray(corpus)),
-    }
-    assert set(n for _, n in LEGACY_NAMES) == set(calls)
+    maps_enum = np.asarray(X.match_parallel_enumeration(
+        jnp.asarray(d0.table), jnp.asarray(syms), 4))
+    maps_sfa = np.asarray(X.match_parallel_sfa(
+        jnp.asarray(sfa0.delta), jnp.asarray(sfa0.mappings),
+        jnp.asarray(syms), 4))
+    assert np.array_equal(maps_enum, maps_sfa)
+    assert int(maps_sfa[d0.start]) == d0.run(syms)
 
-    results = {}
-    for name, call in calls.items():
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            results[name] = np.asarray(call())
-            call()  # second call must NOT warn again
-        got = [x for x in w if issubclass(x.category, DeprecationWarning)]
-        assert len(got) == 1, f"{name}: {len(got)} DeprecationWarnings"
-        assert name in str(got[0].message)
+    bank_maps = np.asarray(X.match_bank_parallel(tables, jnp.asarray(syms), 4))
+    dist_maps = np.asarray(X.distributed_bank_matcher(mesh)(
+        tables, jnp.asarray(syms), 4))
+    assert np.array_equal(bank_maps, dist_maps)
 
-    # identical results: legacy shims vs the engine executors / Scanner
-    assert np.array_equal(
-        results["match_parallel_enumeration"],
-        np.asarray(X.match_parallel_enumeration(jnp.asarray(d0.table),
-                                                jnp.asarray(syms), 4)))
-    assert int(results["match_parallel_sfa"][d0.start]) == d0.run(syms)
-    assert np.array_equal(
-        results["match_bank_parallel"],
-        np.asarray(X.match_bank_parallel(tables, jnp.asarray(syms), 4)))
     sc = Scanner.compile(dfas, ScanPlan(mode="enumeration",
                                         chunking=ChunkPolicy(n_chunks=4)))
-    assert np.array_equal(results["bank_hits"], sc.scan(corpus).hits)
-    assert np.array_equal(results["census_bank"], sc.census(corpus))
-    assert np.array_equal(results["distributed_census_fn"], sc.census(corpus))
-    assert np.array_equal(results["distributed_bank_matcher"],
-                          results["match_bank_parallel"])
+    hits = np.asarray(X.bank_hits(tables, accepting, starts,
+                                  jnp.asarray(corpus), 4))
+    counts = np.asarray(X.census_bank(tables, accepting, starts,
+                                      jnp.asarray(corpus), 4))
+    dist_counts = np.asarray(X.distributed_census_fn(mesh, n_chunks=4)(
+        tables, accepting, starts, jnp.asarray(corpus)))
+    assert np.array_equal(hits, sc.scan(corpus).hits)
+    assert np.array_equal(counts, sc.census(corpus))
+    assert np.array_equal(dist_counts, sc.census(corpus))
 
 
 # --------------------------------------------------------------------------

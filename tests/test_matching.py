@@ -8,6 +8,7 @@ from _strategies import given, settings, st
 from repro.compat import make_mesh
 from repro.core import matching as mt
 from repro.core.dfa import example_fa, random_dfa
+from repro.engine import executors as X
 from repro.core.prosite import compile_prosite, synthetic_protein
 from repro.core.sfa import construct_sfa
 
@@ -25,7 +26,7 @@ def test_enumeration_parallel_equals_sequential(seed, n_chunks):
     d = random_dfa(5, 6, seed=seed)
     rng = np.random.default_rng(seed)
     syms = jnp.asarray(rng.integers(0, 6, size=64).astype(np.int32))
-    mapping = mt.match_parallel_enumeration(jnp.asarray(d.table), syms, n_chunks)
+    mapping = X.match_parallel_enumeration(jnp.asarray(d.table), syms, n_chunks)
     assert int(mapping[d.start]) == d.run(np.asarray(syms))
 
 
@@ -36,7 +37,7 @@ def test_sfa_parallel_equals_sequential(seed):
     sfa = construct_sfa(d)
     rng = np.random.default_rng(seed)
     syms = jnp.asarray(rng.integers(0, 5, size=60).astype(np.int32))
-    mapping = mt.match_parallel_sfa(
+    mapping = X.match_parallel_sfa(
         jnp.asarray(sfa.delta), jnp.asarray(sfa.mappings), syms, 4
     )
     assert int(mapping[d.start]) == d.run(np.asarray(syms))
@@ -47,7 +48,7 @@ def test_find_matches_parallel_equals_trace():
     text = synthetic_protein(512, seed=5)
     text = text[:100] + "RG" + text[102:]
     syms = jnp.asarray(d.encode(text))
-    flags = mt.find_matches_parallel(
+    flags = X.find_matches_parallel(
         jnp.asarray(d.table), jnp.asarray(d.accepting), syms, d.start, 8
     )
     ref = mt.match_ends_sequential(d, np.asarray(syms))
@@ -58,16 +59,16 @@ def test_accepts_parallel_handles_ragged_lengths():
     d = compile_prosite("R-G-D")
     for L in [5, 17, 64, 100, 129]:
         text = synthetic_protein(L, seed=L)
-        assert mt.accepts_parallel(d, text, n_chunks=8) == d.accepts(text), L
+        assert X.accepts_parallel(d, text, n_chunks=8) == d.accepts(text), L
     planted = synthetic_protein(50, seed=1) + "RGD"
-    assert mt.accepts_parallel(d, planted, n_chunks=8)
+    assert X.accepts_parallel(d, planted, n_chunks=8)
 
 
 def test_distributed_match_single_device_mesh():
     d = example_fa()
     text = synthetic_protein(1024, seed=9)[:1000] + "RG" + "AAAAAAAAAAAAAAAAAAAAAA"
     syms = jnp.asarray(d.encode(text))
-    matcher = mt.distributed_match_fn(_mesh1(), d.table.shape)
+    matcher = X.distributed_match_fn(_mesh1(), d.table.shape)
     mapping = matcher(jnp.asarray(d.table), syms, sub_chunks=8)
     assert int(mapping[d.start]) == d.run(np.asarray(syms))
 
@@ -84,6 +85,6 @@ def test_throughput_matcher():
         rows.append(d.encode(t))
         want.append(d.accepts(t))
     batch = jnp.asarray(np.stack(rows))
-    matcher = mt.throughput_matcher(_mesh1(), start=d.start)
+    matcher = X.throughput_matcher(_mesh1(), start=d.start)
     got = matcher(jnp.asarray(d.table), jnp.asarray(d.accepting), batch)
     assert [bool(x) for x in np.asarray(got)] == want

@@ -12,6 +12,7 @@ from _strategies import given, settings, st
 
 from repro.compat import make_mesh
 from repro.core import multipattern as mp
+from repro.engine import executors as X
 from repro.core.dfa import random_dfa
 from repro.core.matching import chunk_mapping_enumeration
 from repro.core.prosite import load_bank, synthetic_protein
@@ -69,7 +70,7 @@ def test_match_bank_equals_sequential_random(seed, n_chunks):
     tables, _, _ = bank.device_arrays()
     rng = np.random.default_rng(seed)
     syms = rng.integers(0, bank.n_symbols, size=64).astype(np.int32)
-    maps = mp.match_bank_parallel(tables, jnp.asarray(syms), n_chunks)
+    maps = X.match_bank_parallel(tables, jnp.asarray(syms), n_chunks)
     for p in range(bank.n_patterns):
         d = bank.dfa(p)
         assert int(maps[p, d.start]) == d.run(syms), (p, bank.ids[p])
@@ -82,7 +83,7 @@ def test_match_bank_padded_entries_stay_identity():
     tables, _, _ = bank.device_arrays()
     rng = np.random.default_rng(7)
     syms = rng.integers(0, bank.n_symbols, size=48).astype(np.int32)
-    maps = np.asarray(mp.match_bank_parallel(tables, jnp.asarray(syms), 4))
+    maps = np.asarray(X.match_bank_parallel(tables, jnp.asarray(syms), 4))
     n0 = int(bank.n_states[0])
     assert np.array_equal(maps[0, n0:], np.arange(n0, bank.n_max))
 
@@ -95,7 +96,7 @@ def test_census_bank_matches_sequential_on_prosite():
     corpus = np.stack(
         [bank.encode(synthetic_protein(96, seed=i)) for i in range(12)]
     )
-    counts = mp.census_bank(tables, accepting, starts, jnp.asarray(corpus), 8)
+    counts = X.census_bank(tables, accepting, starts, jnp.asarray(corpus), 8)
     ref = mp.census_sequential(bank, corpus)
     assert np.array_equal(np.asarray(counts), ref)
 
@@ -107,7 +108,7 @@ def test_bank_hits_shape_and_dtype():
         np.random.default_rng(3).integers(0, bank.n_symbols, size=(5, 32)),
         dtype=jnp.int32,
     )
-    hits = mp.bank_hits(tables, accepting, starts, corpus, 4)
+    hits = X.bank_hits(tables, accepting, starts, corpus, 4)
     assert hits.shape == (bank.n_patterns, 5)
     assert hits.dtype == jnp.bool_
 
@@ -130,7 +131,7 @@ def test_bucket_by_size_partitions_and_agrees():
     ref = dict(zip(whole.ids, mp.census_sequential(whole, corpus)))
     for b in buckets:
         t, a, s = b.device_arrays()
-        counts = np.asarray(mp.census_bank(t, a, s, jnp.asarray(corpus), 4))
+        counts = np.asarray(X.census_bank(t, a, s, jnp.asarray(corpus), 4))
         for i, pid in enumerate(b.ids):
             assert counts[i] == ref[pid], pid
 
@@ -175,9 +176,9 @@ def test_distributed_bank_matcher_single_device():
     rng = np.random.default_rng(11)
     syms = jnp.asarray(rng.integers(0, bank.n_symbols, size=128).astype(np.int32))
     mesh = make_mesh((1, 1), ("data", "model"))
-    matcher = mp.distributed_bank_matcher(mesh)
+    matcher = X.distributed_bank_matcher(mesh)
     got = matcher(tables, syms, sub_chunks=8)
-    want = mp.match_bank_parallel(tables, syms, 8)
+    want = X.match_bank_parallel(tables, syms, 8)
     assert np.array_equal(np.asarray(got), np.asarray(want))
 
 
@@ -189,7 +190,7 @@ def test_distributed_census_single_device():
         dtype=jnp.int32,
     )
     mesh = make_mesh((1, 1), ("data", "model"))
-    census = mp.distributed_census_fn(mesh, n_chunks=4)
+    census = X.distributed_census_fn(mesh, n_chunks=4)
     got = census(tables, accepting, starts, corpus)
-    want = mp.census_bank(tables, accepting, starts, corpus, 4)
+    want = X.census_bank(tables, accepting, starts, corpus, 4)
     assert np.array_equal(np.asarray(got), np.asarray(want))

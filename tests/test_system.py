@@ -11,9 +11,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import HOST_MESH, ModelConfig, OptimizerConfig, RunConfig, ShapeConfig
-from repro.core import matching as mt
 from repro.core.prosite import PROSITE_SAMPLES, compile_prosite, synthetic_protein
 from repro.core.sfa import construct_sfa
+from repro.engine import executors as X
 from repro.data import DataConfig, make_pipeline
 from repro.models.model import build_model
 from repro.sharding.rules import Dist
@@ -33,8 +33,8 @@ def test_prosite_to_parallel_scan_end_to_end():
         if i % 2:
             pos = int(rng.integers(0, 990))
             text = text[:pos] + "RGD" + text[pos + 3:]
-        seq = mt.accepts_parallel(dfa, text, n_chunks=8, sfa=sfa)
-        enm = mt.accepts_parallel(dfa, text, n_chunks=8)
+        seq = X.accepts_parallel(dfa, text, n_chunks=8, sfa=sfa)
+        enm = X.accepts_parallel(dfa, text, n_chunks=8)
         ref = dfa.accepts(text)
         assert seq == enm == ref, i
         hits += int(ref)
@@ -57,7 +57,7 @@ def test_match_localization_matches_python_re():
     text = text[:40] + "RGD" + text[43:120] + "RGD" + text[123:]
     syms = jnp.asarray(dfa.encode(text))
     flags = np.asarray(
-        mt.find_matches_parallel(
+        X.find_matches_parallel(
             jnp.asarray(dfa.table), jnp.asarray(dfa.accepting), syms, dfa.start, 8
         )
     )
