@@ -1,0 +1,135 @@
+"""Scan service benchmarks: cold vs warm start, coalesced vs sequential.
+
+Two suites, both writing ``BENCH_service.json`` (uploaded as a CI artifact
+by the bench-smoke job):
+
+* ``run`` — **cold vs warm start**: compile a pattern bank with a fresh
+  in-memory ``SFACache`` over an empty artifact store (cold: full
+  construction + write-through), then again with *another* fresh cache over
+  the now-populated store (warm: zero construction rounds, pure disk reads).
+  The ratio is the cold-start cost the persistent tier deletes.
+* ``run_coalesced`` — **coalesced vs sequential submits**: the same burst of
+  small overlapping requests served one-by-one (flush after every submit)
+  vs coalesced into one fused bank scan (single flush), bit-identity
+  asserted on the way.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks import _config
+from repro.construction import SFACache
+from repro.engine import ConstructionPolicy, ScanPlan, Scanner
+from repro.core.prosite import synthetic_protein
+from repro.scanservice import ArtifactStore, BatchScheduler
+
+BANK = ["PS00016", "PS00005", "PS00001", "PS00006", "PS00009", "PS00004",
+        "SYN00001", "SYN00008", "PS00002", "SYN00005", "SYN00010", "SYN00006"]
+SMOKE_BANK = ["PS00016", "PS00005", "PS00001", "PS00006"]
+
+N_REQUESTS, SMOKE_REQUESTS = 16, 4
+DOC_LEN = 240
+
+_REPORT_PATH = Path(__file__).resolve().parent.parent / "BENCH_service.json"
+_report: dict = {"suite": "scan_service", "results": []}
+
+
+def _flush_report() -> None:
+    _report["smoke"] = _config.SMOKE
+    _REPORT_PATH.write_text(json.dumps(_report, indent=1))
+
+
+def _store_plan(store_dir) -> ScanPlan:
+    return ScanPlan(construction=ConstructionPolicy(
+        cache=SFACache(backing=ArtifactStore(store_dir)), method="batched"))
+
+
+def run(emit) -> None:
+    """Cold vs warm process start through the artifact store."""
+    bank = _config.scaled(BANK, SMOKE_BANK)
+    root = tempfile.mkdtemp(prefix="bench-scan-store-")
+    try:
+        t0 = time.perf_counter()
+        sc_cold = Scanner.compile(bank, _store_plan(root))
+        t_cold = time.perf_counter() - t0
+        r_cold = sc_cold.construction_report
+
+        t0 = time.perf_counter()
+        sc_warm = Scanner.compile(bank, _store_plan(root))   # fresh cache!
+        t_warm = time.perf_counter() - t0
+        r_warm = sc_warm.construction_report
+        assert r_warm.rounds == 0, "warm start must perform zero rounds"
+
+        emit(f"service/cold_start/P={len(bank)}", t_cold * 1e6,
+             f"rounds={r_cold.rounds},built={r_cold.constructed}")
+        emit(f"service/warm_start/P={len(bank)}", t_warm * 1e6,
+             f"rounds=0,disk_hits={len(bank)},"
+             f"speedup={t_cold / t_warm:.1f}x")
+        _report["results"].append({
+            "bench": "cold_vs_warm", "patterns": len(bank),
+            "cold_s": t_cold, "warm_s": t_warm,
+            "cold_rounds": r_cold.rounds, "speedup": t_cold / t_warm,
+        })
+        _flush_report()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def run_coalesced(emit) -> None:
+    """Coalesced vs sequential request serving (bit-identity asserted)."""
+    bank = _config.scaled(BANK, SMOKE_BANK)
+    n_req = _config.scaled(N_REQUESTS, SMOKE_REQUESTS)
+    rng = np.random.default_rng(0)
+    requests = []
+    for _ in range(n_req):
+        pats = [str(p) for p in rng.choice(bank, size=2, replace=False)]
+        docs = [synthetic_protein(DOC_LEN, seed=int(rng.integers(1 << 16)))
+                for _ in range(3)]
+        requests.append((pats, docs))
+
+    cache = SFACache()
+    plan = ScanPlan(construction=ConstructionPolicy(cache=cache,
+                                                    method="batched"))
+    Scanner.compile(bank, plan)   # construction out of the timings
+
+    def sequential():
+        sched = BatchScheduler(plan)
+        out = []
+        for pats, docs in requests:
+            t = sched.submit(pats, docs)
+            sched.flush()                     # every request its own scan
+            out.append(t.result())
+        return out
+
+    def coalesced():
+        sched = BatchScheduler(plan, max_batch=len(requests) + 1)
+        tickets = [sched.submit(p, d) for p, d in requests]
+        sched.flush()                         # one fused scan
+        return [t.result() for t in tickets]
+
+    sequential(), coalesced()                 # warm both paths' jit caches
+    t0 = time.perf_counter()
+    seq = sequential()
+    t_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    coal = coalesced()
+    t_coal = time.perf_counter() - t0
+    for a, b in zip(seq, coal):
+        assert np.array_equal(a.hits, b.hits), "coalescing changed results"
+
+    emit(f"service/sequential/{n_req}req", t_seq * 1e6, "1 scan per request")
+    emit(f"service/coalesced/{n_req}req", t_coal * 1e6,
+         f"1 fused scan,speedup={t_seq / t_coal:.2f}x")
+    _report["results"].append({
+        "bench": "coalesced_vs_sequential", "requests": n_req,
+        "sequential_s": t_seq, "coalesced_s": t_coal,
+        "speedup": t_seq / t_coal,
+    })
+    _flush_report()

@@ -12,16 +12,53 @@ Prints ``name,us_per_call,derived`` CSV. Figure mapping:
   multipattern bench_multipattern     (batched bank vs per-pattern loop, §IV)
   engine  bench_multipattern.run_engine_modes (auto vs forced Scanner modes,
           also writes BENCH_engine.json)
+  service bench_service               (cold vs warm start through the
+          artifact store; coalesced vs sequential submits; writes
+          BENCH_service.json)
 
 ``--smoke`` caps sizes/iterations (see benchmarks/_config.py) so CI can run
 the whole harness as a smoke job without burning minutes on full figures.
+A benchmark module that fails to *import* (missing optional dep, broken
+bench) is skipped with a warning — it costs its own suites, never the sweep.
 """
 
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 import traceback
+
+#: (module, suite function names) — resolved one by one so an unimportable
+#: module skips with a warning instead of aborting the whole sweep.
+SUITES = [
+    ("bench_construction", ("run", "run_bank")),
+    ("bench_parallel_construction", ("run", "run_jax_engine")),
+    ("bench_matching", ("run", "run_sfa_size_ladder")),
+    ("bench_census", ("run", "run_synthetic_ladder")),
+    ("bench_kernels", ("run",)),
+    ("bench_roofline", ("run",)),
+    ("bench_multipattern", ("run", "run_engine_modes")),
+    ("bench_service", ("run", "run_coalesced")),
+]
+
+
+def _resolve_suites() -> tuple:
+    """-> (callables, import failure count). Import errors warn and skip."""
+    suites = []
+    failures = 0
+    for mod_name, fn_names in SUITES:
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+        except Exception:
+            failures += 1
+            print(f"WARNING: skipping benchmarks.{mod_name} "
+                  "(import failed):", file=sys.stderr)
+            traceback.print_exc()
+            continue
+        for fn in fn_names:
+            suites.append(getattr(mod, fn))
+    return suites, failures
 
 
 def main() -> None:
@@ -35,15 +72,7 @@ def main() -> None:
     if args.smoke:
         _config.set_smoke(True)
 
-    from benchmarks import (
-        bench_census,
-        bench_construction,
-        bench_kernels,
-        bench_matching,
-        bench_multipattern,
-        bench_parallel_construction,
-        bench_roofline,
-    )
+    suites, failures = _resolve_suites()
 
     print("name,us_per_call,derived")
 
@@ -51,21 +80,6 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()
 
-    suites = [
-        bench_construction.run,
-        bench_construction.run_bank,
-        bench_parallel_construction.run,
-        bench_parallel_construction.run_jax_engine,
-        bench_matching.run,
-        bench_matching.run_sfa_size_ladder,
-        bench_census.run,
-        bench_census.run_synthetic_ladder,
-        bench_kernels.run,
-        bench_roofline.run,
-        bench_multipattern.run,
-        bench_multipattern.run_engine_modes,
-    ]
-    failures = 0
     for suite in suites:
         try:
             suite(emit)

@@ -1,64 +1,83 @@
-"""Batched serving demo: continuous batching over a small LM.
+"""Scan service demo: warm starts + coalesced requests over the PROSITE bank.
 
-    PYTHONPATH=src python examples/serve_lm.py [--requests 8] [--slots 4]
+    PYTHONPATH=src python examples/serve_lm.py [--store DIR] [--requests 12]
 
-Submits a queue of variable-length prompts; the engine prefills each into a
-free slot and decodes all live slots in lockstep (one token per step across
-the batch) — throughput stays flat as requests come and go.
+Run it twice: the first run pays SFA construction once and persists every
+artifact to the store directory; the second run warm-starts from disk and
+compiles the whole bank with **zero construction rounds**. Each run then
+fires a burst of small scan requests at the coalescing scheduler — all of
+them ride one fused bank compile + scan and are demultiplexed per request,
+bit-identical to scanning each request alone.
+
+(This file previously demoed the LM-era continuous-batching engine; that
+path still lives in ``repro.serve`` / ``launch/serve.py``. The scan domain
+is the repo's north star, so the example now serves scans.)
 """
 
 import argparse
 import sys
+import tempfile
 import time
 
 sys.path.insert(0, "src")
 
-import jax
 import numpy as np
 
-from repro.config import HOST_MESH, ModelConfig, RunConfig, ShapeConfig
-from repro.models.model import build_model
-from repro.serve.engine import Request, ServeEngine
-from repro.sharding.rules import Dist
+from repro.core.prosite import PROSITE_EXTRA, PROSITE_SAMPLES, synthetic_protein
+from repro.engine import Scanner
 
-TINY = ModelConfig(
-    name="serve_demo", family="dense", n_layers=4, d_model=128, n_heads=8,
-    n_kv_heads=4, d_ff=256, vocab_size=512, head_dim=16, remat="none",
-    tie_embeddings=True,
-)
+BANK = [pid for pid in {**PROSITE_SAMPLES, **PROSITE_EXTRA}]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--store", default=None,
+                    help="artifact store dir (default: a temp dir — use a "
+                         "real path to see the second run warm-start)")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--patterns-per-request", type=int, default=3)
+    ap.add_argument("--docs-per-request", type=int, default=4)
     args = ap.parse_args()
 
-    model = build_model(TINY)
-    params = model.init(jax.random.PRNGKey(0))
-    run = RunConfig(model=TINY, shape=ShapeConfig("serve", 128, args.slots, "decode"),
-                    mesh=HOST_MESH)
-    engine = ServeEngine(model, run, Dist(), params, n_slots=args.slots,
-                         max_len=128, temperature=args.temperature)
-
+    store_dir = args.store or tempfile.mkdtemp(prefix="scan-store-")
     rng = np.random.default_rng(0)
-    t0 = time.perf_counter()
-    for i in range(args.requests):
-        L = int(rng.integers(4, 24))
-        engine.submit(Request(
-            prompt=rng.integers(1, TINY.vocab_size, size=L).astype(np.int32),
-            max_new_tokens=args.max_new, rid=i,
-        ))
-    done = engine.run_until_done()
-    dt = time.perf_counter() - t0
 
-    total_tokens = sum(len(r.out_tokens) for r in done)
-    print(f"served {len(done)} requests / {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s) on {args.slots} slots")
-    for r in sorted(done, key=lambda r: r.rid)[:4]:
-        print(f"  req {r.rid}: prompt {len(r.prompt)} toks -> {r.out_tokens[:8]}...")
+    with Scanner.service(store_dir) as svc:
+        n = svc.warm_start()
+        print(f"store: {store_dir} ({n} artifact(s) preloaded)")
+
+        t0 = time.perf_counter()
+        scanner = svc.scanner(BANK)
+        dt = time.perf_counter() - t0
+        r = scanner.construction_report
+        label = "WARM (zero construction rounds)" if r.rounds == 0 else "cold"
+        print(f"compiled {scanner.n_patterns} patterns in {dt:.2f}s — {label}: "
+              f"{r.rounds} round(s), {r.cache_hits} cache hit(s), "
+              f"{r.constructed} built, {r.blown} blown")
+
+        # A burst of overlapping requests: all coalesce into one batch.
+        tickets = []
+        for i in range(args.requests):
+            pats = [str(p) for p in rng.choice(
+                BANK, size=args.patterns_per_request, replace=False)]
+            docs = [synthetic_protein(240, seed=int(rng.integers(1 << 16)))
+                    for _ in range(args.docs_per_request)]
+            tickets.append((pats, svc.submit(pats, docs)))
+        t0 = time.perf_counter()
+        served = svc.flush()
+        dt = time.perf_counter() - t0
+        stats = svc.scheduler.stats
+        print(f"served {served} coalesced request(s) in {dt:.3f}s "
+              f"(union: {stats.union_patterns} patterns x "
+              f"{stats.union_docs} docs in {stats.flushes} fused scan(s))")
+        for pats, t in tickets[:3]:
+            res = t.result()
+            print(f"  {pats} -> counts {res.counts.tolist()} "
+                  f"(rode a batch of {res.batch_size})")
+
+    if not args.store:
+        print("tip: pass --store ./scan_store and run twice to see the "
+              "warm start")
 
 
 if __name__ == "__main__":

@@ -21,11 +21,22 @@ Eviction is LRU over a byte budget (``max_bytes``) with an entry-count lid
 entry lid. ``repro.engine.Scanner`` consults the shared process-wide
 instance (:func:`shared_cache`) by default, so recompiling the same patterns
 performs zero construction rounds.
+
+The cache optionally sits on a **backing store** — any object speaking the
+protocol of :class:`repro.scanservice.ArtifactStore` (``get(key)`` ->
+``("sfa", SFA) | ("blowup", budget) | None``, ``put_sfa``, ``put_blowup``,
+``entries()``). Memory misses fall through to the backing tier (a hit
+promotes into memory and counts in ``info.disk_hits``), and stores write
+through, so the cache persists across processes: a *fresh* ``SFACache``
+pointed at the same store directory answers previously-seen patterns with
+zero construction rounds. :meth:`SFACache.preload` bulk-loads the backing
+tier for warm starts.
 """
 
 from __future__ import annotations
 
 import hashlib
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
@@ -61,6 +72,7 @@ class CacheInfo:
     evictions: int = 0
     stores: int = 0
     current_bytes: int = 0
+    disk_hits: int = 0
 
     def snapshot(self) -> dict:
         return {
@@ -69,6 +81,7 @@ class CacheInfo:
             "evictions": self.evictions,
             "stores": self.stores,
             "current_bytes": self.current_bytes,
+            "disk_hits": self.disk_hits,
         }
 
 
@@ -81,16 +94,40 @@ class _Blowup:
 
 
 class SFACache:
-    """LRU content-addressed cache of constructed SFAs (+ blowup markers)."""
+    """LRU content-addressed cache of constructed SFAs (+ blowup markers).
+
+    ``backing``: optional persistent tier (see module docstring). Lookups
+    fall through to it on a memory miss; stores write through to it.
+    """
 
     def __init__(self, max_entries: int = 256,
-                 max_bytes: int = 256 * 1024 * 1024):
+                 max_bytes: int = 256 * 1024 * 1024,
+                 backing=None):
         if max_entries < 1 or max_bytes < 1:
             raise ValueError("max_entries and max_bytes must be >= 1")
         self.max_entries = max_entries
         self.max_bytes = max_bytes
+        self.backing = backing
         self.info = CacheInfo()
         self._entries: OrderedDict = OrderedDict()
+        # One coarse lock over lookup/store/preload: the scan service's
+        # thread driver compiles through the same cache its callers use.
+        self._lock = threading.RLock()
+
+    def attach_backing(self, backing) -> None:
+        """Attach/replace the persistent tier (plan plumbing entry point).
+
+        A no-op when ``backing`` already is the attached store (object
+        identity or store equality), so repeated compiles under one plan
+        don't churn; otherwise the new store wins. NOTE: attaching to the
+        process-wide :func:`shared_cache` is a process-wide decision —
+        every later compile in the process reads/writes that store until
+        another one is attached.
+        """
+        if backing is None or self.backing is backing or self.backing == backing:
+            return
+        with self._lock:
+            self.backing = backing
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -109,27 +146,34 @@ class SFACache:
         SFA whose exact state count exceeds the budget.
         """
         key = dfa_cache_key(dfa, poly_low)
-        ent = self._entries.get(key)
-        if ent is None:
-            self.info.misses += 1
-            return None, None
-        if isinstance(ent, _Blowup):
-            if ent.budget >= max_states:
-                self.info.hits += 1
-                self._entries.move_to_end(key)
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None and self.backing is not None:
+                ent = self._promote(key)
+            if ent is None:
+                self.info.misses += 1
+                return None, None
+            if isinstance(ent, _Blowup):
+                if ent.budget >= max_states:
+                    self.info.hits += 1
+                    self._entries.move_to_end(key)
+                    return "blowup", None
+                self.info.misses += 1  # bigger budget might close — rebuild
+                return None, None
+            self.info.hits += 1
+            self._entries.move_to_end(key)
+            if ent.n_states > max_states:
                 return "blowup", None
-            self.info.misses += 1  # bigger budget might close — reconstruct
-            return None, None
-        self.info.hits += 1
-        self._entries.move_to_end(key)
-        if ent.n_states > max_states:
-            return "blowup", None
-        return "sfa", ent
+            return "sfa", ent
 
     def store(self, dfa: DFA, sfa: SFA,
               poly_low: int = DEFAULT_POLY_LOW) -> None:
-        """Insert/refresh the positive entry for ``dfa``."""
-        self._put(dfa_cache_key(dfa, poly_low), sfa, sfa.nbytes())
+        """Insert/refresh the positive entry for ``dfa`` (write-through)."""
+        key = dfa_cache_key(dfa, poly_low)
+        with self._lock:
+            self._put(key, sfa, sfa.nbytes())
+            if self.backing is not None:
+                self.backing.put_sfa(key, sfa)
 
     def store_blowup(self, dfa: DFA, budget: int,
                      poly_low: int = DEFAULT_POLY_LOW) -> None:
@@ -139,18 +183,65 @@ class SFACache:
         marker only grows its recorded budget.
         """
         key = dfa_cache_key(dfa, poly_low)
-        ent = self._entries.get(key)
-        if isinstance(ent, SFA):
-            return
-        if isinstance(ent, _Blowup):
-            ent.budget = max(ent.budget, budget)
-            self._entries.move_to_end(key)
-            return
-        self._put(key, _Blowup(budget=budget), 0)
+        with self._lock:
+            ent = self._entries.get(key)
+            if isinstance(ent, SFA):
+                return
+            if isinstance(ent, _Blowup):
+                ent.budget = max(ent.budget, budget)
+                self._entries.move_to_end(key)
+            else:
+                self._put(key, _Blowup(budget=budget), 0)
+            if self.backing is not None:
+                self.backing.put_blowup(key, budget)
+
+    def preload(self, max_entries: int | None = None) -> int:
+        """Warm start: bulk-promote the backing tier into memory.
+
+        ``entries()`` yields in the store's LRU order (least-recently-used
+        first), so insertion preserves recency in the memory LRU and any
+        in-memory eviction drops the coldest artifacts. With ``max_entries``
+        only the *most*-recently-used that many are promoted.
+        -> number of entries promoted; 0 without a backing store.
+        """
+        if self.backing is None:
+            return 0
+        entries = self.backing.entries()
+        if max_entries is not None:
+            from collections import deque
+
+            entries = deque(entries, maxlen=max_entries)  # keep the hottest
+        n = 0
+        with self._lock:
+            for key, kind, payload in entries:
+                if kind == "sfa":
+                    self._put(key, payload, payload.nbytes())
+                else:
+                    self._put(key, _Blowup(budget=int(payload)), 0)
+                self.info.disk_hits += 1
+                n += 1
+        return n
+
+    def _promote(self, key: str):
+        """Memory miss -> consult the backing tier; insert any hit into the
+        memory LRU (without writing back) and return the new entry."""
+        got = self.backing.get(key)
+        if got is None:
+            return None
+        kind, payload = got
+        if kind == "sfa":
+            ent = payload
+            self._put(key, ent, ent.nbytes())
+        else:
+            ent = _Blowup(budget=int(payload))
+            self._put(key, ent, 0)
+        self.info.disk_hits += 1
+        return ent
 
     def clear(self) -> None:
-        self._entries.clear()
-        self.info.current_bytes = 0
+        with self._lock:
+            self._entries.clear()
+            self.info.current_bytes = 0
 
     # -- internals ----------------------------------------------------------
 

@@ -459,3 +459,51 @@ def distributed_doc_mappings_fn(mesh: Mesh, data_axis: str = "data",
         )(tables, corpus)
 
     return fn
+
+
+# --------------------------------------------------------------------------
+# Prefix-scan census: sliding windows without recomputing shared blocks
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def sliding_window_mappings(block_maps: jnp.ndarray, m: int) -> jnp.ndarray:
+    """All length-``m`` sliding-window compositions of consecutive block
+    transition functions — ``(Pg, B, n) -> (Pg, B - m + 1, n)`` where output
+    ``w`` is ``block w ∘then∘ ... ∘then∘ block w+m-1``.
+
+    ``Scanner.census`` on materialized windows recomputes every block's
+    function ``m`` times; this is the Gil–Werman trick on the function
+    monoid instead: tile the block axis into groups of ``m``, run one
+    *suffix* :func:`repro.core.monoid.scan` and one *prefix* scan per tile
+    (each block's function enters exactly two log-depth scans), and stitch
+    window ``w = t·m + j`` as ``suffix[t, j] ∘then∘ prefix[t+1, j-1]``
+    (identity when ``j = 0``). Function composition is exactly associative
+    on int32 gathers, so results are bit-identical to the naive per-window
+    composition no matter how the tiling falls.
+    """
+    Pg, B, n = block_maps.shape
+    W = B - m + 1
+    assert W >= 1, "need at least m blocks"
+    if m == 1:
+        return block_maps
+    T = -(-B // m)  # tiles of m blocks, last one padded with identities
+    ident = jnp.broadcast_to(jnp.arange(n, dtype=block_maps.dtype), (Pg, 1, n))
+    pad = jnp.broadcast_to(ident, (Pg, T * m - B, n))
+    x = jnp.concatenate([block_maps, pad], axis=1).reshape(Pg, T, m, n)
+    # A reverse scan folds the right end in first, so the suffix combine
+    # "block j then j+1 then ..." needs the argument-flipped monoid.
+    flipped = M.Monoid(lambda a, b: FN.combine(b, a), FN.identity, FN.name)
+    suffix = M.scan(flipped, x, axis=2, reverse=True)  # [t,j] = tm+j..tm+m-1
+    prefix = M.scan(FN, x, axis=2)                     # [t,j] = tm..tm+j
+    # prefix, shifted one block right within each tile (j=0 -> identity) and
+    # one whole tile down: flat index w + m lands on tile t+1, offset j.
+    shifted = jnp.concatenate(
+        [jnp.broadcast_to(ident[:, None], (Pg, T, 1, n)), prefix[:, :, :-1]],
+        axis=2,
+    )
+    extra = jnp.broadcast_to(ident[:, None], (Pg, 1, m, n))
+    shifted = jnp.concatenate([shifted, extra], axis=1)    # (Pg, T+1, m, n)
+    s_flat = suffix.reshape(Pg, T * m, n)[:, :W]
+    q_flat = shifted.reshape(Pg, (T + 1) * m, n)[:, m:m + W]
+    return FN.combine(s_flat, q_flat)

@@ -11,6 +11,7 @@ them all.
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field, replace
 from typing import Any
 
@@ -77,6 +78,13 @@ class ConstructionPolicy:
         performs zero construction rounds), ``"off"``, or an explicit
         :class:`~repro.construction.SFACache` instance (isolated caches for
         tests and multi-tenant serving).
+    ``store``
+        optional persistent tier under the cache: a directory path (wrapped
+        in :class:`repro.scanservice.ArtifactStore`) or any object speaking
+        the backing protocol. Attached to the resolved cache, so SFAs
+        persist across processes — a fresh process compiling previously-seen
+        patterns performs zero construction rounds. Ignored when
+        ``cache="off"``.
     ``distribution``
         ``"shard_map"`` shards the *pattern* axis of the batched construction
         buffers over ``mesh`` (default: a fresh 1-axis mesh named
@@ -90,6 +98,7 @@ class ConstructionPolicy:
     engine: str = "vectorized"
     tile: int = 128
     cache: Any = "shared"
+    store: Any = None
     distribution: str = "local"
     mesh: Any = None
     pattern_axis: str = "pattern"
@@ -123,17 +132,41 @@ class ConstructionPolicy:
                 "construction cache must be 'shared', 'off', None, or an "
                 f"SFACache instance, got {self.cache!r}"
             )
+        if not (self.store is None
+                or isinstance(self.store, (str, os.PathLike))
+                or (hasattr(self.store, "get")
+                    and hasattr(self.store, "put_sfa"))):
+            raise ValueError(
+                "construction store must be None, a directory path, or an "
+                "object with the ArtifactStore backing protocol "
+                f"(get/put_sfa/put_blowup), got {self.store!r}"
+            )
         return self
 
+    def resolve_store(self):
+        """-> the backing store object, or None. Paths wrap lazily in an
+        :class:`repro.scanservice.ArtifactStore`."""
+        if self.store is None:
+            return None
+        if isinstance(self.store, (str, os.PathLike)):
+            from ..scanservice.store import ArtifactStore
+
+            return ArtifactStore(self.store)
+        return self.store
+
     def resolve_cache(self):
-        """-> the SFACache to consult, or None when caching is off."""
+        """-> the SFACache to consult (with any configured backing store
+        attached), or None when caching is off."""
         from ..construction import SFACache, shared_cache
 
+        cache = None
         if isinstance(self.cache, SFACache):
-            return self.cache
-        if self.cache == "shared":
-            return shared_cache()
-        return None
+            cache = self.cache
+        elif self.cache == "shared":
+            cache = shared_cache()
+        if cache is not None:
+            cache.attach_backing(self.resolve_store())
+        return cache
 
     def with_(self, **overrides) -> "ConstructionPolicy":
         return replace(self, **overrides).validate()

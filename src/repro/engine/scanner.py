@@ -497,6 +497,63 @@ class Scanner:
         """Per-pattern hit counts over a corpus, (P,) int32."""
         return self.scan(docs).counts
 
+    def census_windows(self, seq, window: int, stride: int | None = None
+                       ) -> ScanResult:
+        """Prefix-scan census of all sliding windows of one sequence.
+
+        ``scan`` on materialized windows recomputes every shared symbol's
+        chunk function once per overlapping window; here the sequence is cut
+        into ``stride``-symbol blocks, each block's transition function is
+        computed **once**, and all window compositions come out of two
+        :func:`repro.core.monoid.scan` passes per tile
+        (:func:`repro.engine.executors.sliding_window_mappings`). Function
+        composition is exactly associative, so ``hits`` is bit-identical to
+        ``scan([seq[i*stride : i*stride + window] for i ...])``.
+
+        ``stride`` must divide ``window`` (default: ``stride = window``,
+        i.e. disjoint blocks). Returns a :class:`ScanResult` whose "docs"
+        are the ``(len(seq) - window) // stride + 1`` full windows.
+        """
+        stride = window if stride is None else stride
+        if window < 1 or stride < 1:
+            raise ValueError("window and stride must be >= 1")
+        if window % stride:
+            raise ValueError(
+                f"stride ({stride}) must divide window ({window}): the "
+                "prefix-scan census composes whole stride-blocks"
+            )
+        enc = self._encode_docs([seq])[0]
+        L = len(enc)
+        m = window // stride
+        W = (L - window) // stride + 1 if L >= window else 0
+        hits = np.zeros((self.n_patterns, W), dtype=bool)
+        if W == 0:
+            return ScanResult(hits=hits, ids=self.ids)
+        B = W + m - 1
+        blocks = np.ascontiguousarray(enc[: B * stride].reshape(B, stride))
+        if self.mesh is not None:
+            # Blocks are the "docs" of the shard_map path: pad the block
+            # axis up to the mesh size with throwaway rows, cropped below.
+            n_dev = int(np.prod(list(self.mesh.shape.values())))
+            pad_rows = -B % n_dev
+            if pad_rows:
+                blocks = np.concatenate(
+                    [blocks, np.zeros((pad_rows, stride), dtype=np.int32)]
+                )
+        for g in self.groups:
+            maps = self._group_doc_mappings(g, blocks)[:, :B]  # (Pg, B, n)
+            wmaps = np.asarray(X.sliding_window_mappings(
+                jnp.asarray(maps), m
+            ))                                              # (Pg, W, n)
+            finals = np.take_along_axis(
+                wmaps, g.bank.starts[:, None, None].astype(np.int64), axis=2
+            )[:, :, 0]
+            acc = np.take_along_axis(
+                g.bank.accepting, finals.astype(np.int64), axis=1
+            )
+            hits[g.indices, :] = acc
+        return ScanResult(hits=hits, ids=self.ids)
+
     def mapping(self, doc) -> np.ndarray:
         """Transition function of one whole input under every pattern,
         (P, n_max) int32 on the scanner's padded layout (identity beyond
@@ -545,6 +602,21 @@ class Scanner:
             s = int(d.table[s, enc[i]])
             flags[i] = bool(d.accepting[s])
         return flags
+
+    # -- serving ------------------------------------------------------------
+
+    @classmethod
+    def service(cls, store_dir=None, plan: ScanPlan | None = None,
+                **kwargs):
+        """The serving layer's front door: a
+        :class:`repro.scanservice.ScanService` whose compiles run through a
+        persistent artifact store at ``store_dir`` (when given) and whose
+        ``submit``/``flush`` coalesce concurrent requests into one bank
+        compile + one fused scan. See :mod:`repro.scanservice`.
+        """
+        from ..scanservice import ScanService
+
+        return ScanService(store_dir=store_dir, plan=plan, **kwargs)
 
     # -- streaming ----------------------------------------------------------
 

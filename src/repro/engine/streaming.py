@@ -15,6 +15,11 @@ block reuses one compiled program (and one VMEM-resident table block).
 ``StreamSession.finish()`` composes any ragged tail sequentially (exact,
 < one block of work) and returns a :class:`StreamResult` whose mapping is
 bit-identical to ``Scanner.mapping`` of the concatenated input.
+
+This is also the corpus-job path for long documents:
+:func:`repro.scanservice.scan_shard` routes any document at or above the
+job's ``stream_threshold`` through a stream session, so shard memory stays
+bounded by one block regardless of document length.
 """
 
 from __future__ import annotations

@@ -1,0 +1,201 @@
+"""Resumable corpus jobs: checkpointed shard-by-shard scans.
+
+A :class:`CorpusJob` executes one :class:`~repro.scanservice.CorpusManifest`
+against one compiled pattern set, writing each shard's hit matrix to its own
+atomically-renamed ``.npz`` the moment it finishes. Killing the process
+between shards (or mid-write — the rename is the commit point) loses at most
+the shard in flight: a new ``CorpusJob`` pointed at the same work directory
+verifies it is resuming the *same* work (content digest over corpus +
+patterns recorded in ``job.json``), skips every finished shard, and scans
+only the remainder. Because every shard scans independently through the same
+exact automaton semantics, the aggregated hit matrix and census are
+byte-identical whether the job ran straight through or was killed and
+resumed — and even if the resuming process picked a different backend, since
+all backends are bit-identical by the engine's core property.
+
+The job digest deliberately excludes the execution plan: plans change *how*
+(backend, distribution, chunking), never *what*, so a resume may e.g. move
+from ``distribution="local"`` to ``"shard_map"`` without invalidating
+finished shards.
+
+Layout::
+
+    <workdir>/job.json               # version, digest, ids, n_shards
+    <workdir>/shards/shard_00007.npz # hits: (P, shard_items) bool
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+from ..construction import dfa_cache_key
+from ..engine import ScanPlan, Scanner, ScanResult
+from .corpus import CorpusManifest, scan_shard
+
+JOB_VERSION = 1
+
+
+@dataclass(frozen=True)
+class JobReport:
+    """Outcome of one :meth:`CorpusJob.run` call."""
+
+    n_shards: int
+    done_before: int       # shards already checkpointed when run() started
+    scanned: int           # shards scanned (and checkpointed) by this call
+    complete: bool
+
+    @property
+    def done(self) -> int:
+        return self.done_before + self.scanned
+
+
+class CorpusJob:
+    """One resumable scan of a sharded corpus. See module docstring."""
+
+    def __init__(self, patterns, manifest: CorpusManifest, workdir,
+                 plan: ScanPlan | None = None,
+                 stream_threshold: int | None = None):
+        self.manifest = manifest
+        self.workdir = Path(workdir)
+        self.stream_threshold = stream_threshold
+        self._shard_dir = self.workdir / "shards"
+        self._shard_dir.mkdir(parents=True, exist_ok=True)
+        # Compilation runs through the plan's cache tiers, so a resuming
+        # process with a persistent store pays zero construction rounds.
+        self.scanner = Scanner.compile(patterns, plan)
+        self._check_or_write_meta()
+
+    # -- metadata ------------------------------------------------------------
+
+    def digest(self) -> str:
+        """Content hash of *what* this job computes: corpus + patterns.
+        Plan knobs are excluded on purpose (see module docstring)."""
+        h = hashlib.sha256()
+        h.update(f"job-v{JOB_VERSION}|".encode())
+        h.update(self.manifest.digest().encode())
+        for d in self.scanner._dfas:
+            h.update(b"|")
+            h.update(dfa_cache_key(d).encode())
+        return h.hexdigest()
+
+    def _check_or_write_meta(self) -> None:
+        meta_path = self.workdir / "job.json"
+        digest = self.digest()
+        if meta_path.exists():
+            try:
+                meta = json.loads(meta_path.read_text())
+            except ValueError:
+                meta = {}
+            if meta.get("version") != JOB_VERSION or \
+                    meta.get("digest") != digest:
+                raise ValueError(
+                    f"work directory {self.workdir} belongs to a different "
+                    "job (corpus or pattern set changed); point the job at "
+                    "a fresh directory or delete the old one"
+                )
+            return
+        tmp = meta_path.with_suffix(f".tmp.{os.getpid()}")
+        tmp.write_text(json.dumps({
+            "version": JOB_VERSION,
+            "digest": digest,
+            "ids": list(self.scanner.ids),
+            "kind": self.manifest.kind,
+            "n_shards": self.manifest.n_shards,
+            "n_items": self.manifest.n_items,
+        }, indent=1))
+        os.replace(tmp, meta_path)
+
+    # -- shard bookkeeping ---------------------------------------------------
+
+    def _shard_path(self, shard: int) -> Path:
+        return self._shard_dir / f"shard_{shard:05d}.npz"
+
+    def _load_shard(self, shard: int) -> np.ndarray | None:
+        """A finished shard's hits, or None (missing / unreadable / wrong
+        shape — unreadable checkpoints are re-scanned, never fatal)."""
+        path = self._shard_path(shard)
+        start, stop = self.manifest.shard_range(shard)
+        try:
+            with np.load(path) as z:
+                hits = np.asarray(z["hits"], dtype=bool)
+        except Exception:
+            return None
+        if hits.shape != (self.scanner.n_patterns, stop - start):
+            return None
+        return hits
+
+    def _shard_ready(self, shard: int) -> bool:
+        """Cheap completeness probe: the checkpoint's zip directory must be
+        intact and name the hits array — no payload read (aggregate() does
+        the full load + shape check once, at the end)."""
+        try:
+            with np.load(self._shard_path(shard)) as z:
+                return "hits" in z.files
+        except Exception:
+            return False
+
+    def pending(self) -> list:
+        """Shard indices not yet validly checkpointed, in scan order."""
+        return [s for s in range(self.manifest.n_shards)
+                if not self._shard_ready(s)]
+
+    @property
+    def complete(self) -> bool:
+        return not self.pending()
+
+    # -- execution -----------------------------------------------------------
+
+    def run(self, max_shards: int | None = None) -> JobReport:
+        """Scan up to ``max_shards`` pending shards (all, by default),
+        checkpointing each one atomically as it finishes."""
+        todo = self.pending()
+        done_before = self.manifest.n_shards - len(todo)
+        scanned = 0
+        for shard in todo:
+            if max_shards is not None and scanned >= max_shards:
+                break
+            hits = scan_shard(self.scanner, self.manifest, shard,
+                              stream_threshold=self.stream_threshold)
+            path = self._shard_path(shard)
+            tmp = path.with_suffix(f".tmp.{os.getpid()}")
+            with open(tmp, "wb") as f:
+                np.savez(f, hits=hits)
+            os.replace(tmp, path)   # commit point
+            scanned += 1
+        return JobReport(
+            n_shards=self.manifest.n_shards,
+            done_before=done_before,
+            scanned=scanned,
+            complete=done_before + scanned == self.manifest.n_shards,
+        )
+
+    # -- aggregation ---------------------------------------------------------
+
+    def aggregate(self) -> ScanResult:
+        """Concatenate every shard's hits -> ``(P, n_items)``
+        :class:`~repro.engine.ScanResult` (``.counts`` is the census).
+        Raises if any shard is still pending."""
+        parts = []
+        missing = []
+        for shard in range(self.manifest.n_shards):
+            hits = self._load_shard(shard)
+            if hits is None:
+                missing.append(shard)
+            else:
+                parts.append(hits)
+        if missing:
+            raise RuntimeError(
+                f"job incomplete: shards {missing} pending — call run() first"
+            )
+        return ScanResult(hits=np.concatenate(parts, axis=1),
+                          ids=self.scanner.ids)
+
+    def census(self) -> np.ndarray:
+        """Aggregated per-pattern hit counts over the whole corpus."""
+        return self.aggregate().counts

@@ -1,0 +1,296 @@
+"""Coalescing batch scheduler: many concurrent scan requests, one bank.
+
+A serving process sees a stream of small, overlapping requests — a few
+patterns each against a few documents. Compiling and scanning each request
+alone wastes exactly what the paper says to amortize: automaton setup and
+per-call dispatch. The scheduler coalesces every request that lands inside a
+micro-batch window into **one** compile of the union pattern bank (all cache
+misses constructed in a single :func:`repro.construction.construct_bank`
+call, size-bucketed through the plan's chunking policy) and **one** fused
+bank scan over the union document set, then demultiplexes the hit matrix
+back per request. Since every backend computes the same exact automaton
+semantics and documents scan independently, the demuxed slices are
+bit-identical to per-request ``Scanner.scan`` — coalescing is pure
+amortization, never an approximation.
+
+Two drivers share the batching core:
+
+* ``driver="sync"`` — requests queue until :meth:`BatchScheduler.flush`
+  (or a full ``max_batch``, or ``Ticket.result()``) processes them on the
+  calling thread. No threads anywhere — the deterministic driver the test
+  suite uses.
+* ``driver="thread"`` — a worker thread closes each batch ``window_s``
+  after its first request (earlier when ``max_batch`` fills);
+  ``submit`` returns immediately and ``Ticket.result()`` blocks.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..construction import dfa_cache_key
+from ..core.dfa import DFA
+from ..engine import ChunkPolicy, ConstructionPolicy, ScanPlan, Scanner
+
+DRIVERS = ("sync", "thread")
+
+
+def _default_plan() -> ScanPlan:
+    return ScanPlan(
+        chunking=ChunkPolicy(bucket=True),
+        construction=ConstructionPolicy(method="batched"),
+    )
+
+
+@dataclass(frozen=True)
+class RequestResult:
+    """One request's demuxed slice of a coalesced batch scan."""
+
+    hits: np.ndarray      # (P_req, D_req) bool
+    ids: tuple            # this request's pattern ids
+    batch_size: int       # requests that shared the flush
+
+    @property
+    def counts(self) -> np.ndarray:
+        return np.sum(self.hits, axis=1, dtype=np.int32)
+
+
+class Ticket:
+    """Handle for one submitted request; redeem with :meth:`result`."""
+
+    def __init__(self, scheduler: "BatchScheduler"):
+        self._scheduler = scheduler
+        self._event = threading.Event()
+        self._result: RequestResult | None = None
+        self._error: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> RequestResult:
+        """The request's :class:`RequestResult`. Under the sync driver an
+        unflushed ticket flushes the scheduler first; under the thread
+        driver this blocks until the worker closes the batch."""
+        if not self._event.is_set() and self._scheduler.driver == "sync":
+            self._scheduler.flush()
+        if not self._event.wait(timeout):
+            raise TimeoutError("scan request still pending")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def _resolve(self, result: RequestResult) -> None:
+        self._result = result
+        self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._error = exc
+        self._event.set()
+
+
+@dataclass
+class SchedulerStats:
+    requests: int = 0
+    flushes: int = 0
+    max_coalesced: int = 0
+    union_patterns: int = 0   # pattern columns actually compiled/scanned
+    union_docs: int = 0       # documents actually scanned
+
+
+class _Request:
+    __slots__ = ("keys", "ids", "specs", "doc_keys", "docs", "ticket")
+
+    def __init__(self, keys, ids, specs, doc_keys, docs, ticket):
+        self.keys = keys
+        self.ids = ids
+        self.specs = specs
+        self.doc_keys = doc_keys
+        self.docs = docs
+        self.ticket = ticket
+
+
+def _spec_key(spec) -> tuple:
+    if isinstance(spec, str):
+        return ("str", spec)
+    if isinstance(spec, DFA):
+        return ("dfa", dfa_cache_key(spec))
+    raise TypeError(
+        f"scheduler pattern specs must be str or DFA, got {type(spec).__name__}"
+    )
+
+
+def _doc_key(doc) -> tuple:
+    if isinstance(doc, str):
+        return ("str", doc)
+    arr = np.asarray(doc, dtype=np.int32)
+    return ("arr", arr.tobytes())
+
+
+class BatchScheduler:
+    """Coalesce concurrent ``submit(patterns, docs)`` calls into fused
+    bank compiles + scans (see module docstring)."""
+
+    def __init__(self, plan: ScanPlan | None = None, *, driver: str = "sync",
+                 window_s: float = 0.002, max_batch: int = 64):
+        if driver not in DRIVERS:
+            raise ValueError(f"driver must be one of {DRIVERS}, got {driver!r}")
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if window_s < 0:
+            raise ValueError("window_s must be >= 0")
+        self.plan = (plan or _default_plan()).validate()
+        self.driver = driver
+        self.window_s = window_s
+        self.max_batch = max_batch
+        self.stats = SchedulerStats()
+        self._pending: list = []
+        self._cond = threading.Condition()
+        self._first_ts: float | None = None
+        self._stop = False
+        self._scanners: dict = {}   # union pattern-key tuple -> Scanner
+        self._worker = None
+        if driver == "thread":
+            self._worker = threading.Thread(
+                target=self._worker_loop, name="scan-batcher", daemon=True
+            )
+            self._worker.start()
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, patterns, docs) -> Ticket:
+        """Enqueue one request: ``patterns`` is a str/DFA or a sequence of
+        them, ``docs`` a str/encoded array or a sequence. -> :class:`Ticket`.
+        """
+        if isinstance(patterns, (str, DFA)):
+            patterns = [patterns]
+        patterns = list(patterns)
+        if isinstance(docs, str) or (
+            isinstance(docs, np.ndarray) and docs.ndim == 1
+        ):
+            docs = [docs]
+        docs = list(docs)
+        if not patterns or not docs:
+            raise ValueError("submit needs at least one pattern and one doc")
+        keys = tuple(_spec_key(p) for p in patterns)
+        ids = tuple(
+            p if isinstance(p, str) else f"pattern_{i}"
+            for i, p in enumerate(patterns)
+        )
+        req = _Request(
+            keys, ids, patterns, tuple(_doc_key(d) for d in docs), docs,
+            Ticket(self),
+        )
+        with self._cond:
+            if self._stop:
+                raise RuntimeError("scheduler is closed")
+            self._pending.append(req)
+            self.stats.requests += 1
+            if self._first_ts is None:
+                self._first_ts = time.monotonic()
+            self._cond.notify_all()
+            full = len(self._pending) >= self.max_batch
+        if self.driver == "sync" and full:
+            self.flush()
+        return req.ticket
+
+    def flush(self) -> int:
+        """Process everything pending as one coalesced batch (on the calling
+        thread). -> number of requests served."""
+        with self._cond:
+            batch, self._pending = self._pending, []
+            self._first_ts = None
+        if batch:
+            self._run_batch(batch)
+        return len(batch)
+
+    # -- the coalescing core -------------------------------------------------
+
+    def _run_batch(self, batch: list) -> None:
+        try:
+            # Union patterns and docs, deduplicated by content.
+            col_of: dict = {}
+            union_specs: list = []
+            for req in batch:
+                for key, spec in zip(req.keys, req.specs):
+                    if key not in col_of:
+                        col_of[key] = len(union_specs)
+                        union_specs.append(spec)
+            doc_of: dict = {}
+            union_docs: list = []
+            for req in batch:
+                for key, doc in zip(req.doc_keys, req.docs):
+                    if key not in doc_of:
+                        doc_of[key] = len(union_docs)
+                        union_docs.append(doc)
+
+            scanner = self._scanner_for(tuple(col_of), union_specs)
+            result = scanner.scan(union_docs)   # ONE fused bank scan
+
+            self.stats.flushes += 1
+            self.stats.max_coalesced = max(self.stats.max_coalesced, len(batch))
+            self.stats.union_patterns += len(union_specs)
+            self.stats.union_docs += len(union_docs)
+
+            for req in batch:
+                rows = np.asarray([col_of[k] for k in req.keys])
+                cols = np.asarray([doc_of[k] for k in req.doc_keys])
+                req.ticket._resolve(RequestResult(
+                    hits=result.hits[np.ix_(rows, cols)].copy(),
+                    ids=req.ids,
+                    batch_size=len(batch),
+                ))
+        except BaseException as exc:  # propagate to every waiter
+            for req in batch:
+                req.ticket._fail(exc)
+            if self.driver == "sync":
+                raise
+
+    def _scanner_for(self, key_tuple: tuple, specs: list) -> Scanner:
+        """Memoized union-bank compile. Cold pattern sets still answer most
+        construction from the plan's SFA cache tiers; this memo additionally
+        skips re-stacking device tables for repeat batches."""
+        sc = self._scanners.get(key_tuple)
+        if sc is None:
+            sc = Scanner.compile(specs, self.plan)
+            self._scanners[key_tuple] = sc
+        return sc
+
+    # -- thread driver -------------------------------------------------------
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._pending and not self._stop:
+                    self._cond.wait()
+                if not self._pending and self._stop:
+                    return
+                # Window: wait for stragglers until the deadline/batch cap.
+                while not self._stop and len(self._pending) < self.max_batch:
+                    remaining = self._first_ts + self.window_s - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._cond.wait(timeout=remaining)
+                batch, self._pending = self._pending, []
+                self._first_ts = None
+            self._run_batch(batch)
+
+    def close(self) -> None:
+        """Serve any queued requests, then stop accepting new ones."""
+        if self.driver == "thread":
+            with self._cond:
+                self._stop = True
+                self._cond.notify_all()
+            self._worker.join()
+        else:
+            self.flush()
+            self._stop = True
+
+    def __enter__(self) -> "BatchScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,102 @@
+"""The :class:`ScanService` facade: store + scheduler + jobs as one object.
+
+This is the serving layer's front door (also reachable as
+``Scanner.service(...)``). It owns:
+
+* an :class:`~repro.scanservice.ArtifactStore` (when ``store_dir`` is
+  given) attached as the persistent tier under one
+  :class:`~repro.construction.SFACache`, so every compile the service
+  performs — direct, coalesced, or inside a corpus job — reads and writes
+  the same two-tier cache. A fresh process pointed at the same store
+  compiles previously-seen patterns with zero construction rounds;
+  :meth:`ScanService.warm_start` bulk-promotes the store into memory up
+  front so even first requests skip the disk tier.
+* a :class:`~repro.scanservice.BatchScheduler` coalescing concurrent
+  ``submit`` calls into fused bank compiles + scans;
+* a :class:`~repro.scanservice.CorpusJob` factory binding jobs to the
+  service's plan (and therefore its cache tiers).
+"""
+
+from __future__ import annotations
+
+from ..construction import SFACache
+from ..engine import ChunkPolicy, ConstructionPolicy, ScanPlan, Scanner
+from .corpus import CorpusManifest
+from .jobs import CorpusJob
+from .scheduler import BatchScheduler, Ticket
+from .store import ArtifactStore
+
+
+class ScanService:
+    """A scan-serving endpoint. See module docstring."""
+
+    def __init__(self, store_dir=None, plan: ScanPlan | None = None, *,
+                 cache: SFACache | None = None,
+                 store_max_bytes: int = 1 << 30,
+                 driver: str = "sync", window_s: float = 0.002,
+                 max_batch: int = 64):
+        if store_dir is None:
+            self.store = None
+        elif isinstance(store_dir, ArtifactStore):
+            self.store = store_dir
+        else:
+            self.store = ArtifactStore(store_dir, max_bytes=store_max_bytes)
+        self.cache = cache if cache is not None else SFACache()
+        self.cache.attach_backing(self.store)
+        if plan is not None:
+            # Respect the caller's plan, but reroute it through the
+            # service's cache tiers — including its store: a plan naming a
+            # *different* store would silently rebind the service's cache
+            # away from `self.store` on the first compile.
+            overrides = {"cache": self.cache}
+            if self.store is not None:
+                overrides["store"] = self.store
+            self.plan = plan.with_(
+                construction=plan.construction.with_(**overrides)
+            )
+        else:
+            self.plan = ScanPlan(
+                chunking=ChunkPolicy(bucket=True),
+                construction=ConstructionPolicy(
+                    cache=self.cache, method="batched"
+                ),
+            ).validate()
+        self.scheduler = BatchScheduler(
+            self.plan, driver=driver, window_s=window_s, max_batch=max_batch
+        )
+
+    # -- cache tiers ---------------------------------------------------------
+
+    def warm_start(self, max_entries: int | None = None) -> int:
+        """Preload the persistent tier into memory. -> entries promoted."""
+        return self.cache.preload(max_entries)
+
+    def scanner(self, patterns, **overrides) -> Scanner:
+        """Compile patterns through the service's plan and cache tiers."""
+        return Scanner.compile(patterns, self.plan, **overrides)
+
+    # -- request path --------------------------------------------------------
+
+    def submit(self, patterns, docs) -> Ticket:
+        return self.scheduler.submit(patterns, docs)
+
+    def flush(self) -> int:
+        return self.scheduler.flush()
+
+    # -- corpus jobs ---------------------------------------------------------
+
+    def corpus_job(self, patterns, manifest: CorpusManifest, workdir,
+                   **kwargs) -> CorpusJob:
+        """A resumable job running under the service's plan (and cache)."""
+        return CorpusJob(patterns, manifest, workdir, plan=self.plan, **kwargs)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        self.scheduler.close()
+
+    def __enter__(self) -> "ScanService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,442 @@
+"""Scan service tests: persistent artifact store, coalescing scheduler,
+resumable corpus jobs, and the prefix-scan census.
+
+Acceptance pins (ISSUE 4):
+* a second process — simulated by a fresh ``SFACache`` pointed at the same
+  store directory — compiling the same pattern set performs **zero
+  construction rounds**, asserted via ``construction_report``;
+* coalesced scheduler results are bit-identical to per-request
+  ``Scanner.scan``;
+* a corpus job killed after N shards resumes and produces a byte-identical
+  aggregate census to an uninterrupted run.
+"""
+
+import json
+
+import numpy as np
+import pytest
+from _strategies import given, settings, st
+
+from repro.construction import SFACache, construct_sfa, dfa_cache_key
+from repro.core.dfa import random_dfa
+from repro.core.prosite import synthetic_protein
+from repro.engine import ConstructionPolicy, ScanPlan, Scanner
+from repro.scanservice import (
+    ArtifactStore,
+    BatchScheduler,
+    CorpusJob,
+    CorpusManifest,
+    ScanService,
+    scan_shard,
+)
+from repro.scanservice.store import STORE_VERSION
+
+PATTERNS = ["PS00016", "PS00005", "PS00001", "PS00006"]
+
+
+@pytest.fixture(scope="module")
+def docs():
+    return [synthetic_protein(160, seed=i) for i in range(6)]
+
+
+def _plan(cache, **kw):
+    return ScanPlan(construction=ConstructionPolicy(cache=cache,
+                                                    method="batched", **kw))
+
+
+# --------------------------------------------------------------------------
+# Artifact store: cold vs warm process (acceptance), corruption, LRU
+# --------------------------------------------------------------------------
+
+
+def test_cold_then_warm_process_zero_rounds(tmp_path, docs):
+    """Acceptance: fresh SFACache + same store dir -> zero rounds."""
+    cold = SFACache(backing=ArtifactStore(tmp_path / "store"))
+    sc1 = Scanner.compile(PATTERNS, _plan(cold))
+    r1 = sc1.construction_report
+    assert r1.rounds > 0 and r1.cache_misses == len(PATTERNS)
+
+    # "Second process": a fresh in-memory tier over the same directory.
+    warm = SFACache(backing=ArtifactStore(tmp_path / "store"))
+    sc2 = Scanner.compile(PATTERNS, _plan(warm))
+    r2 = sc2.construction_report
+    assert r2.rounds == 0 and r2.constructed == 0
+    assert r2.cache_hits == len(PATTERNS)
+    assert warm.info.disk_hits == len(PATTERNS)
+    assert sc2.pattern_modes == sc1.pattern_modes
+    assert np.array_equal(sc1.scan(docs).hits, sc2.scan(docs).hits)
+
+
+def test_store_via_plan_path_plumbing(tmp_path):
+    """ConstructionPolicy(store=<path>) wires the disk tier without any
+    explicit ArtifactStore handling by the caller."""
+    plan = ScanPlan(construction=ConstructionPolicy(
+        cache=SFACache(), store=str(tmp_path / "s")))
+    assert Scanner.compile(PATTERNS[:2], plan).construction_report.rounds > 0
+    plan2 = ScanPlan(construction=ConstructionPolicy(
+        cache=SFACache(), store=str(tmp_path / "s")))
+    assert Scanner.compile(PATTERNS[:2], plan2).construction_report.rounds == 0
+
+
+def test_store_blowup_markers_persist(tmp_path):
+    store = ArtifactStore(tmp_path)
+    d = random_dfa(6, 4, seed=3)
+    key = dfa_cache_key(d)
+    store.put_blowup(key, 10)
+    assert store.get(key) == ("blowup", 10)
+    store.put_blowup(key, 4)          # never downgrades
+    assert store.get(key) == ("blowup", 10)
+    # a fresh cache over the store answers the known blowup without work,
+    # but a bigger budget is a miss (the closure might fit)
+    cache = SFACache(backing=ArtifactStore(tmp_path))
+    assert cache.lookup(d, max_states=8) == ("blowup", None)
+    assert cache.lookup(d, max_states=100) == (None, None)
+    # a positive artifact always wins over a marker
+    sfa = construct_sfa(d)
+    store.put_sfa(key, sfa)
+    store.put_blowup(key, 10**6)
+    kind, got = ArtifactStore(tmp_path).get(key)
+    assert kind == "sfa" and got.n_states == sfa.n_states
+
+
+def test_corrupt_and_partial_artifacts_are_misses_not_fatal(tmp_path):
+    store = ArtifactStore(tmp_path)
+    d = random_dfa(5, 4, seed=1)
+    key = dfa_cache_key(d)
+    sfa = construct_sfa(d)
+    store.put_sfa(key, sfa)
+    assert store.get(key) is not None
+
+    # truncated payload (a crashed writer could never publish this — the
+    # sidecar commits last — but disks corrupt): miss, not an exception
+    payload = store._payload_path(key)
+    payload.write_bytes(payload.read_bytes()[:20])
+    assert store.get(key) is None
+
+    # garbage sidecar: miss
+    store.put_sfa(key, sfa)
+    store._sidecar_path(key).write_text("{not json")
+    assert store.get(key) is None
+
+    # foreign format version: miss (stale store degrades to cold)
+    store.put_sfa(key, sfa)
+    side = store._sidecar_path(key)
+    meta = json.loads(side.read_text())
+    meta["version"] = STORE_VERSION + 1
+    side.write_text(json.dumps(meta))
+    assert store.get(key) is None
+
+    # payload missing entirely (sidecar orphaned): miss
+    store.put_sfa(key, sfa)
+    store._payload_path(key).unlink()
+    assert store.get(key) is None
+
+    # and the whole cache stack shrugs: reconstruction, no raise
+    cache = SFACache(backing=store)
+    kind, got = cache.lookup(d, max_states=1000)
+    assert (kind, got) == (None, None)
+    sc = Scanner.compile([d], ScanPlan(
+        sfa_state_budget=5 ** 5,
+        construction=ConstructionPolicy(cache=cache),
+    ))
+    assert sc.construction_report.constructed == 1
+
+
+def test_store_lru_eviction_by_bytes(tmp_path):
+    dfas = [random_dfa(6, 4, seed=s) for s in range(4)]
+    sfas = [construct_sfa(d) for d in dfas]
+    keys = [dfa_cache_key(d) for d in dfas]
+    scratch = ArtifactStore(tmp_path / "scratch")
+    scratch.put_sfa(keys[3], sfas[3])
+    fourth_bytes = scratch.total_bytes()
+
+    store = ArtifactStore(tmp_path / "store", max_bytes=1 << 30)
+    for k, s in zip(keys[:3], sfas[:3]):
+        store.put_sfa(k, s)
+    assert len(store) == 3
+    store.get(keys[0])                     # refresh 0: now 1 is the LRU
+    # Shrink the budget so the 4th insert overflows by one byte — exactly
+    # the oldest-touched artifact must go.
+    store.max_bytes = store.total_bytes() + fourth_bytes - 1
+    store.put_sfa(keys[3], sfas[3])
+    remaining = set(store.keys())
+    assert keys[1] not in remaining
+    assert {keys[0], keys[2], keys[3]} <= remaining
+    assert store.total_bytes() <= store.max_bytes
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=60),
+       n=st.integers(min_value=2, max_value=7),
+       k=st.integers(min_value=2, max_value=5))
+def test_store_round_trip_property(seed, n, k):
+    """put_sfa -> get reproduces every array bit for bit.
+
+    No pytest fixtures here: the ``_strategies`` fallback ``@given``
+    cannot inject them, so the temp dir is managed by hand.
+    """
+    import shutil
+    import tempfile
+
+    d = random_dfa(n, k, seed=seed)
+    sfa = construct_sfa(d)
+    root = tempfile.mkdtemp(prefix="store-rt-")
+    try:
+        store = ArtifactStore(root)
+        key = dfa_cache_key(d)
+        store.put_sfa(key, sfa)
+        kind, got = store.get(key)
+        assert kind == "sfa"
+        assert np.array_equal(got.mappings, sfa.mappings)
+        assert np.array_equal(got.delta, sfa.delta)
+        assert np.array_equal(got.fingerprints, sfa.fingerprints)
+        assert np.array_equal(got.dfa.table, d.table)
+        assert np.array_equal(got.dfa.accepting, d.accepting)
+        assert got.dfa.start == d.start and got.dfa.alphabet == d.alphabet
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def test_store_entries_lru_order_and_limited_preload(tmp_path):
+    dfas = [random_dfa(4, 3, seed=s) for s in range(3)]
+    sfas = [construct_sfa(d) for d in dfas]
+    keys = [dfa_cache_key(d) for d in dfas]
+    store = ArtifactStore(tmp_path)
+    for k, s in zip(keys, sfas):
+        store.put_sfa(k, s)
+    store.get(keys[0])                       # 0 becomes the hottest
+    assert [k for k, _, _ in store.entries()] == [keys[1], keys[2], keys[0]]
+    # a capped preload keeps the most-recently-used artifacts
+    cache = SFACache(backing=ArtifactStore(tmp_path))
+    assert cache.preload(max_entries=1) == 1
+    assert list(cache._entries) == [keys[0]]
+
+
+def test_warm_start_preload(tmp_path, docs):
+    svc = ScanService(tmp_path / "store")
+    svc.scanner(PATTERNS)                  # cold: populate the store
+    svc.close()
+
+    svc2 = ScanService(tmp_path / "store")
+    assert svc2.warm_start() == len(PATTERNS)
+    sc = svc2.scanner(PATTERNS)
+    r = sc.construction_report
+    # preload already promoted everything into memory: zero rounds AND the
+    # per-compile lookups never even touch the disk tier again
+    disk_after_preload = svc2.cache.info.disk_hits
+    assert r.rounds == 0 and r.cache_hits == len(PATTERNS)
+    assert svc2.cache.info.disk_hits == disk_after_preload
+    svc2.close()
+
+
+# --------------------------------------------------------------------------
+# Coalescing scheduler
+# --------------------------------------------------------------------------
+
+
+def test_coalesced_results_bit_identical_to_per_request(docs):
+    """Acceptance: demuxed batch slices == per-request Scanner.scan."""
+    cache = SFACache()
+    sched = BatchScheduler(_plan(cache))
+    requests = [
+        (PATTERNS[:2], docs[:3]),
+        (PATTERNS[1:], docs[2:]),
+        ([PATTERNS[0], PATTERNS[3]], [docs[0], docs[5]]),
+    ]
+    tickets = [sched.submit(p, d) for p, d in requests]
+    assert sched.flush() == len(requests)
+    assert sched.stats.flushes == 1
+    assert sched.stats.union_patterns == len(PATTERNS)   # dedup across reqs
+    assert sched.stats.union_docs == len(docs)
+    for t, (p, d) in zip(tickets, requests):
+        ref = Scanner.compile(p, _plan(cache)).scan(d)
+        got = t.result()
+        assert got.batch_size == len(requests)
+        assert got.ids == ref.ids
+        assert np.array_equal(got.hits, ref.hits)
+        assert np.array_equal(got.counts, ref.counts)
+
+
+def test_sync_driver_result_and_max_batch_autoflush(docs):
+    sched = BatchScheduler(_plan(SFACache()), max_batch=2)
+    t1 = sched.submit(PATTERNS[0], docs[0])
+    assert not t1.done()
+    t2 = sched.submit(PATTERNS[1], docs[1])   # hits max_batch -> autoflush
+    assert t1.done() and t2.done()
+    t3 = sched.submit(PATTERNS[0], docs[2])
+    assert t3.result().hits.shape == (1, 1)   # result() flushes on demand
+    assert sched.stats.flushes == 2
+
+
+def test_scheduler_validation_and_close(docs):
+    with pytest.raises(ValueError):
+        BatchScheduler(driver="fiber")
+    sched = BatchScheduler(_plan(SFACache()))
+    with pytest.raises(ValueError):
+        sched.submit([], docs[0])
+    with pytest.raises(TypeError):
+        sched.submit([object()], docs[0])
+    sched.close()
+    with pytest.raises(RuntimeError):
+        sched.submit(PATTERNS[0], docs[0])
+
+
+def test_thread_driver_coalesces_and_matches(docs):
+    with BatchScheduler(_plan(SFACache()), driver="thread",
+                        window_s=0.05) as sched:
+        tickets = [sched.submit(PATTERNS[:2], [d]) for d in docs[:3]]
+        results = [t.result(timeout=60) for t in tickets]
+    ref = Scanner.compile(PATTERNS[:2], _plan(SFACache())).scan(docs[:3])
+    for i, res in enumerate(results):
+        assert np.array_equal(res.hits[:, 0], ref.hits[:, i])
+
+
+# --------------------------------------------------------------------------
+# Prefix-scan census
+# --------------------------------------------------------------------------
+
+
+def test_census_windows_bit_identical_to_materialized(docs):
+    seq = synthetic_protein(400, seed=42)
+    sc = Scanner.compile(PATTERNS, _plan(SFACache()))
+    for window, stride in [(40, 8), (60, 60), (24, 12)]:
+        res = sc.census_windows(seq, window, stride)
+        n_win = (len(seq) - window) // stride + 1
+        naive = sc.scan([seq[i * stride: i * stride + window]
+                         for i in range(n_win)])
+        assert res.hits.shape == (len(PATTERNS), n_win)
+        assert np.array_equal(res.hits, naive.hits)
+        assert np.array_equal(res.counts, naive.counts)
+
+
+def test_census_windows_validation_and_edges():
+    sc = Scanner.compile(PATTERNS[:1], _plan(SFACache()))
+    with pytest.raises(ValueError):
+        sc.census_windows("ACDEF", window=4, stride=3)   # 3 doesn't divide 4
+    with pytest.raises(ValueError):
+        sc.census_windows("ACDEF", window=0)
+    empty = sc.census_windows("ACD", window=8)           # shorter than window
+    assert empty.hits.shape == (1, 0)
+
+
+# --------------------------------------------------------------------------
+# Resumable corpus jobs
+# --------------------------------------------------------------------------
+
+
+def test_corpus_job_kill_and_resume_byte_identical(tmp_path, docs):
+    """Acceptance: killed-after-N-shards resume == uninterrupted run."""
+    cache = SFACache()
+    man = CorpusManifest.from_docs(docs, shard_docs=2)
+    assert man.n_shards == 3
+
+    job = CorpusJob(PATTERNS, man, tmp_path / "interrupted", _plan(cache))
+    rep = job.run(max_shards=1)            # "killed" after one shard
+    assert rep.scanned == 1 and not rep.complete
+    with pytest.raises(RuntimeError):
+        job.aggregate()
+
+    resumed = CorpusJob(PATTERNS, man, tmp_path / "interrupted", _plan(cache))
+    rep2 = resumed.run()
+    assert rep2.done_before == 1 and rep2.scanned == 2 and rep2.complete
+
+    uninterrupted = CorpusJob(PATTERNS, man, tmp_path / "straight",
+                              _plan(cache))
+    assert uninterrupted.run().complete
+    a, b = resumed.aggregate(), uninterrupted.aggregate()
+    assert np.array_equal(a.hits, b.hits)
+    assert a.hits.tobytes() == b.hits.tobytes()          # byte-identical
+    assert resumed.census().tobytes() == uninterrupted.census().tobytes()
+    # sanity: the aggregate equals one flat scan of the corpus
+    flat = Scanner.compile(PATTERNS, _plan(cache)).scan(docs)
+    assert np.array_equal(a.hits, flat.hits)
+
+
+def test_corpus_job_rejects_foreign_workdir(tmp_path, docs):
+    man = CorpusManifest.from_docs(docs, shard_docs=3)
+    CorpusJob(PATTERNS, man, tmp_path / "w", _plan(SFACache()))
+    other = CorpusManifest.from_docs(docs[:4], shard_docs=2)
+    with pytest.raises(ValueError):
+        CorpusJob(PATTERNS, other, tmp_path / "w", _plan(SFACache()))
+
+
+def test_corpus_job_corrupt_shard_checkpoint_rescans(tmp_path, docs):
+    man = CorpusManifest.from_docs(docs, shard_docs=2)
+    job = CorpusJob(PATTERNS, man, tmp_path / "j", _plan(SFACache()))
+    job.run()
+    job._shard_path(1).write_bytes(b"\x00\x01partial")
+    resumed = CorpusJob(PATTERNS, man, tmp_path / "j", _plan(SFACache()))
+    assert resumed.pending() == [1]
+    assert resumed.run().scanned == 1
+    flat = Scanner.compile(PATTERNS, _plan(SFACache())).scan(docs)
+    assert np.array_equal(resumed.aggregate().hits, flat.hits)
+
+
+def test_corpus_job_streaming_path_matches_scan(tmp_path):
+    """Docs past the stream threshold go through Scanner.stream; hits are
+    bit-identical to the batch scan path."""
+    mix = [synthetic_protein(L, seed=L) for L in (30, 500, 64, 700)]
+    man = CorpusManifest.from_docs(mix, shard_docs=4)
+    sc = Scanner.compile(PATTERNS, _plan(SFACache()))
+    streamed = scan_shard(sc, man, 0, stream_threshold=200)
+    assert np.array_equal(streamed, sc.scan(mix).hits)
+
+
+def test_windowed_corpus_job_census_path(tmp_path):
+    """Sliding-window manifests census through census_windows per shard and
+    aggregate bit-identically to one whole-sequence prefix-scan census."""
+    seq = synthetic_protein(600, seed=7)
+    cache = SFACache()
+    man = CorpusManifest.sliding(seq, window=48, stride=16, shard_windows=9)
+    assert man.n_shards > 1
+    job = CorpusJob(PATTERNS, man, tmp_path / "wj", _plan(cache))
+    job.run(max_shards=1)                  # interruption on the window path
+    job = CorpusJob(PATTERNS, man, tmp_path / "wj", _plan(cache))
+    job.run()
+    whole = Scanner.compile(PATTERNS, _plan(cache)).census_windows(
+        seq, 48, 16)
+    assert np.array_equal(job.aggregate().hits, whole.hits)
+    assert job.census().tobytes() == whole.counts.tobytes()
+
+
+def test_corpus_job_shard_map_distribution_matches_local(tmp_path, docs):
+    cache = SFACache()
+    man = CorpusManifest.from_docs(docs[:4], shard_docs=2)
+    local = CorpusJob(PATTERNS, man, tmp_path / "loc", _plan(cache))
+    local.run()
+    dist_plan = _plan(cache).with_(distribution="shard_map")
+    dist = CorpusJob(PATTERNS, man, tmp_path / "dist", dist_plan)
+    dist.run()
+    assert np.array_equal(local.aggregate().hits, dist.aggregate().hits)
+
+
+def test_manifest_validation():
+    with pytest.raises(ValueError):
+        CorpusManifest.from_docs([])
+    with pytest.raises(ValueError):
+        CorpusManifest.from_docs(["ACD"], shard_docs=0)
+    with pytest.raises(ValueError):
+        CorpusManifest.sliding("ACDACD", window=4, stride=3)
+    with pytest.raises(ValueError):
+        CorpusManifest.sliding("ACD", window=8)
+    man = CorpusManifest.from_docs(["ACD", "DCA", "CAD"], shard_docs=2)
+    assert man.n_shards == 2 and man.shard_range(1) == (2, 3)
+    with pytest.raises(IndexError):
+        man.shard_range(2)
+
+
+# --------------------------------------------------------------------------
+# The service facade / engine hook
+# --------------------------------------------------------------------------
+
+
+def test_scanner_service_hook_end_to_end(tmp_path, docs):
+    with Scanner.service(tmp_path / "store") as svc:
+        t = svc.submit(PATTERNS[:2], docs[:2])
+        svc.flush()
+        first = t.result()
+    with Scanner.service(tmp_path / "store") as svc2:
+        assert svc2.warm_start() >= 2
+        sc = svc2.scanner(PATTERNS[:2])
+        assert sc.construction_report.rounds == 0
+        assert np.array_equal(sc.scan(docs[:2]).hits, first.hits)
