@@ -1,0 +1,73 @@
+"""Bench-trend gate: fail loudly on a batched-construction regression.
+
+CI's bench-smoke job stashes the *committed* ``BENCH_construction.json``
+baseline, reruns the harness, and then compares the fresh file against the
+stash with this script: for every bank size ``P`` present in both, the
+fresh ``batched_speedup`` (warm batched vs sequential loop — a same-machine
+ratio, so it transfers across runner generations far better than absolute
+seconds) must be within ``--max-regression`` (default 2x) of the baseline's.
+
+Exit codes: 0 = within tolerance, 1 = regression (or nothing comparable —
+an empty comparison is itself a regression of the gate), 2 = unusable
+input files.
+
+Usage::
+
+    python benchmarks/check_trend.py BASELINE.json FRESH.json [--max-regression 2.0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _rows_by_p(path: Path) -> dict:
+    try:
+        report = json.loads(path.read_text())
+    except (OSError, ValueError) as e:
+        print(f"ERROR: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    rows = {}
+    for row in report.get("results", []):
+        if "P" in row and "batched_speedup" in row:
+            rows[int(row["P"])] = float(row["batched_speedup"])
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", type=Path)
+    ap.add_argument("fresh", type=Path)
+    ap.add_argument("--max-regression", type=float, default=2.0,
+                    help="fail when baseline_speedup / fresh_speedup exceeds "
+                         "this factor for any comparable bank size")
+    args = ap.parse_args()
+
+    base = _rows_by_p(args.baseline)
+    fresh = _rows_by_p(args.fresh)
+    shared = sorted(set(base) & set(fresh))
+    if not shared:
+        print(f"ERROR: no comparable bank sizes between {args.baseline} "
+              f"(P={sorted(base)}) and {args.fresh} (P={sorted(fresh)}) — "
+              "the trend gate compared nothing", file=sys.stderr)
+        sys.exit(1)
+
+    failed = False
+    print(f"{'P':>4} {'baseline':>10} {'fresh':>10} {'ratio':>7}")
+    for P in shared:
+        ratio = base[P] / fresh[P] if fresh[P] > 0 else float("inf")
+        verdict = "OK" if ratio <= args.max_regression else "REGRESSION"
+        print(f"{P:>4} {base[P]:>9.2f}x {fresh[P]:>9.2f}x {ratio:>6.2f}x  {verdict}")
+        if verdict != "OK":
+            failed = True
+    if failed:
+        print(f"ERROR: batched-vs-loop speedup regressed by more than "
+              f"{args.max_regression}x — see rows above", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

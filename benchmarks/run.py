@@ -20,6 +20,9 @@ Prints ``name,us_per_call,derived`` CSV. Figure mapping:
 the whole harness as a smoke job without burning minutes on full figures.
 A benchmark module that fails to *import* (missing optional dep, broken
 bench) is skipped with a warning — it costs its own suites, never the sweep.
+But a sweep where **every** module failed to import ran nothing at all:
+that exits 2, so CI's bench-smoke job cannot silently go green with zero
+benchmarks run. Suites that import but *fail at runtime* exit 1.
 """
 
 from __future__ import annotations
@@ -44,21 +47,22 @@ SUITES = [
 
 
 def _resolve_suites() -> tuple:
-    """-> (callables, import failure count). Import errors warn and skip."""
+    """-> (callables, skipped module count). Import errors warn and skip —
+    the *caller* decides whether anything at all resolved."""
     suites = []
-    failures = 0
+    skipped = 0
     for mod_name, fn_names in SUITES:
         try:
             mod = importlib.import_module(f"benchmarks.{mod_name}")
         except Exception:
-            failures += 1
+            skipped += 1
             print(f"WARNING: skipping benchmarks.{mod_name} "
                   "(import failed):", file=sys.stderr)
             traceback.print_exc()
             continue
         for fn in fn_names:
             suites.append(getattr(mod, fn))
-    return suites, failures
+    return suites, skipped
 
 
 def main() -> None:
@@ -72,7 +76,11 @@ def main() -> None:
     if args.smoke:
         _config.set_smoke(True)
 
-    suites, failures = _resolve_suites()
+    suites, skipped = _resolve_suites()
+    if not suites:
+        print(f"ERROR: all {skipped} benchmark modules failed to import; "
+              "no benchmarks were run", file=sys.stderr)
+        sys.exit(2)
 
     print("name,us_per_call,derived")
 
@@ -80,6 +88,7 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()
 
+    failures = 0
     for suite in suites:
         try:
             suite(emit)

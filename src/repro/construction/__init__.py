@@ -26,8 +26,21 @@ recompiling the same patterns performs zero construction rounds.
 ``core/sfa.py`` and ``core/sfa_jax.py`` remain as thin re-export shims.
 """
 
-from .cache import CacheInfo, SFACache, dfa_cache_key, shared_cache
-from .batched import construct_bank, construct_sfa_jax
+from .cache import (
+    CacheInfo,
+    RoundCacheInfo,
+    RoundCompileCache,
+    SFACache,
+    dfa_cache_key,
+    round_compile_cache,
+    shared_cache,
+)
+from .batched import (
+    RoundSchedule,
+    construct_bank,
+    construct_sfa_jax,
+    round_schedule,
+)
 from .single import (
     construct_sfa,
     construct_sfa_sequential,
@@ -56,6 +69,9 @@ __all__ = [
     "FingerprintCollision",
     "FingerprintScanStore",
     "HashChainStore",
+    "RoundCacheInfo",
+    "RoundCompileCache",
+    "RoundSchedule",
     "SFA",
     "SFACache",
     "SFAStats",
@@ -67,5 +83,7 @@ __all__ = [
     "construct_sfa_sequential",
     "construct_sfa_vectorized",
     "dfa_cache_key",
+    "round_compile_cache",
+    "round_schedule",
     "shared_cache",
 ]

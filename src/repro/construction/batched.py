@@ -5,24 +5,37 @@ parallelism: hundreds of PROSITE signatures, each an independent worklist
 closure. This module expresses that task parallelism as a batch dimension.
 ``construct_bank`` pads ``P`` DFAs to a common state count (the
 ``PatternBank`` self-loop/identity padding story) and advances **all P
-frontiers simultaneously** in one jitted bulk-synchronous round over stacked
-``(P, capacity, n_max)`` state buffers:
+frontiers simultaneously** in one compiled bulk-synchronous round over
+stacked ``(P, capacity, n_max)`` state buffers:
 
   1. each pattern slices a ``tile`` of unprocessed frontier states;
   2. frontier × alphabet expands in one fused gather per pattern (vmapped);
   3. candidates are fingerprinted with *per-pattern* fold constants — a
      per-pattern word mask zeroes the padding tail, so the fingerprints (and
      therefore the whole discovery sequence) are bit-identical to the
-     unpadded per-pattern engines;
+     unpadded per-pattern engines. The fingerprint stage is plan-selectable:
+     the fused-XLA clmul fold, or the ``kernels.clmul`` Pallas bank kernel
+     (bit-identical; the natural pick on a TPU runtime);
   4. membership is the sort-merge of (known ∪ candidates) fingerprints, per
      pattern, batched by ``vmap`` — one XLA program for the whole bank;
   5. per-pattern ``done`` / ``blowup`` / ``collision`` flags come back each
-     round. A collided pattern restarts alone with the next irreducible
-     polynomial (per-pattern retry: the other patterns keep their progress);
-     finished or blown patterns are *compacted out* of later rounds on the
-     host (padded to a few bucket sizes so XLA compiles O(log P) shapes, not
-     one per active-set size) — the paper's nonblocking construction: no
-     pattern waits on a straggler's barrier.
+     round. Collided patterns restart alone with the next irreducible
+     polynomial (per-pattern retry, applied as one batched scatter: the
+     other patterns keep their progress); finished or blown patterns are
+     *compacted out* of later rounds on the host — the paper's nonblocking
+     construction: no pattern waits on a straggler's barrier.
+
+**Every shape a construction can visit is known before the first round.**
+:func:`round_schedule` precomputes the capacity tiers (geometric growth
+toward the ``n^n``/budget cap) and active-set buckets (geometric shrink from
+``P``) from ``(tile, n, k, max_states, P, quantum)`` alone; the host loop
+only ever selects shapes from that schedule. Each selected shape's round —
+the *whole* round: pattern gather, frontier expansion, fingerprints,
+sort-merge, scatter-back — is one AOT-compiled executable cached in the
+process-wide :func:`~repro.construction.cache.round_compile_cache`, so a
+repeat ``construct_bank`` of a previously-seen shape performs **zero new
+traces and zero new XLA compiles** (asserted by the compile-count
+regression tests).
 
 ``distribution="shard_map"`` shards the pattern axis of every buffer across
 the devices of a mesh, one bank shard per device, with the same host loop
@@ -37,6 +50,7 @@ from __future__ import annotations
 import functools
 import math
 import time
+from dataclasses import dataclass
 from typing import Sequence
 
 import jax
@@ -56,6 +70,7 @@ from ..core.fingerprint import (
     pack_states_u32,
 )
 from ..core.multipattern import PatternBank
+from .cache import round_compile_cache
 from .types import (
     BankConstructionResult,
     BankStats,
@@ -67,22 +82,28 @@ from .types import (
 
 _U32MAX = jnp.uint32(0xFFFFFFFF)
 
+#: Fingerprint-stage backends of the batched round. ``"auto"`` resolves to
+#: ``"pallas"`` on a real TPU runtime and ``"xla"`` elsewhere (interpret-mode
+#: Pallas would dominate a CPU round).
+FINGERPRINT_BACKENDS = ("auto", "xla", "pallas")
+
+#: Capacity tiers grow by this factor between schedule entries. Fixed (not a
+#: knob): fewer, coarser tiers mean fewer compiled shapes, and results are
+#: capacity-invariant anyway (pinned by the capacity-growth bit-exactness
+#: test).
+CAPACITY_GROWTH = 4
+
 
 # --------------------------------------------------------------------------
-# The jitted round (one pattern; vmapped over the bank axis)
+# The round, in stages (each stage batched over the pattern axis)
 # --------------------------------------------------------------------------
 
 
-def _masked_fingerprint(states, weights, word_mask, limbs):
-    """Fingerprint padded state vectors with per-pattern constants.
-
-    ``word_mask`` zeroes the packed words of the identity padding tail, so
-    the result equals the fingerprint of the *unpadded* vector — the bit
-    that keeps batched construction bit-identical to the per-pattern
-    engines. ``limbs`` are the Barrett constants as traced u32 scalars
-    [p_hi, p_lo, mu_hi, mu_lo].
-    """
-    words = pack_states_u32(states) & word_mask[None, :]
+def _fold_words(words, weights, limbs):
+    """Fold + Barrett-reduce packed (B, W) words with one pattern's
+    constants -> (B, 2) uint32 [hi, lo]. The reference fingerprint stage
+    (fused XLA clmul); ``kernels.clmul.fingerprint_bank_pallas`` computes
+    the identical function as a Pallas kernel."""
     wh = weights[: words.shape[-1], 0]
     wl = weights[: words.shape[-1], 1]
     p_lo_h, p_lo_l = clmul32(words, wl)
@@ -103,21 +124,29 @@ def _masked_fingerprint(states, weights, word_mask, limbs):
     return jnp.stack([l1 ^ q1, l0 ^ q0], axis=-1)
 
 
-def _pattern_round(
+def _masked_fingerprint(states, weights, word_mask, limbs):
+    """Fingerprint padded state vectors with per-pattern constants.
+
+    ``word_mask`` zeroes the packed words of the identity padding tail, so
+    the result equals the fingerprint of the *unpadded* vector — the bit
+    that keeps batched construction bit-identical to the per-pattern
+    engines. ``limbs`` are the Barrett constants as traced u32 scalars
+    [p_hi, p_lo, mu_hi, mu_lo].
+    """
+    words = pack_states_u32(states) & word_mask[None, :]
+    return _fold_words(words, weights, limbs)
+
+
+def _expand(
     table,            # (n, k) int32 — padded transition table
     states_buf,       # (C, n) int32
-    fp_hi, fp_lo,     # (C,) uint32
-    delta_buf,        # (C, k) int32
     n_states,         # () int32
     frontier_lo,      # () int32
     active,           # () bool — this pattern still advancing
-    weights,          # (W, 2) uint32 per-pattern fold constants
-    limbs,            # (4,) uint32 per-pattern Barrett constants
-    word_mask,        # (W,) uint32 padding mask
-    *, tile: int, n: int, k: int, capacity: int,
+    *, tile: int, n: int, k: int,
 ):
-    """One bulk-synchronous frontier round for one (padded) pattern."""
-    # ---- 1/2: slice frontier tile, fused expansion -------------------------
+    """Stages 1/2: slice the frontier tile, expand frontier × alphabet in
+    one fused gather. -> (cand (T·k, n), cand_valid (T·k,))."""
     ft = jax.lax.dynamic_slice(states_buf, (frontier_lo, 0), (tile, n))
     row_ids = frontier_lo + jnp.arange(tile, dtype=jnp.int32)
     row_valid = (row_ids < n_states) & active            # (T,)
@@ -125,12 +154,23 @@ def _pattern_round(
     cand = table[ft]                                     # (T, n, k)
     cand = jnp.swapaxes(cand, 1, 2).reshape(tile * k, n)  # row-major (f, a)
     cand_valid = jnp.repeat(row_valid, k)                # (T·k,)
+    return cand, cand_valid
 
-    # ---- 3: fingerprint all candidates (per-pattern constants) --------------
-    fp = _masked_fingerprint(cand, weights, word_mask, limbs)
-    c_hi, c_lo = fp[:, 0], fp[:, 1]
 
-    # ---- 4: sort-merge membership -------------------------------------------
+def _merge(
+    states_buf,       # (C, n) int32
+    fp_hi, fp_lo,     # (C,) uint32
+    delta_buf,        # (C, k) int32
+    n_states,         # () int32
+    frontier_lo,      # () int32
+    active,           # () bool
+    cand,             # (T·k, n) int32
+    cand_valid,       # (T·k,) bool
+    c_hi, c_lo,       # (T·k,) uint32 candidate fingerprints
+    *, tile: int, n: int, k: int, capacity: int,
+):
+    """Stages 4/5: sort-merge membership, exactness check, state append and
+    δ_s rows — one pattern; vmapped over the bank axis."""
     C = capacity
     total = C + tile * k
     known_valid = jnp.arange(C, dtype=jnp.int32) < n_states
@@ -174,7 +214,7 @@ def _pattern_round(
     head_new_id = new_id_at_pos[head_pos]
     id_sorted = jnp.where(head_is_known, head_pay, head_new_id)
 
-    # ---- 5: exactness check (candidates vs run-head vectors) ----------------
+    # Exactness check (candidates vs run-head vectors).
     cand_rows = s_isc == 1
     ref_known = states_buf[jnp.clip(head_pay, 0, C - 1)]
     ref_cand = cand[jnp.clip(head_pay, 0, tile * k - 1)]
@@ -183,7 +223,7 @@ def _pattern_round(
     mismatch = jnp.any(ref_vec != own_vec, axis=1) & cand_rows & s_valid
     collision = jnp.any(mismatch)
 
-    # ---- append new states ---------------------------------------------------
+    # Append new states.
     num_new = jnp.sum(is_new_head.astype(jnp.int32))
     tgt = jnp.where(is_new_head, new_id_at_pos, C)       # C = out-of-range drop
     src_vec = cand[jnp.clip(s_pay, 0, tile * k - 1)]
@@ -191,9 +231,8 @@ def _pattern_round(
     fp_hi = fp_hi.at[tgt].set(s_hi, mode="drop")
     fp_lo = fp_lo.at[tgt].set(s_lo, mode="drop")
 
-    # ---- write δ_s rows for the tile -----------------------------------------
-    # Candidate (f, a) order is row-major, so candidate ids scattered back to
-    # original order reshape straight into delta rows.
+    # Write δ_s rows for the tile: candidate (f, a) order is row-major, so
+    # candidate ids scattered back to original order reshape into delta rows.
     ids_orig = jnp.zeros(tile * k, jnp.int32).at[
         jnp.where(cand_rows, s_pay, tile * k)
     ].set(id_sorted, mode="drop")
@@ -211,42 +250,252 @@ def _pattern_round(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "n", "k", "capacity"))
-def _bank_round(tables, states, fp_hi, fp_lo, delta, n_states, frontier,
-                active, weights, limbs, word_mask,
-                *, tile: int, n: int, k: int, capacity: int):
-    """All patterns advance one tile: vmap of :func:`_pattern_round`."""
-    step = functools.partial(
-        _pattern_round, tile=tile, n=n, k=k, capacity=capacity
+def _bucket_round(tables, states, fp_hi, fp_lo, delta, n_states, frontier,
+                  active, weights, limbs, word_masks,
+                  *, tile: int, n: int, k: int, capacity: int,
+                  fp_backend: str, interpret: bool):
+    """One bulk-synchronous round over a bucket of patterns: expand, then
+    fingerprint (selected backend), then sort-merge — stages 1–5 above,
+    batched over the bucket axis."""
+    expand = functools.partial(_expand, tile=tile, n=n, k=k)
+    cand, cand_valid = jax.vmap(expand)(
+        tables, states, n_states, frontier, active
     )
-    return jax.vmap(step)(tables, states, fp_hi, fp_lo, delta, n_states,
-                          frontier, active, weights, limbs, word_mask)
+    words = pack_states_u32(cand) & word_masks[:, None, :]   # (B, T·k, W)
+    if fp_backend == "pallas":
+        from ..kernels import ops as kernel_ops
 
-
-@functools.lru_cache(maxsize=None)
-def _sharded_bank_round(mesh, pattern_axis: str, tile: int, n: int, k: int,
-                        capacity: int):
-    """shard_map wrapper of the vmapped round: every buffer's pattern axis
-    shards over ``pattern_axis``; each device closes its bank shard."""
-
-    def local(*args):
-        step = functools.partial(
-            _pattern_round, tile=tile, n=n, k=k, capacity=capacity
+        fp = kernel_ops.fingerprint_bank_stacked(
+            words, weights, limbs, interpret=interpret
         )
-        return jax.vmap(step)(*args)
+    else:
+        fp = jax.vmap(_fold_words)(words, weights, limbs)
+    merge = functools.partial(_merge, tile=tile, n=n, k=k, capacity=capacity)
+    return jax.vmap(merge)(
+        states, fp_hi, fp_lo, delta, n_states, frontier, active,
+        cand, cand_valid, fp[..., 0], fp[..., 1],
+    )
 
-    @jax.jit
-    def rounds(*args):
-        fn = compat_shard_map(
-            local,
-            mesh=mesh,
-            in_specs=tuple(PSpec(pattern_axis) for _ in range(11)),
-            out_specs=tuple(PSpec(pattern_axis) for _ in range(7)),
-            check_vma=False,
+
+# --------------------------------------------------------------------------
+# Compiled round steps (AOT, cached process-wide)
+# --------------------------------------------------------------------------
+
+
+def _make_local_step(*, tile, n, k, capacity, P, bucket, fp_backend,
+                     interpret):
+    """The whole local round as ONE function of the full-size bank buffers:
+    gather the active bucket, run the round, scatter the bucket back. AOT
+    compiling *this* (rather than only the vmapped round) keeps the host
+    loop free of per-round eager gather/scatter dispatches — those small ops
+    were half the cold-start compile wall."""
+
+    def step(tables, states, fp_hi, fp_lo, delta, n_states, frontier,
+             weights, limbs, word_masks, idx, act):
+        def take(a):
+            return jnp.take(a, idx, axis=0)
+
+        o_states, o_fp_hi, o_fp_lo, o_delta, o_n, o_frontier, o_coll = (
+            _bucket_round(
+                take(tables), take(states), take(fp_hi), take(fp_lo),
+                take(delta), take(n_states), take(frontier), act,
+                take(weights), take(limbs), take(word_masks),
+                tile=tile, n=n, k=k, capacity=capacity,
+                fp_backend=fp_backend, interpret=interpret,
+            )
         )
-        return fn(*args)
+        # ``idx`` pads the bucket tail with duplicates of its first entry;
+        # route inactive rows out of range so the scatter targets are unique
+        # and padding never writes.
+        sidx = jnp.where(act, idx, jnp.int32(P))
+        return (
+            states.at[sidx].set(o_states, mode="drop"),
+            fp_hi.at[sidx].set(o_fp_hi, mode="drop"),
+            fp_lo.at[sidx].set(o_fp_lo, mode="drop"),
+            delta.at[sidx].set(o_delta, mode="drop"),
+            n_states.at[sidx].set(o_n, mode="drop"),
+            frontier.at[sidx].set(o_frontier, mode="drop"),
+            o_coll & act,
+        )
 
-    return rounds
+    return step
+
+
+def _local_step_exe(*, tile, n, k, capacity, P, bucket, fp_backend,
+                    interpret):
+    """AOT executable of the fused local step for one schedule shape,
+    through the process-wide :func:`round_compile_cache`."""
+    key = ("local-step", tile, n, k, capacity, P, bucket, fp_backend,
+           interpret)
+
+    def build():
+        step = _make_local_step(
+            tile=tile, n=n, k=k, capacity=capacity, P=P, bucket=bucket,
+            fp_backend=fp_backend, interpret=interpret,
+        )
+        W = (n + 1) // 2
+        s = jax.ShapeDtypeStruct
+        i32, u32 = jnp.int32, jnp.uint32
+        avals = (
+            s((P, n, k), i32),            # tables
+            s((P, capacity, n), i32),     # states
+            s((P, capacity), u32),        # fp_hi
+            s((P, capacity), u32),        # fp_lo
+            s((P, capacity, k), i32),     # delta
+            s((P,), i32),                 # n_states
+            s((P,), i32),                 # frontier
+            s((P, W, 2), u32),            # weights
+            s((P, 4), u32),               # limbs
+            s((P, W), u32),               # word masks
+            s((bucket,), i32),            # idx
+            s((bucket,), jnp.bool_),      # act
+        )
+        return jax.jit(step).lower(*avals).compile()
+
+    return round_compile_cache().get(key, build)
+
+
+def _sharded_round_exe(mesh, pattern_axis: str, *, tile, n, k, capacity,
+                       fp_backend, interpret):
+    """shard_map wrapper of the bucket round: every buffer's pattern axis
+    shards over ``pattern_axis``; each device closes its bank shard. Cached
+    as a jitted callable (jit's own cache keys the per-bucket shapes), so
+    repeat constructions reuse both the wrapper and its compiled shapes."""
+    key = ("shard-round", mesh, pattern_axis, tile, n, k, capacity,
+           fp_backend, interpret)
+
+    def build():
+        def local(*args):
+            return _bucket_round(
+                *args, tile=tile, n=n, k=k, capacity=capacity,
+                fp_backend=fp_backend, interpret=interpret,
+            )
+
+        @jax.jit
+        def rounds(*args):
+            fn = compat_shard_map(
+                local,
+                mesh=mesh,
+                in_specs=tuple(PSpec(pattern_axis) for _ in range(11)),
+                out_specs=tuple(PSpec(pattern_axis) for _ in range(7)),
+                check_vma=False,
+            )
+            return fn(*args)
+
+        return rounds
+
+    return round_compile_cache().get(key, build)
+
+
+# --------------------------------------------------------------------------
+# The fixed shape schedule
+# --------------------------------------------------------------------------
+
+
+def _state_cap(n: int, max_states: int) -> int:
+    """min(max_states, n^n): the SFA can never exceed n^n mappings, so small
+    automata get small buffers even under a huge budget."""
+    if n <= 1:
+        return 1
+    if n * math.log2(n) <= 40:
+        return min(max_states, n ** n)
+    return max_states
+
+
+def _bucket_sizes(P: int, quantum: int, growth: int = 4) -> list:
+    """Active-set padding buckets: shrinking by ``growth`` from P, rounded up
+    to multiples of ``quantum`` (the mesh's pattern-axis size) — O(log P)
+    compiled shapes."""
+
+    def up(x):
+        return max(quantum, ((x + quantum - 1) // quantum) * quantum)
+
+    sizes, b = [], up(P)
+    while True:
+        sizes.append(b)
+        if b == up(1):
+            break
+        b = up((b + growth - 1) // growth)
+    return sorted(set(sizes))
+
+
+@dataclass(frozen=True)
+class RoundSchedule:
+    """Every (capacity, bucket) round shape one bank construction may visit,
+    precomputed from static quantities — no runtime value can produce a
+    shape outside this set, which is what makes the AOT compile cache's
+    "zero new traces on repeat" guarantee possible.
+
+    ``capacities`` are the buffer-row tiers (ascending, last = full cap);
+    ``buckets`` the active-set padding sizes (ascending, ``quantum``-rounded
+    for the mesh's pattern axis).
+    """
+
+    tile: int
+    n: int
+    k: int
+    P: int
+    quantum: int
+    capacities: tuple
+    buckets: tuple
+
+    def capacity_for(self, worst: int) -> int:
+        """Smallest tier holding ``worst`` rows (or the full cap)."""
+        for c in self.capacities:
+            if c >= worst:
+                return c
+        return self.capacities[-1]
+
+    def bucket_for(self, n_active: int) -> int:
+        """Smallest bucket holding ``n_active`` patterns."""
+        for b in self.buckets:
+            if b >= n_active:
+                return b
+        return self.buckets[-1]
+
+    @property
+    def shapes(self) -> tuple:
+        """The full (capacity, bucket) cross product — the upper bound on
+        compiled round programs for this bank."""
+        return tuple((c, b) for c in self.capacities for b in self.buckets)
+
+
+def round_schedule(*, tile: int, n: int, k: int, max_states: int, P: int,
+                   quantum: int = 1,
+                   bucket_growth: int = 4) -> RoundSchedule:
+    """Precompute the capacity/bucket schedule of a bank construction.
+
+    Capacity starts small (a 200k-state budget must not mean 200k-row sorts
+    for a bank that closes in a few hundred states) and grows by
+    ``CAPACITY_GROWTH`` toward ``n^n``/budget; buckets shrink by
+    ``bucket_growth`` from ``P``. The host loop's growth guard keeps
+    ``capacity >= n_states + tile·k`` for every runnable pattern, so a round
+    can never drop an append of a pattern that still fits the cap.
+    """
+    if bucket_growth < 2:
+        raise ValueError(f"bucket_growth must be >= 2, got {bucket_growth}")
+    full_cap = _state_cap(n, max_states) + tile
+    caps = [min(full_cap, max(1024, 2 * (tile * k + tile)))]
+    while caps[-1] < full_cap:
+        caps.append(min(full_cap, caps[-1] * CAPACITY_GROWTH))
+    return RoundSchedule(
+        tile=tile, n=n, k=k, P=P, quantum=quantum,
+        capacities=tuple(caps),
+        buckets=tuple(_bucket_sizes(P, quantum, bucket_growth)),
+    )
+
+
+def _resolve_fp_backend(backend: str) -> str:
+    if backend not in FINGERPRINT_BACKENDS:
+        raise ValueError(
+            f"fingerprint_backend must be one of {FINGERPRINT_BACKENDS}, "
+            f"got {backend!r}"
+        )
+    if backend == "auto":
+        from ..kernels import ops as kernel_ops
+
+        return "xla" if kernel_ops._default_interpret() else "pallas"
+    return backend
 
 
 # --------------------------------------------------------------------------
@@ -262,32 +511,6 @@ def _word_mask(n_true: int, n_pad: int) -> np.ndarray:
     if n_true % 2:
         m[n_true // 2] = np.uint32(0x0000FFFF)
     return m
-
-
-def _state_cap(n: int, max_states: int) -> int:
-    """min(max_states, n^n): the SFA can never exceed n^n mappings, so small
-    automata get small buffers even under a huge budget."""
-    if n <= 1:
-        return 1
-    if n * math.log2(n) <= 40:
-        return min(max_states, n ** n)
-    return max_states
-
-
-def _bucket_sizes(P: int, quantum: int) -> list:
-    """Active-set padding buckets: halving from P, rounded up to multiples of
-    ``quantum`` (the mesh's pattern-axis size) — O(log P) compiled shapes."""
-
-    def up(x):
-        return max(quantum, ((x + quantum - 1) // quantum) * quantum)
-
-    sizes, b = [], up(P)
-    while True:
-        sizes.append(b)
-        if b == up(1):
-            break
-        b = up((b + 1) // 2)
-    return sorted(set(sizes))
 
 
 def _default_weight_fn(pattern: int, attempt: int, n_words: int,
@@ -320,12 +543,14 @@ def construct_bank(
     mesh=None,
     pattern_axis: str = "pattern",
     on_blowup: str = "skip",
+    fingerprint_backend: str = "auto",
+    bucket_growth: int = 4,
     _weight_fn=None,
 ) -> BankConstructionResult:
     """Construct the exact SFA of every pattern in one batched closure.
 
-    ``method="batched"`` runs the jitted bulk-synchronous bank rounds above;
-    ``method="loop"`` is the sequential-loop baseline (per-pattern
+    ``method="batched"`` runs the compiled bulk-synchronous bank rounds
+    above; ``method="loop"`` is the sequential-loop baseline (per-pattern
     :func:`~repro.construction.construct_sfa` with ``engine=``), kept for
     benchmarking and as the cheap path when only one pattern misses the
     cache. Both return bit-identical SFAs.
@@ -338,6 +563,13 @@ def construct_bank(
     axis of every buffer over ``mesh`` (default: a fresh 1-axis mesh over
     all devices named ``pattern_axis``).
 
+    ``fingerprint_backend`` picks the round's fingerprint stage: ``"xla"``
+    (fused clmul fold), ``"pallas"`` (the ``kernels.ops.fingerprint_bank``
+    Rabin kernel — bit-identical), or ``"auto"`` (pallas on a TPU runtime,
+    xla elsewhere). ``bucket_growth`` sets the active-set bucket shrink
+    factor of the shape schedule (see :func:`round_schedule`): larger means
+    fewer compiled shapes, at the cost of more padding in mid-size rounds.
+
     ``_weight_fn(pattern, attempt, n_words, consts)`` is a test seam: it
     supplies the fingerprint fold constants and lets tests force a
     fingerprint collision for one pattern's first attempt.
@@ -349,6 +581,9 @@ def construct_bank(
         raise ValueError("empty pattern bank")
     if method not in ("batched", "loop"):
         raise ValueError(f"method must be 'batched' or 'loop', got {method!r}")
+    fp_backend = _resolve_fp_backend(fingerprint_backend)
+    if bucket_growth < 2:
+        raise ValueError(f"bucket_growth must be >= 2, got {bucket_growth}")
 
     if method == "loop":
         result = _construct_loop(
@@ -359,7 +594,8 @@ def construct_bank(
         result = _construct_batched(
             dfas, max_states=max_states, tile=tile, max_retries=max_retries,
             poly_index=poly_index, distribution=distribution, mesh=mesh,
-            pattern_axis=pattern_axis,
+            pattern_axis=pattern_axis, fp_backend=fp_backend,
+            bucket_growth=bucket_growth,
             weight_fn=_weight_fn or _default_weight_fn,
         )
     if on_blowup == "raise":
@@ -376,6 +612,7 @@ def _construct_loop(dfas, *, max_states, max_retries, engine, poly_index=0):
         method="loop",
         pattern_rounds=np.zeros(P, np.int64),
         retries=np.zeros(P, np.int64),
+        pattern_candidates=np.zeros(P, np.int64),
     )
     sfas: list = [None] * P
     blown = np.zeros(P, dtype=bool)
@@ -391,26 +628,21 @@ def _construct_loop(dfas, *, max_states, max_retries, engine, poly_index=0):
         sfas[p] = sfa
         stats.rounds += sfa.stats.rounds
         stats.pattern_rounds[p] = sfa.stats.rounds
-        stats.candidates += sfa.stats.candidates
+        stats.pattern_candidates[p] = sfa.stats.candidates
+    stats.candidates = int(stats.pattern_candidates.sum())
     stats.wall_time_s = time.perf_counter() - t0
     return BankConstructionResult(sfas=sfas, blown=blown, stats=stats)
 
 
 def _construct_batched(dfas, *, max_states, tile, max_retries, poly_index,
-                       distribution, mesh, pattern_axis, weight_fn):
+                       distribution, mesh, pattern_axis, fp_backend,
+                       bucket_growth, weight_fn):
     t0 = time.perf_counter()
     bank = PatternBank.from_dfas(dfas)  # validates the shared alphabet
     P, n, k = bank.n_patterns, bank.n_max, bank.n_symbols
     if n >= 1 << 16:
         raise ValueError("batched engine packs 16-bit state ids")
     W = (n + 1) // 2
-    # Buffers grow geometrically toward the full cap rather than starting
-    # there: a 200k-state budget must not mean 200k-row sorts for a bank
-    # that closes in a few hundred states. The growth guard below keeps
-    # ``capacity >= n_states + tile·k`` for every runnable pattern, so a
-    # round can never drop an append of a pattern that still fits the cap.
-    full_cap = _state_cap(n, max_states) + tile
-    capacity = min(full_cap, max(1024, 2 * (tile * k + tile)))
 
     if distribution == "shard_map":
         if mesh is None:
@@ -423,20 +655,26 @@ def _construct_batched(dfas, *, max_states, tile, max_retries, poly_index,
             f"distribution must be 'local' or 'shard_map', got {distribution!r}"
         )
 
-    def make_round_fn():
-        if distribution == "shard_map":
-            return _sharded_bank_round(mesh, pattern_axis, tile, n, k, capacity)
-        return functools.partial(
-            _bank_round, tile=tile, n=n, k=k, capacity=capacity
-        )
+    # The interpret flag only shapes the pallas stage; pin it for xla so the
+    # compile-cache key does not split on an irrelevant axis.
+    if fp_backend == "pallas":
+        from ..kernels import ops as kernel_ops
 
-    round_fn = make_round_fn()
-    buckets = _bucket_sizes(P, quantum)
+        interpret = kernel_ops._default_interpret()
+    else:
+        interpret = False
+
+    sched = round_schedule(
+        tile=tile, n=n, k=k, max_states=max_states, P=P, quantum=quantum,
+        bucket_growth=bucket_growth,
+    )
+    capacity = sched.capacities[0]
 
     stats = BankStats(
         method="batched",
         pattern_rounds=np.zeros(P, np.int64),
         retries=np.zeros(P, np.int64),
+        pattern_candidates=np.zeros(P, np.int64),
     )
 
     # -- per-pattern fingerprint constants + initial buffers ------------------
@@ -480,7 +718,6 @@ def _construct_batched(dfas, *, max_states, tile, max_retries, poly_index,
     n_states_h = np.ones(P, dtype=np.int64)
     frontier_h = np.zeros(P, dtype=np.int64)
     blown = np.zeros(P, dtype=bool)
-    cand_h = np.zeros(P, dtype=np.int64)
 
     # -- the nonblocking host loop -------------------------------------------
     while True:
@@ -489,8 +726,8 @@ def _construct_batched(dfas, *, max_states, tile, max_retries, poly_index,
         if act.size == 0:
             break
         worst = int(n_states_h[act].max()) + tile * k
-        if worst > capacity and capacity < full_cap:
-            grown = min(full_cap, max(capacity * 4, worst))
+        if worst > capacity and capacity < sched.capacities[-1]:
+            grown = sched.capacity_for(worst)
             pad = grown - capacity
             states = jnp.pad(states, ((0, 0), (0, pad), (0, 0)))
             fp_hi = jnp.pad(fp_hi, ((0, 0), (0, pad)),
@@ -499,66 +736,92 @@ def _construct_batched(dfas, *, max_states, tile, max_retries, poly_index,
                             constant_values=np.uint32(0xFFFFFFFF))
             delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
             capacity = grown
-            round_fn = make_round_fn()
-        bucket = next(b for b in buckets if b >= act.size)
-        idx = np.concatenate(
-            [act, np.full(bucket - act.size, act[0], dtype=act.dtype)]
-        )
-        act_mask = np.zeros(bucket, dtype=bool)
-        act_mask[: act.size] = True
-        jidx = jnp.asarray(idx)
-
-        cand_h[act] += np.minimum(n_states_h[act] - frontier_h[act], tile) * k
-        stats.candidates += int(
-            np.sum(np.minimum(n_states_h[act] - frontier_h[act], tile)) * k
-        )
-        out = round_fn(
-            tables[jidx], states[jidx], fp_hi[jidx], fp_lo[jidx],
-            delta[jidx], n_states[jidx], frontier[jidx],
-            jnp.asarray(act_mask), weights[jidx], limbs[jidx], masks[jidx],
-        )
-        o_states, o_fp_hi, o_fp_lo, o_delta, o_n, o_frontier, o_coll = out
-        live = jnp.asarray(act)
-        states = states.at[live].set(o_states[: act.size])
-        fp_hi = fp_hi.at[live].set(o_fp_hi[: act.size])
-        fp_lo = fp_lo.at[live].set(o_fp_lo[: act.size])
-        delta = delta.at[live].set(o_delta[: act.size])
-        n_states = n_states.at[live].set(o_n[: act.size])
-        frontier = frontier.at[live].set(o_frontier[: act.size])
+        bucket = sched.bucket_for(act.size)
+        idx_np = np.full(bucket, act[0], dtype=np.int32)
+        idx_np[: act.size] = act
+        act_np = np.zeros(bucket, dtype=bool)
+        act_np[: act.size] = True
+        jidx = jnp.asarray(idx_np)
+        jact = jnp.asarray(act_np)
 
         stats.rounds += 1
         stats.pattern_rounds[act] += 1
-        n_states_h[act] = np.asarray(o_n[: act.size], dtype=np.int64)
-        frontier_h[act] = np.asarray(o_frontier[: act.size], dtype=np.int64)
-        collided = act[np.asarray(o_coll[: act.size])]
+        stats.pattern_candidates[act] += (
+            np.minimum(n_states_h[act] - frontier_h[act], tile) * k
+        )
 
-        # Per-pattern polynomial retry: only the collided pattern restarts.
-        for p in collided:
-            attempts[p] += 1
-            stats.retries[p] += 1
-            if attempts[p] >= max_retries:
-                raise FingerprintCollision(
-                    f"pattern {p}: {max_retries} polynomials all collided"
-                )
-            c = consts_of(p)
-            weights_np[p] = weight_fn(int(p), int(attempts[p]), W, c)
-            limbs_np[p] = _limbs_of(c)
-            fp0 = fingerprint_states_np(
-                np.arange(int(n_true[p]), dtype=np.int32)[None], c
-            )[0]
-            weights = weights.at[p].set(jnp.asarray(weights_np[p]))
-            limbs = limbs.at[p].set(jnp.asarray(limbs_np[p]))
-            fp_hi = fp_hi.at[p, 0].set(jnp.uint32(fp0[0]))
-            fp_lo = fp_lo.at[p, 0].set(jnp.uint32(fp0[1]))
-            n_states = n_states.at[p].set(1)
-            frontier = frontier.at[p].set(0)
-            n_states_h[p] = 1
-            frontier_h[p] = 0
+        if distribution == "shard_map":
+            round_fn = _sharded_round_exe(
+                mesh, pattern_axis, tile=tile, n=n, k=k, capacity=capacity,
+                fp_backend=fp_backend, interpret=interpret,
+            )
+            out = round_fn(
+                tables[jidx], states[jidx], fp_hi[jidx], fp_lo[jidx],
+                delta[jidx], n_states[jidx], frontier[jidx],
+                jact, weights[jidx], limbs[jidx], masks[jidx],
+            )
+            o_states, o_fp_hi, o_fp_lo, o_delta, o_n, o_frontier, o_coll = out
+            live = jnp.asarray(act)
+            states = states.at[live].set(o_states[: act.size])
+            fp_hi = fp_hi.at[live].set(o_fp_hi[: act.size])
+            fp_lo = fp_lo.at[live].set(o_fp_lo[: act.size])
+            delta = delta.at[live].set(o_delta[: act.size])
+            n_states = n_states.at[live].set(o_n[: act.size])
+            frontier = frontier.at[live].set(o_frontier[: act.size])
+            n_states_h[act] = np.asarray(o_n[: act.size], dtype=np.int64)
+            frontier_h[act] = np.asarray(o_frontier[: act.size], dtype=np.int64)
+            coll_np = np.asarray(o_coll[: act.size])
+        else:
+            step = _local_step_exe(
+                tile=tile, n=n, k=k, capacity=capacity, P=P, bucket=bucket,
+                fp_backend=fp_backend, interpret=interpret,
+            )
+            states, fp_hi, fp_lo, delta, n_states, frontier, o_coll = step(
+                tables, states, fp_hi, fp_lo, delta, n_states, frontier,
+                weights, limbs, masks, jidx, jact,
+            )
+            n_states_h = np.asarray(n_states).astype(np.int64)
+            frontier_h = np.asarray(frontier).astype(np.int64)
+            coll_np = np.asarray(o_coll)[: act.size]
+
+        collided = act[coll_np]
+        # Per-pattern polynomial retry, applied as ONE batched scatter per
+        # buffer: only collided patterns restart; the others keep progress.
+        if collided.size:
+            new_w = np.empty((collided.size, W, 2), dtype=np.uint32)
+            new_l = np.empty((collided.size, 4), dtype=np.uint32)
+            new_fp = np.empty((collided.size, 2), dtype=np.uint32)
+            for j, p in enumerate(collided):
+                attempts[p] += 1
+                stats.retries[p] += 1
+                if attempts[p] >= max_retries:
+                    raise FingerprintCollision(
+                        f"pattern {p}: {max_retries} polynomials all collided"
+                    )
+                c = consts_of(p)
+                new_w[j] = weight_fn(int(p), int(attempts[p]), W, c)
+                new_l[j] = _limbs_of(c)
+                new_fp[j] = fingerprint_states_np(
+                    np.arange(int(n_true[p]), dtype=np.int32)[None], c
+                )[0]
+                weights_np[p] = new_w[j]
+                limbs_np[p] = new_l[j]
+            cidx = jnp.asarray(collided.astype(np.int32))
+            weights = weights.at[cidx].set(jnp.asarray(new_w))
+            limbs = limbs.at[cidx].set(jnp.asarray(new_l))
+            fp_hi = fp_hi.at[cidx, 0].set(jnp.asarray(new_fp[:, 0]))
+            fp_lo = fp_lo.at[cidx, 0].set(jnp.asarray(new_fp[:, 1]))
+            n_states = n_states.at[cidx].set(jnp.int32(1))
+            frontier = frontier.at[cidx].set(jnp.int32(0))
+            n_states_h[collided] = 1
+            frontier_h[collided] = 0
 
         blown |= n_states_h > max_states
 
     # -- crop per-pattern results ---------------------------------------------
     stats.wall_time_s = time.perf_counter() - t0
+    stats.candidates = int(stats.pattern_candidates.sum())
+    total_rounds = int(stats.pattern_rounds.sum())
     states_np = np.asarray(states)
     delta_np = np.asarray(delta)
     fp_hi_np = np.asarray(fp_hi)
@@ -568,11 +831,17 @@ def _construct_batched(dfas, *, max_states, tile, max_retries, poly_index,
         if blown[p]:
             continue
         S = int(n_states_h[p])
+        # Rounds-weighted share: the bank's wall belongs to BankStats; a
+        # pattern reports only the fraction of rounds it was active in.
+        share = (
+            stats.wall_time_s * int(stats.pattern_rounds[p]) / total_rounds
+            if total_rounds else 0.0
+        )
         pstats = SFAStats(
             engine="batched",
             rounds=int(stats.pattern_rounds[p]),
-            candidates=int(cand_h[p]),
-            wall_time_s=stats.wall_time_s,
+            candidates=int(stats.pattern_candidates[p]),
+            wall_time_s=share,
         )
         fps = np.stack([fp_hi_np[p, :S], fp_lo_np[p, :S]], axis=1).astype(
             np.uint32

@@ -31,6 +31,12 @@ through, so the cache persists across processes: a *fresh* ``SFACache``
 pointed at the same store directory answers previously-seen patterns with
 zero construction rounds. :meth:`SFACache.preload` bulk-loads the backing
 tier for warm starts.
+
+This module also holds the cache for the *other* expensive artifact of
+construction: :class:`RoundCompileCache` keeps the AOT-compiled batched
+round closures (keyed by round shape), so repeat same-shape
+``construct_bank`` calls perform zero new XLA compiles even when the SFA
+cache itself missed (eviction, cache="off", a different budget).
 """
 
 from __future__ import annotations
@@ -272,3 +278,94 @@ def shared_cache() -> SFACache:
     if _SHARED is None:
         _SHARED = SFACache()
     return _SHARED
+
+
+# --------------------------------------------------------------------------
+# Compiled-round cache (the other half of "recompiling is free")
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class RoundCacheInfo:
+    """Counters of :class:`RoundCompileCache`. ``lowerings`` is the number of
+    trace+lower+compile passes actually performed — the compile-count
+    regression tests assert its delta is zero across a repeat same-shape
+    ``construct_bank``."""
+
+    lowerings: int = 0
+    hits: int = 0
+    evictions: int = 0
+
+    def snapshot(self) -> dict:
+        return {
+            "lowerings": self.lowerings,
+            "hits": self.hits,
+            "evictions": self.evictions,
+        }
+
+
+class RoundCompileCache:
+    """Process-wide LRU of compiled bank-round closures.
+
+    :class:`SFACache` makes re-*constructing* a seen pattern free; this cache
+    makes re-*compiling* a seen round shape free. Batched construction visits
+    a precomputed schedule of ``(capacity, bucket)`` shapes (see
+    :func:`repro.construction.batched.round_schedule`); each visited shape's
+    fused round step is AOT-lowered exactly once per process and keyed by the
+    full shape tuple ``(tile, n, k, capacity, P, bucket, fingerprint backend,
+    interpret, distribution)``. A hit replays the stored executable with zero
+    new traces, so a second bank of the same shape — or the same bank after
+    SFA-cache eviction — performs zero new XLA compiles.
+
+    Entries are executables (``jax.jit(step).lower(...).compile()`` results
+    for the local path; jitted shard_map wrappers for the distributed path,
+    which keep per-bucket shapes in jit's own cache). Eviction is LRU over an
+    entry count — executables hold device programs, not SFA payloads, so a
+    count lid is the right currency.
+    """
+
+    def __init__(self, max_entries: int = 512):
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.max_entries = max_entries
+        self.info = RoundCacheInfo()
+        self._entries: OrderedDict = OrderedDict()
+        self._lock = threading.RLock()
+
+    def get(self, key, build):
+        """The executable for ``key``, building (and counting a lowering)
+        on a miss. ``build`` runs outside the lock — compiles are slow and a
+        racing duplicate build is benign (last writer wins)."""
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is not None:
+                self.info.hits += 1
+                self._entries.move_to_end(key)
+                return ent
+        ent = build()
+        with self._lock:
+            self._entries[key] = ent
+            self._entries.move_to_end(key)
+            self.info.lowerings += 1
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+                self.info.evictions += 1
+        return ent
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+
+_SHARED_ROUNDS: RoundCompileCache | None = None
+
+
+def round_compile_cache() -> RoundCompileCache:
+    """The process-wide compiled-round cache batched construction uses."""
+    global _SHARED_ROUNDS
+    if _SHARED_ROUNDS is None:
+        _SHARED_ROUNDS = RoundCompileCache()
+    return _SHARED_ROUNDS

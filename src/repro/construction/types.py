@@ -93,12 +93,22 @@ class BankStats:
     both. ``pattern_rounds[p]`` counts the rounds in which pattern ``p``
     actually had frontier states processed (a retried pattern's counter grows;
     a finished passenger's does not — the per-pattern retry test pins this).
+
+    ``pattern_candidates[p]`` is pattern ``p``'s candidate-expansion count
+    (the single source for both ``candidates == pattern_candidates.sum()``
+    and each pattern's ``SFAStats.candidates``). ``wall_time_s`` is the
+    whole-bank wall time; per-pattern ``SFAStats.wall_time_s`` is the
+    rounds-weighted *share* of it — a bank's wall belongs to the bank, and a
+    pattern that closed in 2 of 13 rounds must not report 13 rounds' worth.
     """
 
     method: str
     rounds: int = 0
     pattern_rounds: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
     retries: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    pattern_candidates: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.int64)
+    )
     candidates: int = 0
     wall_time_s: float = 0.0
 

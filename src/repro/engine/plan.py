@@ -20,6 +20,7 @@ BACKENDS = ("reference", "xla", "pallas")
 DISTRIBUTIONS = ("local", "shard_map")
 CONSTRUCTION_METHODS = ("auto", "batched", "loop")
 CONSTRUCTION_ENGINES = ("vectorized", "sequential", "jax")
+CONSTRUCTION_FP_BACKENDS = ("auto", "xla", "pallas")
 
 #: Default SFA state budget for ``mode="auto"``: patterns whose exact SFA
 #: closes within this many states get the paper's single-lookup inner loop;
@@ -92,6 +93,15 @@ class ConstructionPolicy:
     ``tile`` / ``max_retries``
         frontier states processed per pattern per round, and the per-pattern
         polynomial retry budget on a detected fingerprint collision.
+    ``fingerprint_backend``
+        the batched round's fingerprint stage: ``"xla"`` (fused clmul fold),
+        ``"pallas"`` (the ``kernels.ops.fingerprint_bank`` Rabin kernel —
+        bit-identical), or ``"auto"`` (pallas on a TPU runtime, xla
+        elsewhere).
+    ``bucket_growth``
+        active-set bucket shrink factor of the construction shape schedule
+        (``repro.construction.round_schedule``): larger compiles fewer round
+        shapes at the cost of more padding in mid-size rounds.
     """
 
     method: str = "auto"
@@ -103,6 +113,8 @@ class ConstructionPolicy:
     mesh: Any = None
     pattern_axis: str = "pattern"
     max_retries: int = 4
+    fingerprint_backend: str = "auto"
+    bucket_growth: int = 4
 
     def validate(self) -> "ConstructionPolicy":
         if self.method not in CONSTRUCTION_METHODS:
@@ -123,6 +135,16 @@ class ConstructionPolicy:
             raise ValueError(
                 f"construction distribution must be one of {DISTRIBUTIONS}, "
                 f"got {self.distribution!r}"
+            )
+        if self.fingerprint_backend not in CONSTRUCTION_FP_BACKENDS:
+            raise ValueError(
+                "construction fingerprint_backend must be one of "
+                f"{CONSTRUCTION_FP_BACKENDS}, got {self.fingerprint_backend!r}"
+            )
+        if self.bucket_growth < 2:
+            raise ValueError(
+                f"construction bucket_growth must be >= 2, "
+                f"got {self.bucket_growth}"
             )
         from ..construction import SFACache
 

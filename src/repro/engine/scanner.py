@@ -239,6 +239,8 @@ def _resolve_sfas(ids, dfas, plan: ScanPlan):
             distribution=policy.distribution,
             mesh=policy.mesh,
             pattern_axis=policy.pattern_axis,
+            fingerprint_backend=policy.fingerprint_backend,
+            bucket_growth=policy.bucket_growth,
         )
         rounds = result.stats.rounds
         retries = int(np.sum(result.stats.retries))

@@ -75,6 +75,26 @@ def fingerprint_bank(
     )
 
 
+def fingerprint_bank_stacked(
+    words: jnp.ndarray,
+    weights: jnp.ndarray,
+    limbs: jnp.ndarray,
+    *,
+    block_b: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """:func:`fingerprint_bank` with prestacked per-pattern constants:
+    (P, B, W) packed words, (P, W, 2) fold weights, (P, 4) Barrett limbs ->
+    (P, B, 2). Fully traceable (no host-side ``BarrettConstants`` objects),
+    which is what lets ``repro.construction.batched`` select this kernel as
+    the fingerprint stage *inside* its AOT-compiled round."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return fingerprint_bank_pallas(
+        words, weights, limbs, block_b=block_b, interpret=interpret
+    )
+
+
 def compose(
     f: jnp.ndarray,
     g: jnp.ndarray,

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass
 
 import numpy as np
@@ -99,6 +100,8 @@ class SchedulerStats:
     max_coalesced: int = 0
     union_patterns: int = 0   # pattern columns actually compiled/scanned
     union_docs: int = 0       # documents actually scanned
+    scanner_memo_hits: int = 0   # union batches answered by the scanner memo
+    scanner_evictions: int = 0   # scanners dropped by the memo's LRU lid
 
 
 class _Request:
@@ -135,23 +138,32 @@ class BatchScheduler:
     bank compiles + scans (see module docstring)."""
 
     def __init__(self, plan: ScanPlan | None = None, *, driver: str = "sync",
-                 window_s: float = 0.002, max_batch: int = 64):
+                 window_s: float = 0.002, max_batch: int = 64,
+                 max_scanners: int = 32):
         if driver not in DRIVERS:
             raise ValueError(f"driver must be one of {DRIVERS}, got {driver!r}")
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if window_s < 0:
             raise ValueError("window_s must be >= 0")
+        if max_scanners < 1:
+            raise ValueError("max_scanners must be >= 1")
         self.plan = (plan or _default_plan()).validate()
         self.driver = driver
         self.window_s = window_s
         self.max_batch = max_batch
+        self.max_scanners = max_scanners
         self.stats = SchedulerStats()
         self._pending: list = []
         self._cond = threading.Condition()
         self._first_ts: float | None = None
         self._stop = False
-        self._scanners: dict = {}   # union pattern-key tuple -> Scanner
+        # LRU memo of union-bank Scanners, bounded by ``max_scanners`` like
+        # the SFA cache is bounded: a long-lived service sees an unbounded
+        # stream of distinct union keys, and each Scanner pins device tables.
+        # Guarded by its own lock — ``_run_batch`` runs outside ``_cond``.
+        self._scanners: OrderedDict = OrderedDict()
+        self._scanners_lock = threading.Lock()
         self._worker = None
         if driver == "thread":
             self._worker = threading.Thread(
@@ -250,13 +262,24 @@ class BatchScheduler:
                 raise
 
     def _scanner_for(self, key_tuple: tuple, specs: list) -> Scanner:
-        """Memoized union-bank compile. Cold pattern sets still answer most
-        construction from the plan's SFA cache tiers; this memo additionally
-        skips re-stacking device tables for repeat batches."""
-        sc = self._scanners.get(key_tuple)
-        if sc is None:
-            sc = Scanner.compile(specs, self.plan)
+        """LRU-memoized union-bank compile. Cold pattern sets still answer
+        most construction from the plan's SFA cache tiers; this memo
+        additionally skips re-stacking device tables for repeat batches. An
+        evicted key recompiles (cheaply, through the SFA and round-compile
+        caches) on its next batch."""
+        with self._scanners_lock:
+            sc = self._scanners.get(key_tuple)
+            if sc is not None:
+                self._scanners.move_to_end(key_tuple)
+                self.stats.scanner_memo_hits += 1
+                return sc
+        sc = Scanner.compile(specs, self.plan)   # compile outside the lock
+        with self._scanners_lock:
             self._scanners[key_tuple] = sc
+            self._scanners.move_to_end(key_tuple)
+            while len(self._scanners) > self.max_scanners:
+                self._scanners.popitem(last=False)
+                self.stats.scanner_evictions += 1
         return sc
 
     # -- thread driver -------------------------------------------------------

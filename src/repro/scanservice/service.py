@@ -34,7 +34,7 @@ class ScanService:
                  cache: SFACache | None = None,
                  store_max_bytes: int = 1 << 30,
                  driver: str = "sync", window_s: float = 0.002,
-                 max_batch: int = 64):
+                 max_batch: int = 64, max_scanners: int = 32):
         if store_dir is None:
             self.store = None
         elif isinstance(store_dir, ArtifactStore):
@@ -62,7 +62,8 @@ class ScanService:
                 ),
             ).validate()
         self.scheduler = BatchScheduler(
-            self.plan, driver=driver, window_s=window_s, max_batch=max_batch
+            self.plan, driver=driver, window_s=window_s, max_batch=max_batch,
+            max_scanners=max_scanners,
         )
 
     # -- cache tiers ---------------------------------------------------------

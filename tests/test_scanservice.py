@@ -281,6 +281,41 @@ def test_scheduler_validation_and_close(docs):
         sched.submit(PATTERNS[0], docs[0])
 
 
+def test_scanner_memo_is_lru_bounded(docs):
+    """Satellite: the scheduler's union-bank Scanner memo no longer grows
+    without bound — it is an LRU capped at ``max_scanners``, evictions are
+    counted, and an evicted key recompiles to bit-identical results."""
+    cache = SFACache()
+    sched = BatchScheduler(_plan(cache), max_scanners=2)
+    union_sets = [PATTERNS[:2], PATTERNS[1:3], PATTERNS[2:]]
+
+    first = {}
+    for i, pats in enumerate(union_sets):     # three distinct union keys
+        first[i] = sched.submit(pats, docs[:2]).result()
+    assert len(sched._scanners) == 2          # capped, not 3
+    assert sched.stats.scanner_evictions == 1  # union_sets[0] fell out
+    assert sched.stats.scanner_memo_hits == 0
+
+    # the hottest key answers from the memo — no eviction, one hit
+    again = sched.submit(union_sets[2], docs[:2]).result()
+    assert sched.stats.scanner_memo_hits == 1
+    assert sched.stats.scanner_evictions == 1
+    assert np.array_equal(again.hits, first[2].hits)
+
+    # the evicted key recompiles (evicting the new LRU) bit-identically
+    re0 = sched.submit(union_sets[0], docs[:2]).result()
+    assert sched.stats.scanner_memo_hits == 1
+    assert sched.stats.scanner_evictions == 2
+    assert len(sched._scanners) == 2
+    assert np.array_equal(re0.hits, first[0].hits)
+    # the recompile was served by the SFA cache, not reconstruction
+    assert cache.info.hits > 0
+
+    with pytest.raises(ValueError):
+        BatchScheduler(_plan(SFACache()), max_scanners=0)
+    sched.close()
+
+
 def test_thread_driver_coalesces_and_matches(docs):
     with BatchScheduler(_plan(SFACache()), driver="thread",
                         window_s=0.05) as sched:
