@@ -14,13 +14,14 @@ reports, per bank size:
     waste to ~2x per bucket;
   * patterns/sec for each, and the resulting speedups.
 
-``run_engine_modes`` measures the SFA-bank vs enumeration-bank crossover on
-the bundled PROSITE bank (auto / forced-sfa / forced-enumeration plans) and
-writes the comparison to ``BENCH_engine.json``.
+``run_engine_modes`` measures the SFA-bank vs enumeration-bank vs
+speculative crossover on the bundled PROSITE bank (auto and the three
+forced plans) and writes the comparison to ``BENCH_engine.json``.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import time
 from pathlib import Path
@@ -130,8 +131,10 @@ def run(emit) -> None:
 
 
 def run_engine_modes(emit) -> None:
-    """Auto vs forced modes on the bundled bank: where is the SFA-bank vs
-    enumeration-bank crossover, and what does auto actually pick?"""
+    """Auto vs forced modes on the bundled bank: where do the SFA-bank,
+    enumeration-bank, and speculative crossovers sit, and what does auto
+    actually pick? (bench_speculative sweeps the blowup-regime state
+    ladder; this row shows speculation on the realistic mixed bank.)"""
     rng = np.random.default_rng(1)
     corpus_docs = _config.scaled(32, 8)
     doc_len = _config.scaled(1024, 256)
@@ -144,14 +147,14 @@ def run_engine_modes(emit) -> None:
         "modes": {},
     }
     ref = None
-    for mode in ("auto", "sfa", "enumeration"):
+    for mode in ("auto", "sfa", "enumeration", "speculative"):
         budget = 200_000 if mode == "sfa" else ScanPlan().sfa_state_budget
         t0 = time.perf_counter()
         sc = Scanner.compile(bank, ScanPlan(
             mode=mode, sfa_state_budget=budget,
             chunking=ChunkPolicy(n_chunks=N_CHUNKS)))
         t_compile = time.perf_counter() - t0
-        sc.census(corpus)  # warmup
+        sc.census(corpus)  # warmup (also resolves the speculation profile)
         t0 = time.perf_counter()
         counts = sc.census(corpus)
         t_scan = time.perf_counter() - t0
@@ -170,6 +173,10 @@ def run_engine_modes(emit) -> None:
             "mchar_pattern_per_s": chars / t_scan / 1e6,
             "counts_match_auto": bool(np.array_equal(counts, ref)),
         }
+        if sc.last_speculation is not None:
+            report["modes"][mode]["speculation"] = dataclasses.asdict(
+                sc.last_speculation
+            )
 
     out = Path(__file__).resolve().parents[1] / "BENCH_engine.json"
     out.write_text(json.dumps(report, indent=2) + "\n")

@@ -1,0 +1,114 @@
+"""Speculative vs enumeration scanning in the blowup regime (beyond-paper).
+
+Enumeration pays ``O(L·n)`` gathers per pattern because a chunk's entry
+state is unknown until its predecessor finishes; speculation pays ``O(L·m)``
+(m speculated entry states, default 8) plus validation and the occasional
+repair. The crossover is therefore governed by the automaton's state count
+``n`` — this benchmark measures it on exactly the patterns the speculative
+tier exists for:
+
+* synthetic blowup patterns at n ≈ 128 / 256 / 512 — long-literal search
+  DFAs (a length-``n-1`` literal compiles to ``n`` states, and on random
+  text the boundary-state distribution concentrates near the start state,
+  i.e. a *realistic* favourable hot-state profile);
+* the worst bundled PROSITE signature, PS00010 (87 states) — below the
+  default ``auto_states`` threshold, included to show where the crossover
+  actually sits.
+
+Every row times a warm ``Scanner.scan`` under ``mode="speculative"`` vs
+``mode="enumeration"`` on the same corpus, checks the hit matrices are
+bit-identical, and records the scan's :class:`SpeculationStats`. The
+comparison is written to ``BENCH_speculative.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks import _config
+from repro.core.dfa import AMINO_ACIDS, compile_dfa
+from repro.core.prosite import PROSITE_EXTRA, compile_prosite
+from repro.engine import ChunkPolicy, ScanPlan, Scanner
+
+N_CHUNKS = 8
+STATE_LADDER = (128, 256, 512)
+
+
+def _blowup_pattern(n_states: int, seed: int):
+    """A search DFA with exactly ``n_states`` states: a random length
+    ``n_states - 1`` literal (KMP-style failure transitions keep random
+    text hovering near the start state — the hot-state concentration the
+    profiler feeds on)."""
+    rng = np.random.default_rng(seed)
+    literal = "".join(rng.choice(list(AMINO_ACIDS), size=n_states - 1))
+    return compile_dfa(literal, AMINO_ACIDS, search=True)
+
+
+def _time_scan(sc, corpus) -> tuple:
+    sc.scan(corpus)  # warmup/compile (also resolves the sampled profile)
+    t0 = time.perf_counter()
+    result = sc.scan(corpus)
+    return time.perf_counter() - t0, result
+
+
+def run(emit) -> None:
+    rng = np.random.default_rng(7)
+    corpus_docs = _config.scaled(16, 4)
+    doc_len = _config.scaled(4096, 512)
+    corpus = rng.integers(0, 20, size=(corpus_docs, doc_len)).astype(np.int32)
+    chars = corpus_docs * doc_len
+
+    cases = [(f"SYN_n{n}", _blowup_pattern(n, seed=n)) for n in STATE_LADDER]
+    cases.append(("PS00010", compile_prosite(PROSITE_EXTRA["PS00010"])))
+
+    report: dict = {
+        "corpus": {"docs": corpus_docs, "doc_len": doc_len},
+        "n_chunks": N_CHUNKS,
+        "rows": [],
+    }
+    for name, dfa in cases:
+        chunking = ChunkPolicy(n_chunks=N_CHUNKS)
+        t_spec, r_spec = _time_scan(
+            Scanner.compile({name: dfa},
+                            ScanPlan(mode="speculative", chunking=chunking)),
+            corpus,
+        )
+        t_enum, r_enum = _time_scan(
+            Scanner.compile({name: dfa},
+                            ScanPlan(mode="enumeration", chunking=chunking)),
+            corpus,
+        )
+        exact = bool(np.array_equal(r_spec.hits, r_enum.hits))
+        stats = r_spec.speculation
+        speedup = t_enum / t_spec if t_spec > 0 else float("inf")
+        emit(f"speculative/{name}", t_spec * 1e6,
+             f"n={dfa.n_states},enum_us={t_enum * 1e6:.1f},"
+             f"speedup={speedup:.2f}x,hit_rate={stats.hit_rate:.3f},"
+             f"rounds={stats.repair_rounds},exact={exact},"
+             f"Mchar_s={chars / t_spec / 1e6:.1f}")
+        report["rows"].append({
+            "pattern": name,
+            "n_states": dfa.n_states,
+            "speculative_s": t_spec,
+            "enumeration_s": t_enum,
+            "speedup": speedup,
+            "mchar_per_s": chars / t_spec / 1e6,
+            "exact": exact,
+            "speculation": dataclasses.asdict(stats),
+        })
+
+    out = Path(__file__).resolve().parents[1] / "BENCH_speculative.json"
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    emit("speculative/report", 0.0, f"written={out.name}")
+
+
+if __name__ == "__main__":
+    def _emit(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}")
+
+    run(_emit)

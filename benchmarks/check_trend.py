@@ -1,11 +1,19 @@
-"""Bench-trend gate: fail loudly on a batched-construction regression.
+"""Bench-trend gate: fail loudly on a benchmark regression.
 
-CI's bench-smoke job stashes the *committed* ``BENCH_construction.json``
-baseline, reruns the harness, and then compares the fresh file against the
-stash with this script: for every bank size ``P`` present in both, the
-fresh ``batched_speedup`` (warm batched vs sequential loop — a same-machine
-ratio, so it transfers across runner generations far better than absolute
-seconds) must be within ``--max-regression`` (default 2x) of the baseline's.
+CI's bench-smoke job stashes the *committed* baseline JSON, reruns the
+harness, and compares the fresh file against the stash with this script.
+Two report kinds are recognized by shape:
+
+* ``BENCH_construction.json`` (``"results"`` rows) — for every bank size
+  ``P`` present in both, the fresh ``batched_speedup`` (warm batched vs
+  sequential loop) must be within ``--max-regression`` of the baseline's;
+* ``BENCH_engine.json`` (``"modes"`` table) — for every mode present in
+  both, the fresh throughput *relative to the same run's enumeration mode*
+  must be within ``--max-regression`` of the baseline's relative figure.
+
+Both gates compare same-machine **ratios**, never absolute seconds, so they
+transfer across runner generations; mixing report kinds between baseline
+and fresh is an input error.
 
 Exit codes: 0 = within tolerance, 1 = regression (or nothing comparable —
 an empty comparison is itself a regression of the gate), 2 = unusable
@@ -24,17 +32,40 @@ import sys
 from pathlib import Path
 
 
-def _rows_by_p(path: Path) -> dict:
+def _load(path: Path) -> dict:
     try:
         report = json.loads(path.read_text())
     except (OSError, ValueError) as e:
         print(f"ERROR: cannot read {path}: {e}", file=sys.stderr)
         sys.exit(2)
+    if not isinstance(report, dict):
+        print(f"ERROR: {path} is not a JSON report object", file=sys.stderr)
+        sys.exit(2)
+    return report
+
+
+def _rows(path: Path) -> tuple:
+    """-> (kind, {label: gated ratio}). Construction reports gate the
+    per-P batched speedup; engine reports gate each mode's throughput
+    relative to the same run's enumeration row."""
+    report = _load(path)
+    if "modes" in report:
+        modes = report["modes"]
+        base = modes.get("enumeration", {}).get("mchar_pattern_per_s")
+        if not base:
+            print(f"ERROR: {path} has no enumeration row to normalize "
+                  "against", file=sys.stderr)
+            sys.exit(2)
+        return "engine", {
+            mode: float(row["mchar_pattern_per_s"]) / float(base)
+            for mode, row in modes.items()
+            if isinstance(row, dict) and "mchar_pattern_per_s" in row
+        }
     rows = {}
     for row in report.get("results", []):
         if "P" in row and "batched_speedup" in row:
-            rows[int(row["P"])] = float(row["batched_speedup"])
-    return rows
+            rows[f"P={int(row['P'])}"] = float(row["batched_speedup"])
+    return "construction", rows
 
 
 def main() -> None:
@@ -42,29 +73,35 @@ def main() -> None:
     ap.add_argument("baseline", type=Path)
     ap.add_argument("fresh", type=Path)
     ap.add_argument("--max-regression", type=float, default=2.0,
-                    help="fail when baseline_speedup / fresh_speedup exceeds "
-                         "this factor for any comparable bank size")
+                    help="fail when baseline_ratio / fresh_ratio exceeds "
+                         "this factor for any comparable row")
     args = ap.parse_args()
 
-    base = _rows_by_p(args.baseline)
-    fresh = _rows_by_p(args.fresh)
+    base_kind, base = _rows(args.baseline)
+    fresh_kind, fresh = _rows(args.fresh)
+    if base_kind != fresh_kind:
+        print(f"ERROR: report kinds differ: {args.baseline} is {base_kind}, "
+              f"{args.fresh} is {fresh_kind}", file=sys.stderr)
+        sys.exit(2)
     shared = sorted(set(base) & set(fresh))
     if not shared:
-        print(f"ERROR: no comparable bank sizes between {args.baseline} "
-              f"(P={sorted(base)}) and {args.fresh} (P={sorted(fresh)}) — "
+        print(f"ERROR: no comparable rows between {args.baseline} "
+              f"({sorted(base)}) and {args.fresh} ({sorted(fresh)}) — "
               "the trend gate compared nothing", file=sys.stderr)
         sys.exit(1)
 
     failed = False
-    print(f"{'P':>4} {'baseline':>10} {'fresh':>10} {'ratio':>7}")
-    for P in shared:
-        ratio = base[P] / fresh[P] if fresh[P] > 0 else float("inf")
+    width = max(len(k) for k in shared)
+    print(f"{'row':<{width}} {'baseline':>10} {'fresh':>10} {'ratio':>7}")
+    for k in shared:
+        ratio = base[k] / fresh[k] if fresh[k] > 0 else float("inf")
         verdict = "OK" if ratio <= args.max_regression else "REGRESSION"
-        print(f"{P:>4} {base[P]:>9.2f}x {fresh[P]:>9.2f}x {ratio:>6.2f}x  {verdict}")
+        print(f"{k:<{width}} {base[k]:>9.2f}x {fresh[k]:>9.2f}x "
+              f"{ratio:>6.2f}x  {verdict}")
         if verdict != "OK":
             failed = True
     if failed:
-        print(f"ERROR: batched-vs-loop speedup regressed by more than "
+        print(f"ERROR: {base_kind} trend regressed by more than "
               f"{args.max_regression}x — see rows above", file=sys.stderr)
         sys.exit(1)
 

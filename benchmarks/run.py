@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV. Figure mapping:
   multipattern bench_multipattern     (batched bank vs per-pattern loop, §IV)
   engine  bench_multipattern.run_engine_modes (auto vs forced Scanner modes,
           also writes BENCH_engine.json)
+  speculative bench_speculative       (speculative vs enumeration in the
+          blowup regime, writes BENCH_speculative.json)
   service bench_service               (cold vs warm start through the
           artifact store; coalesced vs sequential submits; writes
           BENCH_service.json)
@@ -22,7 +24,10 @@ A benchmark module that fails to *import* (missing optional dep, broken
 bench) is skipped with a warning — it costs its own suites, never the sweep.
 But a sweep where **every** module failed to import ran nothing at all:
 that exits 2, so CI's bench-smoke job cannot silently go green with zero
-benchmarks run. Suites that import but *fail at runtime* exit 1.
+benchmarks run. Suites that import but *fail at runtime* exit 1. Either
+way the sweep ends with a per-module summary table (status + wall time),
+so a long CI log still answers "what ran, what broke, what was slow" at
+a glance.
 """
 
 from __future__ import annotations
@@ -30,6 +35,7 @@ from __future__ import annotations
 import argparse
 import importlib
 import sys
+import time
 import traceback
 
 #: (module, suite function names) — resolved one by one so an unimportable
@@ -42,27 +48,27 @@ SUITES = [
     ("bench_kernels", ("run",)),
     ("bench_roofline", ("run",)),
     ("bench_multipattern", ("run", "run_engine_modes")),
+    ("bench_speculative", ("run",)),
     ("bench_service", ("run", "run_coalesced")),
 ]
 
 
 def _resolve_suites() -> tuple:
-    """-> (callables, skipped module count). Import errors warn and skip —
-    the *caller* decides whether anything at all resolved."""
-    suites = []
-    skipped = 0
+    """-> ([(module name, callables)], skipped module names). Import errors
+    warn and skip — the *caller* decides whether anything at all resolved."""
+    modules = []
+    skipped = []
     for mod_name, fn_names in SUITES:
         try:
             mod = importlib.import_module(f"benchmarks.{mod_name}")
         except Exception:
-            skipped += 1
+            skipped.append(mod_name)
             print(f"WARNING: skipping benchmarks.{mod_name} "
                   "(import failed):", file=sys.stderr)
             traceback.print_exc()
             continue
-        for fn in fn_names:
-            suites.append(getattr(mod, fn))
-    return suites, skipped
+        modules.append((mod_name, [getattr(mod, fn) for fn in fn_names]))
+    return modules, skipped
 
 
 def main() -> None:
@@ -76,10 +82,10 @@ def main() -> None:
     if args.smoke:
         _config.set_smoke(True)
 
-    suites, skipped = _resolve_suites()
-    if not suites:
-        print(f"ERROR: all {skipped} benchmark modules failed to import; "
-              "no benchmarks were run", file=sys.stderr)
+    modules, skipped = _resolve_suites()
+    if not modules:
+        print(f"ERROR: all {len(skipped)} benchmark modules failed to "
+              "import; no benchmarks were run", file=sys.stderr)
         sys.exit(2)
 
     print("name,us_per_call,derived")
@@ -88,13 +94,25 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()
 
+    summary = [(name, "SKIPPED (import)", 0.0) for name in skipped]
     failures = 0
-    for suite in suites:
-        try:
-            suite(emit)
-        except Exception:  # keep the harness going; report at the end
-            failures += 1
-            traceback.print_exc()
+    for mod_name, suites in modules:
+        status = "ok"
+        t0 = time.perf_counter()
+        for suite in suites:
+            try:
+                suite(emit)
+            except Exception:  # keep the harness going; report at the end
+                failures += 1
+                status = "FAILED"
+                traceback.print_exc()
+        summary.append((mod_name, status, time.perf_counter() - t0))
+
+    width = max(len(name) for name, _, _ in summary)
+    print("\n== sweep summary ==")
+    for name, status, wall in sorted(summary, key=lambda r: -r[2]):
+        print(f"{name:<{width}}  {status:<16} {wall:8.1f}s")
+    sys.stdout.flush()
     if failures:
         sys.exit(1)
 

@@ -17,15 +17,18 @@ the parallel entry points (the pre-engine shims in ``repro.core`` were
 removed after the PR-2 deprecation window).
 """
 
+from ..speculative import SpeculationStats
 from .plan import (
     BACKENDS,
     CONSTRUCTION_ENGINES,
     CONSTRUCTION_METHODS,
     DISTRIBUTIONS,
     MODES,
+    SPECULATION_SOURCES,
     ChunkPolicy,
     ConstructionPolicy,
     ScanPlan,
+    SpeculationPolicy,
 )
 from .scanner import ConstructionReport, PatternGroup, Scanner, ScanResult
 from .streaming import StreamResult, StreamSession
@@ -36,6 +39,7 @@ __all__ = [
     "CONSTRUCTION_METHODS",
     "DISTRIBUTIONS",
     "MODES",
+    "SPECULATION_SOURCES",
     "ChunkPolicy",
     "ConstructionPolicy",
     "ConstructionReport",
@@ -43,6 +47,8 @@ __all__ = [
     "ScanPlan",
     "ScanResult",
     "Scanner",
+    "SpeculationPolicy",
+    "SpeculationStats",
     "StreamResult",
     "StreamSession",
 ]

@@ -197,6 +197,23 @@ def compose_sequential(tables: np.ndarray, mapping: np.ndarray,
     return m
 
 
+def advance_states_sequential(tables: np.ndarray, states: np.ndarray,
+                              tail: np.ndarray) -> np.ndarray:
+    """Advance per-(pattern, doc) *states* through per-doc tail symbols:
+    ``s'[p, d] = tables[p, s[p, d], tail[d, t]]`` folded over ``t``.
+    (Pg, n, k), (Pg, D), (D, T) -> (Pg, D). The state-vector twin of
+    :func:`compose_sequential` for the speculative path, whose head
+    executor produces final *states* rather than whole mappings — ragged
+    tails advance here, one vectorized gather per tail symbol.
+    """
+    rows = np.arange(tables.shape[0])[:, None]
+    tail = np.asarray(tail)
+    s = np.asarray(states, dtype=np.int64)
+    for t in range(tail.shape[1]):
+        s = tables[rows, s, tail[None, :, t]]
+    return s.astype(np.int32)
+
+
 # --------------------------------------------------------------------------
 # Banked matchers, enumeration mode (ex core/multipattern.py)
 # --------------------------------------------------------------------------

@@ -15,8 +15,9 @@ import os
 from dataclasses import dataclass, field, replace
 from typing import Any
 
-MODES = ("auto", "sfa", "enumeration")
+MODES = ("auto", "sfa", "enumeration", "speculative")
 BACKENDS = ("reference", "xla", "pallas")
+SPECULATION_SOURCES = ("sample", "store")
 DISTRIBUTIONS = ("local", "shard_map")
 CONSTRUCTION_METHODS = ("auto", "batched", "loop")
 CONSTRUCTION_ENGINES = ("vectorized", "sequential", "jax")
@@ -195,6 +196,84 @@ class ConstructionPolicy:
 
 
 @dataclass(frozen=True)
+class SpeculationPolicy:
+    """How ``mode="speculative"`` (and auto's speculative tier) speculates.
+
+    ``m``
+        speculated boundary states per pattern — every chunk runs from all
+        ``m`` at once (a stacked ``(m, chunks)`` state axis), so cost scales
+        with ``m`` where enumeration scales with the automaton's ``n``.
+    ``sample_frac`` / ``max_sample``
+        how much of the input the hot-state profiler reads when the profile
+        comes from sampling: ``min(max_sample, sample_frac · corpus_size)``
+        symbols off the corpus prefix.
+    ``max_repair_rounds``
+        convergence bound of the executor's validate/repair loop. Each round
+        re-scans exactly one chunk per broken (pattern, doc) lane from its
+        now-known entry state; lanes still unresolved at the bound fall back
+        to full enumeration — results stay bit-identical either way, the
+        bound only caps how long the cheap path keeps trying.
+    ``profile_source``
+        ``"sample"`` (profile the first scanned input, memoized per
+        scanner — the profile is advisory, so reuse costs repairs at
+        worst, never correctness),
+        ``"store"`` (look up a persisted profile in the plan's
+        ``construction.store`` by the pattern's ``dfa_cache_key``, sampling
+        and persisting on a miss — the scan-service path), a mapping
+        ``{pattern id: state sequence}``, or one explicit state sequence
+        applied to every pattern (the adversarial-testing hook).
+    ``auto_states``
+        the ``auto``-mode tier threshold: a pattern whose SFA blows the
+        state budget routes to speculation only when its DFA has at least
+        this many states; smaller blowup patterns keep the enumeration
+        fallback (their n-wide gathers are already cheap). 128 is a
+        conservative bound on the measured crossover
+        (``BENCH_speculative.json``): warm repeat scans win well below it,
+        but a first scan also pays the sequential profiling pass.
+    """
+
+    m: int = 8
+    sample_frac: float = 0.05
+    max_sample: int = 4096
+    max_repair_rounds: int = 8
+    profile_source: Any = "sample"
+    auto_states: int = 128
+
+    def validate(self) -> "SpeculationPolicy":
+        if self.m < 1:
+            raise ValueError(f"speculation m must be >= 1, got {self.m}")
+        if not (0.0 < self.sample_frac <= 1.0):
+            raise ValueError(
+                f"speculation sample_frac must be in (0, 1], "
+                f"got {self.sample_frac}"
+            )
+        if self.max_sample < 1:
+            raise ValueError("speculation max_sample must be >= 1")
+        if self.max_repair_rounds < 1:
+            raise ValueError("speculation max_repair_rounds must be >= 1")
+        if self.auto_states < 1:
+            raise ValueError("speculation auto_states must be >= 1")
+        src = self.profile_source
+        if isinstance(src, str):
+            if src not in SPECULATION_SOURCES:
+                raise ValueError(
+                    f"speculation profile_source must be one of "
+                    f"{SPECULATION_SOURCES}, a mapping, or a state sequence; "
+                    f"got {src!r}"
+                )
+        elif not (hasattr(src, "keys") or hasattr(src, "__len__")
+                  or hasattr(src, "__iter__")):
+            raise ValueError(
+                "speculation profile_source must be 'sample', 'store', a "
+                f"mapping, or a state sequence, got {src!r}"
+            )
+        return self
+
+    def with_(self, **overrides) -> "SpeculationPolicy":
+        return replace(self, **overrides).validate()
+
+
+@dataclass(frozen=True)
 class ScanPlan:
     """One execution plan for a compiled :class:`~repro.engine.Scanner`.
 
@@ -202,9 +281,13 @@ class ScanPlan:
         ``"sfa"`` forces the paper's SFA matching (construction must fit the
         budget for *every* pattern, else ``StateBlowup`` propagates);
         ``"enumeration"`` forces the related-work all-states gather mode;
+        ``"speculative"`` forces the hot-state speculation executor
+        (:mod:`repro.speculative` — m speculated boundary states per chunk,
+        validate + repair, bit-identical to enumeration by construction);
         ``"auto"`` attempts SFA construction per pattern under
-        ``sfa_state_budget`` and falls back to enumeration per pattern on
-        ``StateBlowup`` — the crisp criterion the paper implies.
+        ``sfa_state_budget`` and, on ``StateBlowup``, falls back to
+        speculation when the DFA has at least ``speculation.auto_states``
+        states and to enumeration otherwise — the three-tier criterion.
     ``backend``
         ``"reference"`` (pure NumPy oracle), ``"xla"`` (jitted vmapped
         chunk matchers), or ``"pallas"`` (the ``match_bank_chunks_pallas``
@@ -219,6 +302,9 @@ class ScanPlan:
         a :class:`ConstructionPolicy`: how the SFAs behind ``mode="sfa"`` /
         ``"auto"`` get built (batched bank rounds vs per-pattern loop,
         content-addressed caching, pattern-sharded construction meshes).
+    ``speculation``
+        a :class:`SpeculationPolicy`: the speculative tier's knobs (state
+        count ``m``, profile sampling, repair bound, auto threshold).
     """
 
     mode: str = "auto"
@@ -226,6 +312,7 @@ class ScanPlan:
     distribution: str = "local"
     chunking: ChunkPolicy = field(default_factory=ChunkPolicy)
     construction: ConstructionPolicy = field(default_factory=ConstructionPolicy)
+    speculation: SpeculationPolicy = field(default_factory=SpeculationPolicy)
     sfa_state_budget: int = DEFAULT_SFA_STATE_BUDGET
     mesh: Any = None
     data_axis: str = "data"
@@ -252,6 +339,7 @@ class ScanPlan:
             )
         self.chunking.validate()
         self.construction.validate()
+        self.speculation.validate()
         return self
 
     def with_(self, **overrides) -> "ScanPlan":

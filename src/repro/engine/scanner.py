@@ -37,6 +37,14 @@ from ..compat import make_mesh
 from ..construction import SFA, StateBlowup, construct_bank
 from ..core.dfa import DFA
 from ..core.multipattern import PatternBank
+from ..speculative import (
+    HotStateProfile,
+    SpeculationStats,
+    distributed_speculative_finals_fn,
+    profile_hot_states,
+    speculative_bank_finals,
+    stack_profile_states,
+)
 from . import executors as X
 from .plan import ChunkPolicy, ScanPlan
 from .streaming import StreamResult, StreamSession
@@ -108,12 +116,14 @@ class PatternGroup:
 
     indices: np.ndarray          # positions in the scanner's pattern order
     bank: PatternBank            # sub-bank (enumeration tables, padded)
-    mode: str                    # "sfa" | "enumeration"
+    mode: str                    # "sfa" | "enumeration" | "speculative"
     tables: Any = None           # (Pg, n, k) jnp — enumeration tables
     deltas: Any = None           # (Pg, S, k) jnp — stacked SFA tables
     sfa_maps: Any = None         # (Pg, S, n) jnp — SFA state -> mapping
     sfa_states: np.ndarray | None = None  # (Pg,) true SFA state counts
     _dist_fn: Any = field(default=None, repr=False)
+    _spec_dist_fn: Any = field(default=None, repr=False)
+    _spec_profile: Any = field(default=None, repr=False)  # memoized (Pg, m)
 
     @property
     def n(self) -> int:
@@ -189,6 +199,10 @@ def _resolve_sfas(ids, dfas, plan: ScanPlan):
     P = len(dfas)
     if plan.mode == "enumeration":
         return ["enumeration"] * P, {}, ConstructionReport()
+    if plan.mode == "speculative":
+        # Forced speculation needs no SFA construction at all — the whole
+        # point of the mode is serving patterns the n^n bound locks out.
+        return ["speculative"] * P, {}, ConstructionReport()
 
     policy = plan.construction
     budget = plan.sfa_state_budget
@@ -201,6 +215,11 @@ def _resolve_sfas(ids, dfas, plan: ScanPlan):
                 f"{budget}-state budget and "
                 "mode='sfa' forbids the enumeration fallback"
             ) from None
+        # auto's blowup tier: large automata go speculative (their n-wide
+        # enumeration gathers are what speculation exists to avoid); small
+        # blowup patterns keep the enumeration fallback.
+        if dfas[i].n_states >= plan.speculation.auto_states:
+            return "speculative"
         return "enumeration"
 
     modes: list = [None] * P
@@ -270,10 +289,16 @@ def _resolve_sfas(ids, dfas, plan: ScanPlan):
 
 @dataclass(frozen=True)
 class ScanResult:
-    """Hit matrix of a scan: ``hits[p, d]`` iff doc ``d`` matches pattern ``p``."""
+    """Hit matrix of a scan: ``hits[p, d]`` iff doc ``d`` matches pattern ``p``.
+
+    ``speculation`` carries the scan's aggregated
+    :class:`~repro.speculative.SpeculationStats` when any pattern group ran
+    speculatively (None otherwise) — the per-scan hit-rate/repair report.
+    """
 
     hits: np.ndarray      # (P, D) bool
     ids: tuple
+    speculation: Any = None
 
     @property
     def counts(self) -> np.ndarray:
@@ -305,6 +330,7 @@ class Scanner:
         self.n_max = max(d.n_states for d in dfas)
         self.starts = np.asarray([d.start for d in dfas], dtype=np.int32)
         self._dfas = dfas
+        self.last_speculation: SpeculationStats | None = None
         self.pattern_modes = {}
         for g in groups:
             for i in g.indices:
@@ -341,7 +367,7 @@ class Scanner:
             )
 
         groups = []
-        for mode in ("sfa", "enumeration"):
+        for mode in ("sfa", "enumeration", "speculative"):
             member = [i for i, m in enumerate(modes) if m == mode]
             if not member:
                 continue
@@ -378,6 +404,11 @@ class Scanner:
                 mesh, plan.data_axis, plan.chunking.n_chunks,
                 sfa_mode=(mode == "sfa"),
             )
+            if mode == "speculative":
+                g._spec_dist_fn = distributed_speculative_finals_fn(
+                    mesh, plan.data_axis, plan.chunking.n_chunks,
+                    plan.speculation.max_repair_rounds,
+                )
         return g
 
     # -- encoding helpers ---------------------------------------------------
@@ -463,6 +494,168 @@ class Scanner:
             out = X.bank_doc_mappings(g.tables, corpus_j, n_chunks)
         return np.asarray(out)
 
+    # -- the speculative core ----------------------------------------------
+
+    def _speculation_sample(self, corpus: np.ndarray) -> np.ndarray:
+        """The profiler's symbol sample: a prefix of the flattened corpus
+        sized by the policy's ``sample_frac`` / ``max_sample``."""
+        pol = self.plan.speculation
+        flat = corpus.reshape(-1)
+        s = min(pol.max_sample, max(1, int(pol.sample_frac * flat.size)))
+        return flat[:s]
+
+    def _explicit_profile_states(self, g: PatternGroup, src) -> np.ndarray:
+        """Explicit ``profile_source``: a mapping {pattern id: states} or one
+        state sequence for every pattern. The adversarial-testing hook — any
+        states are *correct* (misspeculation only costs repairs)."""
+        pol = self.plan.speculation
+        if hasattr(src, "keys"):
+            rows = []
+            for i in g.indices:
+                pid = self.ids[i]
+                if pid not in src:
+                    raise ValueError(
+                        f"explicit speculation profile is missing pattern "
+                        f"{pid!r}"
+                    )
+                rows.append(np.asarray(src[pid], dtype=np.int32))
+        else:
+            rows = [np.asarray(src, dtype=np.int32)] * len(g.indices)
+        for r in rows:
+            if r.ndim != 1 or not r.size:
+                raise ValueError(
+                    "explicit speculation profiles must be non-empty 1-D "
+                    "state sequences"
+                )
+        profs = [
+            HotStateProfile(
+                states=r, weights=np.zeros(len(r), dtype=np.float64),
+                sample_len=0,
+            )
+            for r in rows
+        ]
+        return stack_profile_states(profs, pol.m, g.n)
+
+    def _speculation_profile(self, g: PatternGroup, corpus: np.ndarray
+                             ) -> np.ndarray:
+        """Resolve one group's (Pg, m) speculated boundary states.
+
+        ``"sample"`` profiles the first scanned corpus (a bounded
+        ``max_sample``-symbol walk) and memoizes the result on the group:
+        the profiler is a sequential host-side pass, and paying it once per
+        *scanner* instead of once per scan is what keeps speculation ahead
+        of enumeration on repeat scans. A profile is advisory — reusing it
+        on later, differently-distributed corpora costs repair rounds,
+        never correctness. ``"store"`` consults the plan's persistent
+        :class:`~repro.scanservice.ArtifactStore` by ``dfa_cache_key``
+        first, samples on a miss, and persists what it learned; explicit
+        sources bypass profiling entirely.
+        """
+        pol = self.plan.speculation
+        src = pol.profile_source
+        if not isinstance(src, str):
+            return self._explicit_profile_states(g, src)
+        if g._spec_profile is not None:
+            return g._spec_profile
+        store = self.plan.construction.resolve_store() if src == "store" \
+            else None
+        profiles: list = [None] * len(g.indices)
+        keys = None
+        if store is not None and hasattr(store, "get_profile"):
+            from ..construction import dfa_cache_key
+
+            keys = [dfa_cache_key(self._dfas[i]) for i in g.indices]
+            for j, key in enumerate(keys):
+                meta = store.get_profile(key)
+                if meta is not None:
+                    profiles[j] = HotStateProfile.from_json(meta)
+        need = [j for j, pr in enumerate(profiles) if pr is None]
+        if need:
+            sample = self._speculation_sample(corpus)
+            fresh = profile_hot_states(
+                g.bank.tables[need], g.bank.starts[need], sample, pol.m
+            )
+            for j, pr in zip(need, fresh):
+                profiles[j] = pr
+                if keys is not None and hasattr(store, "put_profile"):
+                    store.put_profile(keys[j], pr.to_json())
+        states = stack_profile_states(profiles, pol.m, g.n)
+        g._spec_profile = states
+        return states
+
+    def _group_doc_finals(self, g: PatternGroup, corpus: np.ndarray) -> tuple:
+        """Speculative path: exact final states of every (pattern-in-group,
+        doc) from each pattern's start — (Pg, D) int32 plus the group's
+        :class:`~repro.speculative.SpeculationStats`.
+
+        Bit-identical to reading the enumeration mappings off at the start
+        states: the executor only adopts chunk results whose entry state it
+        verified exactly, and any lane the repair bound leaves unresolved is
+        recomputed here through the enumeration executor (always the local
+        XLA one — exactness makes the backend choice invisible, and the
+        fallback subset's ragged doc count doesn't fit the mesh contract).
+        The ragged tail advances the finals sequentially, mirroring
+        ``_group_doc_mappings``.
+        """
+        pol = self.plan.speculation
+        n_chunks = self.plan.chunking.n_chunks
+        D, L = corpus.shape
+        head_len = L - (L % n_chunks)
+        starts = g.bank.starts.astype(np.int32)
+        Pg = len(g.indices)
+        stats = SpeculationStats()
+        if head_len:
+            spec = self._speculation_profile(g, corpus)
+            head = corpus[:, :head_len]
+            if self.mesh is not None:
+                n_dev = int(np.prod(list(self.mesh.shape.values())))
+                if D % n_dev:
+                    raise ValueError(
+                        f"shard_map distribution needs doc count ({D}) "
+                        f"divisible by the mesh's {self.plan.data_axis} "
+                        f"size ({n_dev})"
+                    )
+                out = g._spec_dist_fn(
+                    g.tables, jnp.asarray(spec), jnp.asarray(starts),
+                    jnp.asarray(head),
+                )
+            else:
+                out = speculative_bank_finals(
+                    g.tables, jnp.asarray(spec), jnp.asarray(starts),
+                    jnp.asarray(head), n_chunks=n_chunks,
+                    max_rounds=pol.max_repair_rounds,
+                )
+            finals, resolved, hit_n, repaired, rounds = (
+                np.asarray(x) for x in out
+            )
+            stats = SpeculationStats(
+                total_chunks=Pg * D * n_chunks,
+                hit_chunks=int(hit_n),
+                repaired_chunks=int(repaired),
+                repair_rounds=int(rounds),
+                fallback_lanes=int(np.sum(~resolved)),
+            )
+            if not resolved.all():
+                finals = np.array(finals)  # device views are read-only
+                bad = np.flatnonzero(~resolved.all(axis=0))
+                maps = np.asarray(X.bank_doc_mappings(
+                    g.tables, jnp.asarray(np.ascontiguousarray(head[bad])),
+                    n_chunks,
+                ))
+                exact = np.take_along_axis(
+                    maps, starts[:, None, None].astype(np.int64), axis=2
+                )[:, :, 0]
+                finals[:, bad] = np.where(
+                    resolved[:, bad], finals[:, bad], exact
+                )
+        else:
+            finals = np.repeat(starts[:, None], D, axis=1)
+        if head_len < L:
+            finals = X.advance_states_sequential(
+                g.bank.tables, finals, corpus[:, head_len:]
+            )
+        return finals, stats
+
     # -- public scan API ----------------------------------------------------
 
     def scan(self, docs) -> ScanResult:
@@ -470,6 +663,7 @@ class Scanner:
         enc = self._encode_docs(docs)
         D = len(enc)
         hits = np.zeros((self.n_patterns, D), dtype=bool)
+        spec_stats: SpeculationStats | None = None
         # Batch docs of equal length together (one fixed-shape program each).
         by_len: dict = {}
         for d, e in enumerate(enc):
@@ -478,22 +672,28 @@ class Scanner:
             corpus = np.stack([enc[d] for d in idxs]) if L else \
                 np.zeros((len(idxs), 0), dtype=np.int32)
             for g in self.groups:
-                if L:
-                    maps = self._group_doc_mappings(g, corpus)  # (Pg, Dg, n)
+                if g.mode == "speculative" and L:
+                    finals, st = self._group_doc_finals(g, corpus)
+                    spec_stats = st if spec_stats is None \
+                        else spec_stats.merged(st)
                 else:
-                    maps = np.broadcast_to(
-                        np.arange(g.n, dtype=np.int32),
-                        (len(g.indices), len(idxs), g.n),
-                    )
-                starts = g.bank.starts                          # (Pg,)
-                finals = np.take_along_axis(
-                    maps, starts[:, None, None].astype(np.int64), axis=2
-                )[:, :, 0]                                      # (Pg, Dg)
+                    if L:
+                        maps = self._group_doc_mappings(g, corpus)
+                    else:
+                        maps = np.broadcast_to(
+                            np.arange(g.n, dtype=np.int32),
+                            (len(g.indices), len(idxs), g.n),
+                        )
+                    starts = g.bank.starts                      # (Pg,)
+                    finals = np.take_along_axis(
+                        maps, starts[:, None, None].astype(np.int64), axis=2
+                    )[:, :, 0]                                  # (Pg, Dg)
                 acc = np.take_along_axis(
                     g.bank.accepting, finals.astype(np.int64), axis=1
                 )
                 hits[np.ix_(g.indices, np.asarray(idxs))] = acc
-        return ScanResult(hits=hits, ids=self.ids)
+        self.last_speculation = spec_stats
+        return ScanResult(hits=hits, ids=self.ids, speculation=spec_stats)
 
     def census(self, docs) -> np.ndarray:
         """Per-pattern hit counts over a corpus, (P,) int32."""
@@ -559,7 +759,13 @@ class Scanner:
     def mapping(self, doc) -> np.ndarray:
         """Transition function of one whole input under every pattern,
         (P, n_max) int32 on the scanner's padded layout (identity beyond
-        each pattern's true state count)."""
+        each pattern's true state count).
+
+        Speculative-mode groups compute their mapping through the
+        enumeration executor here: a full transition function inherently
+        needs all n states, so there is nothing for speculation to skip.
+        ``scan``/``stream`` are the speculative fast paths.
+        """
         enc = self._encode_docs([doc])[0]
         out = np.broadcast_to(
             np.arange(self.n_max, dtype=np.int32),
@@ -653,9 +859,24 @@ class Scanner:
             extra = ""
             if g.mode == "sfa":
                 extra = f", S_max={int(g.deltas.shape[1])}"
+            elif g.mode == "speculative":
+                extra = (f", m={self.plan.speculation.m}, "
+                         f"source={self.plan.speculation.profile_source!r}"
+                         if isinstance(self.plan.speculation.profile_source,
+                                       str)
+                         else f", m={self.plan.speculation.m}, "
+                              f"source=explicit")
             lines.append(
                 f"  group[{g.mode}]: {len(g.indices)} pattern(s), "
                 f"n_max={g.n}{extra}"
+            )
+        s = self.last_speculation
+        if s is not None:
+            lines.append(
+                f"  speculation: hit rate {s.hit_rate:.3f} "
+                f"({s.hit_chunks}/{s.total_chunks} chunks), "
+                f"{s.repaired_chunks} repaired in {s.repair_rounds} "
+                f"round(s), {s.fallback_lanes} fallback lane(s)"
             )
         return "\n".join(lines)
 

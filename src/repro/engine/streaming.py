@@ -25,11 +25,12 @@ bounded by one block regardless of document length.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import TYPE_CHECKING
+from typing import TYPE_CHECKING, Any
 
 import jax.numpy as jnp
 import numpy as np
 
+from ..speculative import SpeculationStats, speculative_bank_finals
 from . import executors as X
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -38,14 +39,25 @@ if TYPE_CHECKING:  # pragma: no cover
 
 @dataclass(frozen=True)
 class StreamResult:
-    """Outcome of a streamed scan over one concatenated input."""
+    """Outcome of a streamed scan over one concatenated input.
 
-    mapping: np.ndarray       # (P, n_max) — transition function of the input
-    final_states: np.ndarray  # (P,) — mapping applied to each pattern's start
+    ``mapping`` is the input's whole transition function — except when any
+    pattern group ran speculatively, where it is ``None``: the speculative
+    executor tracks exact *states*, not whole functions (that is the
+    saving), so only ``final_states``/``accepted`` are available. They are
+    bit-identical to the enumeration stream's; the corpus-job streaming
+    path (:func:`repro.scanservice.scan_shard`) consumes ``accepted`` only.
+    ``speculation`` carries the stream's aggregated
+    :class:`~repro.speculative.SpeculationStats` (None without speculation).
+    """
+
+    mapping: np.ndarray | None  # (P, n_max) — None under speculation
+    final_states: np.ndarray  # (P,) — exact final state per pattern
     accepted: np.ndarray      # (P,) bool
     n_symbols: int
     ids: tuple
     single: bool = False
+    speculation: Any = None
 
     @property
     def accepts(self):
@@ -66,13 +78,26 @@ class StreamSession:
         self._n_symbols = 0
         self._finished = False
         # Running prefix per group: the function-monoid fold of everything
-        # consumed so far, carried across block calls.
+        # consumed so far, carried across block calls. Speculative groups
+        # carry exact running *states* instead of whole functions — the
+        # executor validates each block's chunks against them directly, so
+        # the stream never pays the n-wide function composition.
         self._prefix = [
             np.broadcast_to(
                 np.arange(g.n, dtype=np.int32), (len(g.indices), g.n)
             ).copy()
             for g in scanner.groups
         ]
+        self._state = [
+            g.bank.starts.astype(np.int32).copy()
+            if g.mode == "speculative" else None
+            for g in scanner.groups
+        ]
+        self._spec_prof = [None] * len(scanner.groups)
+        self._spec_stats: SpeculationStats | None = None
+        self._has_spec = any(
+            g.mode == "speculative" for g in scanner.groups
+        )
 
     # -- feeding ------------------------------------------------------------
 
@@ -94,9 +119,55 @@ class StreamSession:
     def _advance(self, block: np.ndarray) -> None:
         """Fold one full (n_chunks * block_len) block into the prefix."""
         for gi, g in enumerate(self.scanner.groups):
+            if g.mode == "speculative":
+                self._advance_speculative(gi, g, block)
+                continue
             bm = self._block_mapping(g, block)              # (Pg, n)
             # combine(prefix, block): apply prefix first, then the block.
             self._prefix[gi] = np.take_along_axis(bm, self._prefix[gi], axis=1)
+
+    def _advance_speculative(self, gi: int, g: "PatternGroup",
+                             block: np.ndarray) -> None:
+        """Advance a speculative group's exact running states through one
+        block: the block is one D=1 "document" whose per-pattern start
+        states are the stream's current states. Unresolved lanes fall back
+        to the block's enumeration mapping applied at the entry state —
+        exact either way. The hot-state profile is resolved once per
+        session, from the first block (it is advisory; staleness only
+        costs repairs)."""
+        sc = self.scanner
+        pol = sc.plan.speculation
+        prof = self._spec_prof[gi]
+        if prof is None:
+            prof = sc._speculation_profile(g, block[None, :])
+            self._spec_prof[gi] = prof
+        out = speculative_bank_finals(
+            g.tables, jnp.asarray(prof), jnp.asarray(self._state[gi]),
+            jnp.asarray(block[None, :]), n_chunks=self.n_chunks,
+            max_rounds=pol.max_repair_rounds,
+        )
+        finals, resolved, hit_n, repaired, rounds = (
+            np.asarray(x) for x in out
+        )
+        st = SpeculationStats(
+            total_chunks=len(g.indices) * self.n_chunks,
+            hit_chunks=int(hit_n),
+            repaired_chunks=int(repaired),
+            repair_rounds=int(rounds),
+            fallback_lanes=int(np.sum(~resolved)),
+        )
+        states = finals[:, 0].astype(np.int32)
+        if not resolved.all():
+            bm = np.asarray(X.match_bank_parallel(
+                g.tables, jnp.asarray(block), self.n_chunks
+            ))
+            rows = np.arange(len(g.indices))
+            exact = bm[rows, self._state[gi]]
+            bad = ~resolved[:, 0]
+            states[bad] = exact[bad]
+        self._state[gi] = states
+        self._spec_stats = st if self._spec_stats is None \
+            else self._spec_stats.merged(st)
 
     def _block_mapping(self, g: "PatternGroup", block: np.ndarray) -> np.ndarray:
         backend = self.scanner.plan.backend
@@ -134,23 +205,34 @@ class StreamSession:
         sc = self.scanner
         if len(self._buf):
             for gi, g in enumerate(sc.groups):
-                self._prefix[gi] = X.compose_sequential(
-                    g.bank.tables, self._prefix[gi], self._buf
-                )
+                if g.mode == "speculative":
+                    self._state[gi] = X.advance_states_sequential(
+                        g.bank.tables, self._state[gi][:, None],
+                        self._buf[None, :],
+                    )[:, 0]
+                else:
+                    self._prefix[gi] = X.compose_sequential(
+                        g.bank.tables, self._prefix[gi], self._buf
+                    )
             self._buf = np.zeros(0, dtype=np.int32)
 
-        mapping = np.broadcast_to(
+        mapping = None if self._has_spec else np.broadcast_to(
             np.arange(sc.n_max, dtype=np.int32), (sc.n_patterns, sc.n_max)
         ).copy()
         final_states = np.zeros(sc.n_patterns, dtype=np.int32)
         accepted = np.zeros(sc.n_patterns, dtype=bool)
         for gi, g in enumerate(sc.groups):
-            pref = self._prefix[gi]                          # (Pg, n_g)
-            mapping[g.indices, : g.n] = pref
             rows = np.arange(len(g.indices))
-            finals = pref[rows, g.bank.starts]
+            if g.mode == "speculative":
+                finals = self._state[gi]
+            else:
+                pref = self._prefix[gi]                      # (Pg, n_g)
+                if mapping is not None:
+                    mapping[g.indices, : g.n] = pref
+                finals = pref[rows, g.bank.starts]
             final_states[g.indices] = finals
             accepted[g.indices] = g.bank.accepting[rows, finals]
+        sc.last_speculation = self._spec_stats or sc.last_speculation
         return StreamResult(
             mapping=mapping,
             final_states=final_states,
@@ -158,4 +240,5 @@ class StreamSession:
             n_symbols=self._n_symbols,
             ids=sc.ids,
             single=sc.single,
+            speculation=self._spec_stats,
         )

@@ -102,6 +102,7 @@ class SchedulerStats:
     union_docs: int = 0       # documents actually scanned
     scanner_memo_hits: int = 0   # union batches answered by the scanner memo
     scanner_evictions: int = 0   # scanners dropped by the memo's LRU lid
+    speculative_patterns: int = 0  # union columns routed to speculation
 
 
 class _Request:
@@ -246,6 +247,13 @@ class BatchScheduler:
             self.stats.max_coalesced = max(self.stats.max_coalesced, len(batch))
             self.stats.union_patterns += len(union_specs)
             self.stats.union_docs += len(union_docs)
+            # Over-budget patterns route to the speculative tier through the
+            # plan's auto mode (see repro.speculative); count what this
+            # batch actually served speculatively.
+            self.stats.speculative_patterns += sum(
+                1 for m in scanner.pattern_modes.values()
+                if m == "speculative"
+            )
 
             for req in batch:
                 rows = np.asarray([col_of[k] for k in req.keys])

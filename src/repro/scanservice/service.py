@@ -61,6 +61,14 @@ class ScanService:
                     cache=self.cache, method="batched"
                 ),
             ).validate()
+        if self.store is not None and \
+                self.plan.speculation.profile_source == "sample":
+            # A persistent store upgrades speculation to persisted hot-state
+            # profiles (keyed like the SFA artifacts): patterns profiled by
+            # any earlier process speculate well from the first request.
+            self.plan = self.plan.with_(
+                speculation=self.plan.speculation.with_(profile_source="store")
+            )
         self.scheduler = BatchScheduler(
             self.plan, driver=driver, window_s=window_s, max_batch=max_batch,
             max_scanners=max_scanners,

@@ -168,6 +168,43 @@ class ArtifactStore:
             key, {"version": STORE_VERSION, "kind": "blowup", "budget": int(budget)}
         )
 
+    # -- hot-state profiles ---------------------------------------------------
+    #
+    # Speculative scanning's per-pattern boundary-state profiles persist
+    # next to the SFA artifacts under the same ``dfa_cache_key`` — a corpus
+    # profiled once seeds speculation for every later process. Profiles are
+    # tiny JSON documents in their own ``profiles/`` subtree (one directory
+    # level deeper than artifacts, so the artifact walks — ``entries``,
+    # ``keys``, ``total_bytes``, eviction — never see them), written with
+    # the same atomic replace and the same read-anything-broken-as-a-miss
+    # contract. They are advisory data: a lost or stale profile costs
+    # repair rounds on the next scan, never correctness.
+
+    def _profile_path(self, key: str) -> Path:
+        return self.root / "profiles" / key[:2] / f"{key}.json"
+
+    def get_profile(self, key: str):
+        """-> the persisted profile dict for ``key``, or None. Unreadable
+        or foreign-version profiles are a miss, never an error."""
+        try:
+            meta = json.loads(self._profile_path(key).read_text())
+        except (OSError, ValueError):
+            return None
+        if not isinstance(meta, dict) or meta.get("version") != STORE_VERSION \
+                or meta.get("kind") != "profile":
+            return None
+        return meta
+
+    def put_profile(self, key: str, profile: dict) -> None:
+        """Persist one hot-state profile (idempotent; last write wins)."""
+        path = self._profile_path(key)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        meta = {"version": STORE_VERSION, "kind": "profile", **profile}
+        self._atomic_write(path, lambda f: f.write(json.dumps(meta).encode()))
+
+    def profile_keys(self) -> list:
+        return sorted(p.stem for p in self.root.glob("profiles/*/*.json"))
+
     def entries(self):
         """Yield ``(key, kind, payload)`` for every readable artifact in
         LRU order (least-recently-touched first) — the warm-start preload

@@ -1,0 +1,58 @@
+"""Speculative scanning: parallel matching for blowup-regime patterns.
+
+The paper's SFA construction is bounded by the ``n^n`` state blowup, so any
+pattern over the plan's ``sfa_state_budget`` used to fall back to full
+``n``-state enumeration per chunk — the engine's slowest path for exactly the
+large automata users most want parallelized. The speculative subsystem is the
+third way (*A Speculative Parallel DFA Membership Test*, arXiv:1210.5093, and
+*PaREM*, arXiv:1412.1741): instead of running all ``n`` states per chunk,
+run each chunk from a small set of ``m`` *likely* boundary states — a
+hot-state profile measured from a sampled prefix of the input or persisted
+corpus statistics — then validate every chunk's speculated entry against its
+predecessor's exact exit and re-scan only the chunks whose speculation
+missed. Cost is ``O(L·m)`` plus one chunk per repair instead of ``O(L·n)``,
+and the result is **bit-identical to enumeration by construction**: a chunk's
+result is only ever used when its entry state was verified exactly, and
+lanes the repair bound leaves unresolved fall back to the enumeration
+executor.
+
+Layout:
+
+* :mod:`.profile`  — the hot-state profiler (:class:`HotStateProfile`,
+  :func:`profile_hot_states`): top-``m`` boundary-state distributions per
+  pattern, persistable next to SFA artifacts in the
+  :class:`repro.scanservice.ArtifactStore`;
+* :mod:`.executor` — the jitted speculative executor
+  (:func:`speculative_bank_finals`): one batched pass over a stacked
+  ``(m, chunks)`` state axis, an ``O(C)`` validation scan, and a fixed-shape
+  repair loop bounded by ``max_repair_rounds``, plus the ``shard_map``
+  distributed builder; :class:`SpeculationStats` reports hit rate, repair
+  rounds, and repaired/fallback counts per scan.
+
+The engine plumbing lives in :mod:`repro.engine`:
+``ScanPlan(mode="speculative", speculation=SpeculationPolicy(...))`` forces
+every pattern through this subsystem, and ``mode="auto"`` routes a pattern
+here when its SFA blows the state budget *and* its DFA has at least
+``SpeculationPolicy.auto_states`` states — the tier between sfa and
+enumeration.
+"""
+
+from .executor import (
+    SpeculationStats,
+    distributed_speculative_finals_fn,
+    speculative_bank_finals,
+)
+from .profile import (
+    HotStateProfile,
+    profile_hot_states,
+    stack_profile_states,
+)
+
+__all__ = [
+    "HotStateProfile",
+    "SpeculationStats",
+    "distributed_speculative_finals_fn",
+    "profile_hot_states",
+    "speculative_bank_finals",
+    "stack_profile_states",
+]

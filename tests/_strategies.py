@@ -13,11 +13,15 @@ import ``given, settings, st`` from here:
 * without it, ``@given`` runs the test body over deterministic seeded-random
   examples (seed derived from the test name + example index, so failures
   reproduce across runs and machines) for the strategies the suite actually
-  uses: ``integers``, ``sampled_from``, ``lists``, ``text``, ``booleans``,
-  ``tuples``, ``one_of``, ``dictionaries``.
+  uses: ``integers``, ``floats``, ``sampled_from``, ``lists``, ``text``,
+  ``booleans``, ``tuples``, ``one_of``, ``dictionaries``.
 
-The fallback deliberately does NOT shrink — it exists to keep the properties
-exercised offline, not to replace hypothesis.
+The fallback deliberately does NOT do general shrinking — it exists to keep
+the properties exercised offline, not to replace hypothesis. The one
+exception is ``sampled_from``, whose failing draws re-try earlier elements
+of the sample (hypothesis' own ordering convention: put simpler elements
+first) so a falsifying example reports the simplest sampled value that
+still fails — cheap, and it makes mode/backend matrix failures readable.
 """
 
 from __future__ import annotations
@@ -35,11 +39,16 @@ except ImportError:
     _MAX_FALLBACK_EXAMPLES = 50  # cap: no shrinker, so bulk examples buy little
 
     class _Strategy:
-        def __init__(self, draw):
+        def __init__(self, draw, shrink=None):
             self._draw = draw
+            self._shrink = shrink
 
         def draw(self, rng: _random.Random):
             return self._draw(rng)
+
+        def shrink(self, value):
+            """Candidate simpler replacements, simplest first (default none)."""
+            return self._shrink(value) if self._shrink is not None else []
 
     class _StModule:
         """The subset of ``hypothesis.strategies`` this suite uses."""
@@ -49,9 +58,29 @@ except ImportError:
             return _Strategy(lambda rng: rng.randint(min_value, max_value))
 
         @staticmethod
+        def floats(min_value=0.0, max_value=1.0, *, allow_nan=False,
+                   allow_infinity=False, **_ignored):
+            """Bounded uniform floats. The fallback never produces NaN/inf
+            (pass explicit bounds — the suite's float properties all do)."""
+            lo = 0.0 if min_value is None else float(min_value)
+            hi = 1.0 if max_value is None else float(max_value)
+            if not lo <= hi:
+                raise ValueError(f"floats needs min_value <= max_value, "
+                                 f"got [{lo}, {hi}]")
+            return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+        @staticmethod
         def sampled_from(elements):
             elements = list(elements)
-            return _Strategy(lambda rng: rng.choice(elements))
+
+            def shrink(value):
+                try:
+                    idx = elements.index(value)
+                except ValueError:
+                    return []
+                return elements[:idx]
+
+            return _Strategy(lambda rng: rng.choice(elements), shrink)
 
         @staticmethod
         def booleans():
@@ -102,6 +131,27 @@ except ImportError:
 
     st = _StModule()
 
+    def _shrink_failing(fn, strategies, kwargs):
+        """Greedy per-argument shrink: swap in each strategy's simpler
+        candidates (``sampled_from`` offers earlier sample elements) while
+        the test keeps failing. Terminates because every accepted candidate
+        strictly precedes the current value in its sample order."""
+        improved = True
+        while improved:
+            improved = False
+            for k, s in strategies.items():
+                for cand in s.shrink(kwargs[k]):
+                    trial = {**kwargs, k: cand}
+                    try:
+                        fn(**trial)
+                    except Exception:
+                        kwargs = trial
+                        improved = True
+                        break
+                if improved:
+                    break
+        return kwargs
+
     def given(**strategies):
         def decorate(fn):
             def wrapper():
@@ -115,6 +165,7 @@ except ImportError:
                     try:
                         fn(**kwargs)
                     except Exception as e:
+                        kwargs = _shrink_failing(fn, strategies, kwargs)
                         raise AssertionError(
                             f"falsifying example ({i + 1}/{n}): "
                             f"{fn.__name__}(**{kwargs!r})"
