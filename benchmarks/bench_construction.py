@@ -67,9 +67,10 @@ def run(emit) -> None:
 # --------------------------------------------------------------------------
 
 BANK_SIZES = (4, 16, 64)
-# Smoke includes P=16: the acceptance bar ("batched >= loop at P=16") and
-# the CI bench-trend gate both read that row.
-SMOKE_BANK_SIZES = (4, 16)
+# Smoke runs every bank size the trend gate covers: the gate compares rows
+# individually (a P=4 win must not mask a P=64 regression), so dropping
+# P=64 from smoke would silently drop it from CI's gate too.
+SMOKE_BANK_SIZES = (4, 16, 64)
 BANK_BUDGET = 512          # the Scanner's default SFA state budget
 BANK_TILE = 64
 
@@ -127,6 +128,10 @@ def run_bank(emit) -> None:
             "batched_speedup": t_loop / t_batched,
             "rounds": int(res.stats.rounds),
             "blown": int(res.blown.sum()),
+            # Per-size-bucket rounds/blown: a P=64 row that says "13 rounds,
+            # 10 blown" hides *which* size class blew up and where the
+            # rounds went; the bucketed driver accounts both per bucket.
+            "buckets": [bs.to_json() for bs in res.stats.buckets],
         }
         report["results"].append(row)
         emit(f"bank/P{P}/loop_s", t_loop * 1e6,
@@ -135,5 +140,9 @@ def run_bank(emit) -> None:
         emit(f"bank/P{P}/batched_s", t_batched * 1e6,
              f"{row['batched_speedup']:.2f}x_vs_loop,"
              f"rounds={row['rounds']},blown={row['blown']}")
+        for bs in res.stats.buckets:
+            emit(f"bank/P{P}/bucket_le{bs.edge}", bs.wall_time_s * 1e6,
+                 f"patterns={bs.n_patterns},n_max={bs.n_max},"
+                 f"rounds={bs.rounds},blown={bs.blown}")
     out = Path(__file__).resolve().parents[1] / "BENCH_construction.json"
     out.write_text(json.dumps(report, indent=2) + "\n")

@@ -15,13 +15,25 @@ Both gates compare same-machine **ratios**, never absolute seconds, so they
 transfer across runner generations; mixing report kinds between baseline
 and fresh is an input error.
 
+Every row present in the baseline must also be present in the fresh report:
+a fresh run that silently drops a row (say, smoke stops running P=64) would
+otherwise turn the gate off for exactly the regression it was added to
+catch. Rows only the fresh report has are fine (new benchmarks don't need a
+baseline yet).
+
+``--min-speedup ROW=VALUE`` (repeatable) adds an *absolute* floor on top of
+the relative gate: the fresh ratio for ``ROW`` must be at least ``VALUE``
+regardless of what the baseline says — the "P=4 win must not mask a P=64
+loss" guard, pinned to a hard number instead of a drifting baseline.
+
 Exit codes: 0 = within tolerance, 1 = regression (or nothing comparable —
 an empty comparison is itself a regression of the gate), 2 = unusable
 input files.
 
 Usage::
 
-    python benchmarks/check_trend.py BASELINE.json FRESH.json [--max-regression 2.0]
+    python benchmarks/check_trend.py BASELINE.json FRESH.json \
+        [--max-regression 2.0] [--min-speedup P=64=1.1]
 """
 
 from __future__ import annotations
@@ -75,7 +87,23 @@ def main() -> None:
     ap.add_argument("--max-regression", type=float, default=2.0,
                     help="fail when baseline_ratio / fresh_ratio exceeds "
                          "this factor for any comparable row")
+    ap.add_argument("--min-speedup", action="append", default=[],
+                    metavar="ROW=VALUE",
+                    help="absolute floor on one row's fresh ratio, e.g. "
+                         "'P=64=1.1' (repeatable; row must exist)")
     args = ap.parse_args()
+
+    floors = {}
+    for spec in args.min_speedup:
+        label, _, value = spec.rpartition("=")
+        try:
+            floors[label] = float(value)
+        except ValueError:
+            label = ""
+        if not label:
+            print(f"ERROR: --min-speedup wants ROW=VALUE, got {spec!r}",
+                  file=sys.stderr)
+            sys.exit(2)
 
     base_kind, base = _rows(args.baseline)
     fresh_kind, fresh = _rows(args.fresh)
@@ -83,6 +111,12 @@ def main() -> None:
         print(f"ERROR: report kinds differ: {args.baseline} is {base_kind}, "
               f"{args.fresh} is {fresh_kind}", file=sys.stderr)
         sys.exit(2)
+    missing = sorted(set(base) - set(fresh)) + sorted(set(floors) - set(fresh))
+    if missing:
+        print(f"ERROR: rows {missing} are gated (baseline or --min-speedup) "
+              f"but absent from {args.fresh} — a dropped row is a dropped "
+              "gate", file=sys.stderr)
+        sys.exit(1)
     shared = sorted(set(base) & set(fresh))
     if not shared:
         print(f"ERROR: no comparable rows between {args.baseline} "
@@ -92,17 +126,25 @@ def main() -> None:
 
     failed = False
     width = max(len(k) for k in shared)
-    print(f"{'row':<{width}} {'baseline':>10} {'fresh':>10} {'ratio':>7}")
+    print(f"{'row':<{width}} {'baseline':>10} {'fresh':>10} {'ratio':>7} "
+          f"{'floor':>7}")
     for k in shared:
         ratio = base[k] / fresh[k] if fresh[k] > 0 else float("inf")
-        verdict = "OK" if ratio <= args.max_regression else "REGRESSION"
+        floor = floors.get(k)
+        verdict = "OK"
+        if ratio > args.max_regression:
+            verdict = "REGRESSION"
+        elif floor is not None and fresh[k] < floor:
+            verdict = "BELOW FLOOR"
+        floor_s = f"{floor:.2f}x" if floor is not None else "-"
         print(f"{k:<{width}} {base[k]:>9.2f}x {fresh[k]:>9.2f}x "
-              f"{ratio:>6.2f}x  {verdict}")
+              f"{ratio:>6.2f}x {floor_s:>7}  {verdict}")
         if verdict != "OK":
             failed = True
     if failed:
-        print(f"ERROR: {base_kind} trend regressed by more than "
-              f"{args.max_regression}x — see rows above", file=sys.stderr)
+        print(f"ERROR: {base_kind} trend regressed (>{args.max_regression}x "
+              "vs baseline, or under a --min-speedup floor) — see rows "
+              "above", file=sys.stderr)
         sys.exit(1)
 
 

@@ -20,6 +20,10 @@ Prints ``name,us_per_call,derived`` CSV. Figure mapping:
 
 ``--smoke`` caps sizes/iterations (see benchmarks/_config.py) so CI can run
 the whole harness as a smoke job without burning minutes on full figures.
+``--profile`` wraps each module in ``jax.profiler.trace`` and writes one
+trace directory per module under ``BENCH_traces/`` (the profiling harness:
+open in TensorBoard/Perfetto to see where a bench's wall time went; the
+bench-smoke CI job uploads the smoke-size traces as an artifact).
 A benchmark module that fails to *import* (missing optional dep, broken
 bench) is skipped with a warning — it costs its own suites, never the sweep.
 But a sweep where **every** module failed to import ran nothing at all:
@@ -75,12 +79,23 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="scaled-down sizes/iterations (CI smoke job)")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap each bench module in jax.profiler.trace, "
+                         "writing one trace directory per module under "
+                         "BENCH_traces/ (open with TensorBoard or Perfetto)")
     args = ap.parse_args()
 
     from benchmarks import _config
 
     if args.smoke:
         _config.set_smoke(True)
+
+    trace_root = None
+    if args.profile:
+        from pathlib import Path
+
+        trace_root = Path(__file__).resolve().parents[1] / "BENCH_traces"
+        trace_root.mkdir(exist_ok=True)
 
     modules, skipped = _resolve_suites()
     if not modules:
@@ -99,13 +114,27 @@ def main() -> None:
     for mod_name, suites in modules:
         status = "ok"
         t0 = time.perf_counter()
-        for suite in suites:
-            try:
-                suite(emit)
-            except Exception:  # keep the harness going; report at the end
-                failures += 1
-                status = "FAILED"
-                traceback.print_exc()
+
+        def run_suites():
+            nonlocal failures, status
+            for suite in suites:
+                try:
+                    suite(emit)
+                except Exception:  # keep the harness going; report at the end
+                    failures += 1
+                    status = "FAILED"
+                    traceback.print_exc()
+
+        if trace_root is not None:
+            import jax
+
+            # One trace directory per module: a whole-sweep trace would be
+            # unreadably long, and a failed module still leaves the others'
+            # traces intact.
+            with jax.profiler.trace(str(trace_root / mod_name)):
+                run_suites()
+        else:
+            run_suites()
         summary.append((mod_name, status, time.perf_counter() - t0))
 
     width = max(len(name) for name, _, _ in summary)

@@ -36,6 +36,9 @@ from .cache import (
     shared_cache,
 )
 from .batched import (
+    BUCKETINGS,
+    EXPAND_BACKENDS,
+    FINGERPRINT_BACKENDS,
     RoundSchedule,
     construct_bank,
     construct_sfa_jax,
@@ -56,15 +59,20 @@ from .types import (
     SFA,
     BankConstructionResult,
     BankStats,
+    BucketStats,
     FingerprintCollision,
     SFAStats,
     StateBlowup,
 )
 
 __all__ = [
+    "BUCKETINGS",
     "BankConstructionResult",
     "BankStats",
+    "BucketStats",
     "CacheInfo",
+    "EXPAND_BACKENDS",
+    "FINGERPRINT_BACKENDS",
     "ExhaustiveStore",
     "FingerprintCollision",
     "FingerprintScanStore",

@@ -74,6 +74,7 @@ from .cache import round_compile_cache
 from .types import (
     BankConstructionResult,
     BankStats,
+    BucketStats,
     SFA,
     SFAStats,
     FingerprintCollision,
@@ -86,6 +87,26 @@ _U32MAX = jnp.uint32(0xFFFFFFFF)
 #: ``"pallas"`` on a real TPU runtime and ``"xla"`` elsewhere (interpret-mode
 #: Pallas would dominate a CPU round).
 FINGERPRINT_BACKENDS = ("auto", "xla", "pallas")
+
+#: Expansion-stage backends of the batched round: ``"xla"`` is the fused
+#: ``jnp.take`` gather, ``"pallas"`` the one-hot MXU gather kernel
+#: (``kernels.ops.expand_frontier_bank``, bit-identical), ``"auto"`` picks
+#: pallas on a TPU runtime and xla elsewhere.
+EXPAND_BACKENDS = ("auto", "xla", "pallas")
+
+#: Size-bucketing modes of ``construct_bank``. ``"size"`` always partitions
+#: the bank by DFA state count, ``"off"`` never does, ``"auto"`` partitions
+#: when the bank is big and skewed enough for bucketing to pay (at least
+#: ``_BUCKET_AUTO_MIN_P`` patterns spreading over >= 2 merged buckets).
+BUCKETINGS = ("auto", "size", "off")
+
+#: Buckets smaller than this merge into a neighbor: a compiled round shape
+#: has to amortize over enough patterns to beat riding along padded.
+_BUCKET_MIN_PATTERNS = 4
+
+#: ``bucketing="auto"`` leaves banks smaller than this unbucketed — the
+#: round dispatch overhead of extra sub-banks outweighs padding savings.
+_BUCKET_AUTO_MIN_P = 8
 
 #: Capacity tiers grow by this factor between schedule entries. Fixed (not a
 #: knob): fewer, coarser tiers mean fewer compiled shapes, and results are
@@ -137,24 +158,27 @@ def _masked_fingerprint(states, weights, word_mask, limbs):
     return _fold_words(words, weights, limbs)
 
 
-def _expand(
-    table,            # (n, k) int32 — padded transition table
+def _frontier_tile(
     states_buf,       # (C, n) int32
     n_states,         # () int32
     frontier_lo,      # () int32
     active,           # () bool — this pattern still advancing
-    *, tile: int, n: int, k: int,
+    *, tile: int, n: int,
 ):
-    """Stages 1/2: slice the frontier tile, expand frontier × alphabet in
-    one fused gather. -> (cand (T·k, n), cand_valid (T·k,))."""
+    """Stage 1: slice the frontier tile and its row-validity mask.
+    -> (ft (T, n), row_valid (T,))."""
     ft = jax.lax.dynamic_slice(states_buf, (frontier_lo, 0), (tile, n))
     row_ids = frontier_lo + jnp.arange(tile, dtype=jnp.int32)
     row_valid = (row_ids < n_states) & active            # (T,)
-    # next[f, a, q] = δ(f[q], a): one gather, symbol axis materialized.
-    cand = table[ft]                                     # (T, n, k)
-    cand = jnp.swapaxes(cand, 1, 2).reshape(tile * k, n)  # row-major (f, a)
-    cand_valid = jnp.repeat(row_valid, k)                # (T·k,)
-    return cand, cand_valid
+    return ft, row_valid
+
+
+def _gather_expand(table, ft, *, tile: int, n: int, k: int):
+    """Stage 2, XLA backend: expand frontier × alphabet in one fused gather.
+    ``next[f, a, q] = δ(f[q], a)``, symbol axis materialized, row-major
+    (frontier, symbol) candidate order. -> (T·k, n)."""
+    cand = jnp.take(table, ft, axis=0)                   # (T, n, k)
+    return jnp.swapaxes(cand, 1, 2).reshape(tile * k, n)
 
 
 def _merge(
@@ -253,14 +277,22 @@ def _merge(
 def _bucket_round(tables, states, fp_hi, fp_lo, delta, n_states, frontier,
                   active, weights, limbs, word_masks,
                   *, tile: int, n: int, k: int, capacity: int,
-                  fp_backend: str, interpret: bool):
-    """One bulk-synchronous round over a bucket of patterns: expand, then
-    fingerprint (selected backend), then sort-merge — stages 1–5 above,
-    batched over the bucket axis."""
-    expand = functools.partial(_expand, tile=tile, n=n, k=k)
-    cand, cand_valid = jax.vmap(expand)(
-        tables, states, n_states, frontier, active
-    )
+                  fp_backend: str, expand_backend: str, interpret: bool):
+    """One bulk-synchronous round over a bucket of patterns: expand
+    (selected backend), then fingerprint (selected backend), then
+    sort-merge — stages 1–5 above, batched over the bucket axis."""
+    tiler = functools.partial(_frontier_tile, tile=tile, n=n)
+    ft, row_valid = jax.vmap(tiler)(states, n_states, frontier, active)
+    if expand_backend == "pallas":
+        from ..kernels import ops as kernel_ops
+
+        cand = kernel_ops.expand_frontier_bank(
+            tables, ft, interpret=interpret
+        )                                                    # (B, T·k, n)
+    else:
+        gather = functools.partial(_gather_expand, tile=tile, n=n, k=k)
+        cand = jax.vmap(gather)(tables, ft)
+    cand_valid = jnp.repeat(row_valid, k, axis=1)            # (B, T·k)
     words = pack_states_u32(cand) & word_masks[:, None, :]   # (B, T·k, W)
     if fp_backend == "pallas":
         from ..kernels import ops as kernel_ops
@@ -283,7 +315,7 @@ def _bucket_round(tables, states, fp_hi, fp_lo, delta, n_states, frontier,
 
 
 def _make_local_step(*, tile, n, k, capacity, P, bucket, fp_backend,
-                     interpret):
+                     expand_backend, interpret):
     """The whole local round as ONE function of the full-size bank buffers:
     gather the active bucket, run the round, scatter the bucket back. AOT
     compiling *this* (rather than only the vmapped round) keeps the host
@@ -301,7 +333,8 @@ def _make_local_step(*, tile, n, k, capacity, P, bucket, fp_backend,
                 take(delta), take(n_states), take(frontier), act,
                 take(weights), take(limbs), take(word_masks),
                 tile=tile, n=n, k=k, capacity=capacity,
-                fp_backend=fp_backend, interpret=interpret,
+                fp_backend=fp_backend, expand_backend=expand_backend,
+                interpret=interpret,
             )
         )
         # ``idx`` pads the bucket tail with duplicates of its first entry;
@@ -322,16 +355,17 @@ def _make_local_step(*, tile, n, k, capacity, P, bucket, fp_backend,
 
 
 def _local_step_exe(*, tile, n, k, capacity, P, bucket, fp_backend,
-                    interpret):
+                    expand_backend, interpret):
     """AOT executable of the fused local step for one schedule shape,
     through the process-wide :func:`round_compile_cache`."""
     key = ("local-step", tile, n, k, capacity, P, bucket, fp_backend,
-           interpret)
+           expand_backend, interpret)
 
     def build():
         step = _make_local_step(
             tile=tile, n=n, k=k, capacity=capacity, P=P, bucket=bucket,
-            fp_backend=fp_backend, interpret=interpret,
+            fp_backend=fp_backend, expand_backend=expand_backend,
+            interpret=interpret,
         )
         W = (n + 1) // 2
         s = jax.ShapeDtypeStruct
@@ -356,19 +390,20 @@ def _local_step_exe(*, tile, n, k, capacity, P, bucket, fp_backend,
 
 
 def _sharded_round_exe(mesh, pattern_axis: str, *, tile, n, k, capacity,
-                       fp_backend, interpret):
+                       fp_backend, expand_backend, interpret):
     """shard_map wrapper of the bucket round: every buffer's pattern axis
     shards over ``pattern_axis``; each device closes its bank shard. Cached
     as a jitted callable (jit's own cache keys the per-bucket shapes), so
     repeat constructions reuse both the wrapper and its compiled shapes."""
     key = ("shard-round", mesh, pattern_axis, tile, n, k, capacity,
-           fp_backend, interpret)
+           fp_backend, expand_backend, interpret)
 
     def build():
         def local(*args):
             return _bucket_round(
                 *args, tile=tile, n=n, k=k, capacity=capacity,
-                fp_backend=fp_backend, interpret=interpret,
+                fp_backend=fp_backend, expand_backend=expand_backend,
+                interpret=interpret,
             )
 
         @jax.jit
@@ -498,6 +533,19 @@ def _resolve_fp_backend(backend: str) -> str:
     return backend
 
 
+def _resolve_expand_backend(backend: str) -> str:
+    if backend not in EXPAND_BACKENDS:
+        raise ValueError(
+            f"expand_backend must be one of {EXPAND_BACKENDS}, "
+            f"got {backend!r}"
+        )
+    if backend == "auto":
+        from ..kernels import ops as kernel_ops
+
+        return "xla" if kernel_ops._default_interpret() else "pallas"
+    return backend
+
+
 # --------------------------------------------------------------------------
 # Host-side bank driver
 # --------------------------------------------------------------------------
@@ -516,6 +564,17 @@ def _word_mask(n_true: int, n_pad: int) -> np.ndarray:
 def _default_weight_fn(pattern: int, attempt: int, n_words: int,
                        consts: BarrettConstants) -> np.ndarray:
     return np.asarray(fold_weights_u32(n_words, consts))
+
+
+@functools.lru_cache(maxsize=8192)
+def _seed_fingerprint(n_true: int, poly_low: int) -> tuple:
+    """(hi, lo) fingerprint of the identity mapping over ``n_true`` states —
+    the bank's seed row. Pure function of (size, polynomial), so it is
+    cached: warm re-constructions and same-size patterns inside one bank
+    skip the host-side Barrett fold entirely."""
+    c = BarrettConstants.cached(poly_low)
+    fp = fingerprint_states_np(np.arange(n_true, dtype=np.int32)[None], c)[0]
+    return int(fp[0]), int(fp[1])
 
 
 def _limbs_of(consts: BarrettConstants) -> np.ndarray:
@@ -544,6 +603,8 @@ def construct_bank(
     pattern_axis: str = "pattern",
     on_blowup: str = "skip",
     fingerprint_backend: str = "auto",
+    expand_backend: str = "auto",
+    bucketing: str = "auto",
     bucket_growth: int = 4,
     _weight_fn=None,
 ) -> BankConstructionResult:
@@ -566,9 +627,24 @@ def construct_bank(
     ``fingerprint_backend`` picks the round's fingerprint stage: ``"xla"``
     (fused clmul fold), ``"pallas"`` (the ``kernels.ops.fingerprint_bank``
     Rabin kernel — bit-identical), or ``"auto"`` (pallas on a TPU runtime,
-    xla elsewhere). ``bucket_growth`` sets the active-set bucket shrink
-    factor of the shape schedule (see :func:`round_schedule`): larger means
-    fewer compiled shapes, at the cost of more padding in mid-size rounds.
+    xla elsewhere). ``expand_backend`` picks the frontier-expansion stage
+    the same way (``"xla"`` = fused ``jnp.take`` gather, ``"pallas"`` = the
+    ``kernels.ops.expand_frontier_bank`` one-hot MXU gather, bit-identical).
+    ``bucket_growth`` sets the active-set bucket shrink factor of the shape
+    schedule (see :func:`round_schedule`): larger means fewer compiled
+    shapes, at the cost of more padding in mid-size rounds.
+
+    ``bucketing`` controls *size*-bucketed construction: one padded bank
+    charges every pattern ``n_max``-wide frontier rows, fingerprint words,
+    and full-capacity sort-merges, so size-skewed banks (the P=64 regime)
+    pay mostly for padding. ``"size"`` partitions the bank by DFA state
+    count into O(log n_max) sub-banks (``core.bucketing`` geometric edges,
+    small buckets merged away), each constructed with bucket-local
+    ``n_max``/capacity tiers through the same AOT round cache; ``"off"``
+    keeps one bank; ``"auto"`` buckets only when the bank is big and skewed
+    enough to pay (>= 2 merged buckets over >= 8 patterns). Results are
+    bit-identical across all three — per-pattern word masks already make
+    fingerprints padding-invariant.
 
     ``_weight_fn(pattern, attempt, n_words, consts)`` is a test seam: it
     supplies the fingerprint fold constants and lets tests force a
@@ -582,6 +658,11 @@ def construct_bank(
     if method not in ("batched", "loop"):
         raise ValueError(f"method must be 'batched' or 'loop', got {method!r}")
     fp_backend = _resolve_fp_backend(fingerprint_backend)
+    exp_backend = _resolve_expand_backend(expand_backend)
+    if bucketing not in BUCKETINGS:
+        raise ValueError(
+            f"bucketing must be one of {BUCKETINGS}, got {bucketing!r}"
+        )
     if bucket_growth < 2:
         raise ValueError(f"bucket_growth must be >= 2, got {bucket_growth}")
 
@@ -591,16 +672,119 @@ def construct_bank(
             engine=engine, poly_index=poly_index,
         )
     else:
-        result = _construct_batched(
+        result = _construct_bucketed(
             dfas, max_states=max_states, tile=tile, max_retries=max_retries,
             poly_index=poly_index, distribution=distribution, mesh=mesh,
             pattern_axis=pattern_axis, fp_backend=fp_backend,
+            expand_backend=exp_backend, bucketing=bucketing,
             bucket_growth=bucket_growth,
             weight_fn=_weight_fn or _default_weight_fn,
         )
     if on_blowup == "raise":
         result.require_all()
     return result
+
+
+def _construction_partition(sizes, bucketing: str):
+    """The size-bucket partition of one bank, or ``None`` to run unbucketed.
+    -> ``[(edge, [pattern indices…]), …]`` via the shared
+    :mod:`repro.core.bucketing` helpers (geometric edge ladder, undersized
+    buckets merged into neighbors)."""
+    from ..core.bucketing import (
+        geometric_edges,
+        merge_small_buckets,
+        partition_by_size,
+    )
+
+    if bucketing == "off" or len(sizes) < 2:
+        return None
+    parts = merge_small_buckets(
+        partition_by_size(sizes, geometric_edges(max(sizes))),
+        _BUCKET_MIN_PATTERNS,
+    )
+    if len(parts) < 2:
+        return None
+    if bucketing == "auto" and len(sizes) < _BUCKET_AUTO_MIN_P:
+        return None
+    return parts
+
+
+def _construct_bucketed(dfas, *, max_states, tile, max_retries, poly_index,
+                        distribution, mesh, pattern_axis, fp_backend,
+                        expand_backend, bucketing, bucket_growth, weight_fn):
+    """The size-bucketed batched driver: partition the bank by DFA state
+    count, close each sub-bank with bucket-local ``n_max``/capacity/round
+    shapes, and scatter results back to the original pattern order.
+
+    Wall-time attribution stays a *bank-global* rounds-weighted share: the
+    merged stats recompute every pattern's ``SFAStats.wall_time_s`` against
+    the whole call's wall and the total active-round count across buckets,
+    so the attribution contract is bucketing-invariant.
+    """
+    t0 = time.perf_counter()
+    parts = _construction_partition(
+        [d.n_states for d in dfas], bucketing
+    )
+    if parts is None:
+        return _construct_batched(
+            dfas, max_states=max_states, tile=tile, max_retries=max_retries,
+            poly_index=poly_index, distribution=distribution, mesh=mesh,
+            pattern_axis=pattern_axis, fp_backend=fp_backend,
+            expand_backend=expand_backend, bucket_growth=bucket_growth,
+            weight_fn=weight_fn,
+        )
+
+    P = len(dfas)
+    stats = BankStats(
+        method="batched",
+        pattern_rounds=np.zeros(P, np.int64),
+        retries=np.zeros(P, np.int64),
+        pattern_candidates=np.zeros(P, np.int64),
+    )
+    sfas: list = [None] * P
+    blown = np.zeros(P, dtype=bool)
+    for edge, idx in parts:
+        sub_dfas = [dfas[i] for i in idx]
+
+        def sub_weight_fn(p, attempt, n_words, consts, _idx=idx):
+            # The seam keys on *bank-global* pattern position, so forced
+            # collisions hit the same pattern bucketed or not. n_words is
+            # bucket-local; weight fns must derive weights from it alone.
+            return weight_fn(_idx[p], attempt, n_words, consts)
+
+        sub = _construct_batched(
+            sub_dfas, max_states=max_states, tile=tile,
+            max_retries=max_retries, poly_index=poly_index,
+            distribution=distribution, mesh=mesh, pattern_axis=pattern_axis,
+            fp_backend=fp_backend, expand_backend=expand_backend,
+            bucket_growth=bucket_growth, weight_fn=sub_weight_fn,
+        )
+        ii = np.asarray(idx, dtype=np.int64)
+        stats.pattern_rounds[ii] = sub.stats.pattern_rounds
+        stats.retries[ii] = sub.stats.retries
+        stats.pattern_candidates[ii] = sub.stats.pattern_candidates
+        stats.rounds += sub.stats.rounds
+        blown[ii] = sub.blown
+        for j, i in enumerate(idx):
+            sfas[i] = sub.sfas[j]
+        stats.buckets.append(BucketStats(
+            edge=int(edge),
+            n_patterns=len(idx),
+            n_max=max(d.n_states for d in sub_dfas),
+            rounds=sub.stats.rounds,
+            blown=int(sub.blown.sum()),
+            wall_time_s=sub.stats.wall_time_s,
+        ))
+    stats.candidates = int(stats.pattern_candidates.sum())
+    stats.wall_time_s = time.perf_counter() - t0
+    total_rounds = int(stats.pattern_rounds.sum())
+    for p in range(P):
+        if sfas[p] is not None:
+            sfas[p].stats.wall_time_s = (
+                stats.wall_time_s * int(stats.pattern_rounds[p]) / total_rounds
+                if total_rounds else 0.0
+            )
+    return BankConstructionResult(sfas=sfas, blown=blown, stats=stats)
 
 
 def _construct_loop(dfas, *, max_states, max_retries, engine, poly_index=0):
@@ -636,7 +820,7 @@ def _construct_loop(dfas, *, max_states, max_retries, engine, poly_index=0):
 
 def _construct_batched(dfas, *, max_states, tile, max_retries, poly_index,
                        distribution, mesh, pattern_axis, fp_backend,
-                       bucket_growth, weight_fn):
+                       expand_backend, bucket_growth, weight_fn):
     t0 = time.perf_counter()
     bank = PatternBank.from_dfas(dfas)  # validates the shared alphabet
     P, n, k = bank.n_patterns, bank.n_max, bank.n_symbols
@@ -655,9 +839,9 @@ def _construct_batched(dfas, *, max_states, tile, max_retries, poly_index,
             f"distribution must be 'local' or 'shard_map', got {distribution!r}"
         )
 
-    # The interpret flag only shapes the pallas stage; pin it for xla so the
-    # compile-cache key does not split on an irrelevant axis.
-    if fp_backend == "pallas":
+    # The interpret flag only shapes the pallas stages; pin it for all-xla
+    # rounds so the compile-cache key does not split on an irrelevant axis.
+    if "pallas" in (fp_backend, expand_backend):
         from ..kernels import ops as kernel_ops
 
         interpret = kernel_ops._default_interpret()
@@ -695,9 +879,7 @@ def _construct_batched(dfas, *, max_states, tile, max_retries, poly_index,
         weights_np[p] = weight_fn(p, 0, W, c)
         limbs_np[p] = _limbs_of(c)
         masks_np[p] = _word_mask(int(n_true[p]), n)
-        fp0_np[p] = fingerprint_states_np(
-            np.arange(int(n_true[p]), dtype=np.int32)[None], c
-        )[0]
+        fp0_np[p] = _seed_fingerprint(int(n_true[p]), c.poly_low)
 
     identity = np.arange(n, dtype=np.int32)
     states = jnp.zeros((P, capacity, n), jnp.int32).at[:, 0].set(identity)
@@ -753,7 +935,8 @@ def _construct_batched(dfas, *, max_states, tile, max_retries, poly_index,
         if distribution == "shard_map":
             round_fn = _sharded_round_exe(
                 mesh, pattern_axis, tile=tile, n=n, k=k, capacity=capacity,
-                fp_backend=fp_backend, interpret=interpret,
+                fp_backend=fp_backend, expand_backend=expand_backend,
+                interpret=interpret,
             )
             out = round_fn(
                 tables[jidx], states[jidx], fp_hi[jidx], fp_lo[jidx],
@@ -774,7 +957,8 @@ def _construct_batched(dfas, *, max_states, tile, max_retries, poly_index,
         else:
             step = _local_step_exe(
                 tile=tile, n=n, k=k, capacity=capacity, P=P, bucket=bucket,
-                fp_backend=fp_backend, interpret=interpret,
+                fp_backend=fp_backend, expand_backend=expand_backend,
+                interpret=interpret,
             )
             states, fp_hi, fp_lo, delta, n_states, frontier, o_coll = step(
                 tables, states, fp_hi, fp_lo, delta, n_states, frontier,
@@ -801,9 +985,7 @@ def _construct_batched(dfas, *, max_states, tile, max_retries, poly_index,
                 c = consts_of(p)
                 new_w[j] = weight_fn(int(p), int(attempts[p]), W, c)
                 new_l[j] = _limbs_of(c)
-                new_fp[j] = fingerprint_states_np(
-                    np.arange(int(n_true[p]), dtype=np.int32)[None], c
-                )[0]
+                new_fp[j] = _seed_fingerprint(int(n_true[p]), c.poly_low)
                 weights_np[p] = new_w[j]
                 limbs_np[p] = new_l[j]
             cidx = jnp.asarray(collided.astype(np.int32))

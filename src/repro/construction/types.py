@@ -82,6 +82,31 @@ class SFA:
         )
 
 
+@dataclass(frozen=True)
+class BucketStats:
+    """Accounting of one size bucket of a bucketed bank construction.
+
+    ``edge`` is the bucket's size-ladder edge (patterns with
+    ``n_states <= edge``), ``n_max`` the bucket's true widest pattern —
+    the row width every pattern in the bucket actually paid, versus the
+    whole bank's ``n_max`` it would have paid unbucketed.
+    """
+
+    edge: int
+    n_patterns: int
+    n_max: int
+    rounds: int
+    blown: int
+    wall_time_s: float
+
+    def to_json(self) -> dict:
+        return {
+            "edge": self.edge, "n_patterns": self.n_patterns,
+            "n_max": self.n_max, "rounds": self.rounds,
+            "blown": self.blown, "wall_time_s": self.wall_time_s,
+        }
+
+
 @dataclass
 class BankStats:
     """Accounting of one :func:`~repro.construction.construct_bank` call.
@@ -111,6 +136,9 @@ class BankStats:
     )
     candidates: int = 0
     wall_time_s: float = 0.0
+    #: Per-size-bucket accounting (``BucketStats``) when the batched method
+    #: ran bucketed; empty for unbucketed or loop constructions.
+    buckets: list = field(default_factory=list)
 
 
 @dataclass

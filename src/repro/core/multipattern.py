@@ -149,23 +149,20 @@ def bucket_by_size(dfas: Sequence[DFA], ids: Iterable[str] | None = None,
     state count (bucket ``i`` holds patterns with ``n <= edges[i]``) keeps
     per-bucket padding below ~2x while preserving the batched execution
     within each bucket. Returns the non-empty banks, smallest bucket first.
+
+    The partition itself is :func:`repro.core.bucketing.partition_by_size`
+    — the same helper batched construction buckets with.
     """
+    from .bucketing import partition_by_size
+
     ids = list(ids) if ids is not None else [f"pattern_{p}" for p in range(len(dfas))]
-    buckets: dict = {}
-    for d, i in zip(dfas, ids):
-        for e in sorted(edges):
-            if d.n_states <= e:
-                buckets.setdefault(e, ([], []))
-                buckets[e][0].append(d)
-                buckets[e][1].append(i)
-                break
-        else:
-            raise ValueError(
-                f"pattern {i} has {d.n_states} states > max edge {max(edges)}"
-            )
+    try:
+        parts = partition_by_size([d.n_states for d in dfas], edges)
+    except ValueError as e:
+        raise ValueError(str(e).replace("item", "pattern", 1)) from None
     return [
-        PatternBank.from_dfas(ds, bids)
-        for _, (ds, bids) in sorted(buckets.items())
+        PatternBank.from_dfas([dfas[i] for i in idx], [ids[i] for i in idx])
+        for _, idx in parts
     ]
 
 

@@ -22,6 +22,8 @@ DISTRIBUTIONS = ("local", "shard_map")
 CONSTRUCTION_METHODS = ("auto", "batched", "loop")
 CONSTRUCTION_ENGINES = ("vectorized", "sequential", "jax")
 CONSTRUCTION_FP_BACKENDS = ("auto", "xla", "pallas")
+CONSTRUCTION_EXPAND_BACKENDS = ("auto", "xla", "pallas")
+CONSTRUCTION_BUCKETINGS = ("auto", "size", "off")
 
 #: Default SFA state budget for ``mode="auto"``: patterns whose exact SFA
 #: closes within this many states get the paper's single-lookup inner loop;
@@ -99,6 +101,18 @@ class ConstructionPolicy:
         ``"pallas"`` (the ``kernels.ops.fingerprint_bank`` Rabin kernel —
         bit-identical), or ``"auto"`` (pallas on a TPU runtime, xla
         elsewhere).
+    ``expand_backend``
+        the batched round's frontier-expansion stage: ``"xla"`` (fused
+        ``jnp.take`` gather), ``"pallas"`` (the
+        ``kernels.ops.expand_frontier_bank`` one-hot MXU gather —
+        bit-identical), or ``"auto"`` (pallas on a TPU runtime, xla
+        elsewhere).
+    ``bucketing``
+        size-bucketed construction banks: ``"size"`` partitions a batched
+        bank by DFA state count so small patterns stop paying the widest
+        pattern's frontier rows and sort lengths (the P=64 lever),
+        ``"off"`` keeps one padded bank, ``"auto"`` buckets only when the
+        bank is big and skewed enough to pay. Bit-identical either way.
     ``bucket_growth``
         active-set bucket shrink factor of the construction shape schedule
         (``repro.construction.round_schedule``): larger compiles fewer round
@@ -115,6 +129,8 @@ class ConstructionPolicy:
     pattern_axis: str = "pattern"
     max_retries: int = 4
     fingerprint_backend: str = "auto"
+    expand_backend: str = "auto"
+    bucketing: str = "auto"
     bucket_growth: int = 4
 
     def validate(self) -> "ConstructionPolicy":
@@ -141,6 +157,16 @@ class ConstructionPolicy:
             raise ValueError(
                 "construction fingerprint_backend must be one of "
                 f"{CONSTRUCTION_FP_BACKENDS}, got {self.fingerprint_backend!r}"
+            )
+        if self.expand_backend not in CONSTRUCTION_EXPAND_BACKENDS:
+            raise ValueError(
+                "construction expand_backend must be one of "
+                f"{CONSTRUCTION_EXPAND_BACKENDS}, got {self.expand_backend!r}"
+            )
+        if self.bucketing not in CONSTRUCTION_BUCKETINGS:
+            raise ValueError(
+                "construction bucketing must be one of "
+                f"{CONSTRUCTION_BUCKETINGS}, got {self.bucketing!r}"
             )
         if self.bucket_growth < 2:
             raise ValueError(

@@ -35,6 +35,7 @@ import numpy as np
 
 from ..compat import make_mesh
 from ..construction import SFA, StateBlowup, construct_bank
+from ..core.bucketing import partition_by_size
 from ..core.dfa import DFA
 from ..core.multipattern import PatternBank
 from ..speculative import (
@@ -159,15 +160,9 @@ def _stack_sfas(sfas: Sequence[SFA], n_max: int) -> tuple:
 def _size_partition(sizes: Sequence[int], edges: Sequence[int]):
     """Partition indices by size buckets (bucket i holds sizes <= edges[i]);
     oversized items land in one overflow bucket rather than erroring."""
-    buckets: dict = {}
-    for i, sz in enumerate(sizes):
-        for e in sorted(edges):
-            if sz <= e:
-                buckets.setdefault(e, []).append(i)
-                break
-        else:
-            buckets.setdefault(float("inf"), []).append(i)
-    return [idx for _, idx in sorted(buckets.items())]
+    return [
+        idx for _, idx in partition_by_size(sizes, edges, overflow="extend")
+    ]
 
 
 # --------------------------------------------------------------------------
@@ -259,6 +254,8 @@ def _resolve_sfas(ids, dfas, plan: ScanPlan):
             mesh=policy.mesh,
             pattern_axis=policy.pattern_axis,
             fingerprint_backend=policy.fingerprint_backend,
+            expand_backend=policy.expand_backend,
+            bucketing=policy.bucketing,
             bucket_growth=policy.bucket_growth,
         )
         rounds = result.stats.rounds

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: frontier × alphabet expansion as a one-hot MXU matmul.
+
+The batched construction round's expansion stage is the gather
+
+    cand[t·k + a, q] = table[ft[t, q], a]
+
+— every frontier state vector ``ft[t]`` advanced by every symbol ``a`` at
+once. XLA lowers ``table[ft]`` to a dynamic-gather; on TPU that is latency
+bound and VPU-serial, exactly like the composition combine in
+``kernels/compose.py``. The same one-hot re-expression applies: per frontier
+row ``t``,
+
+    onehot(ft[t]) (n, n) @ table (n, k)  ->  (n, k)
+
+turns the ``n·k`` dependent loads into one MXU contraction whose systolic
+throughput wins for ``n ≥ ~128``. State ids are < 2^16 (the batched engine's
+packing bound), far under f32's 2^24 exact-integer range, so the matmul is
+bit-exact against the gather oracle — the property the construction tests
+pin (``expand_backend="pallas"`` must be bit-identical to the XLA gather).
+
+Grid: (pattern, frontier-tile blocks). Per cell the kernel holds a
+``(block_t, n, n)`` one-hot stack and the pattern's full ``(n, k)`` table in
+VMEM; ``block_t`` auto-shrinks with ``n`` to bound the one-hot residency.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: One-hot residency bound: block_t · n · n f32 elements per grid cell
+#: (~2 MB at the cap). ``_auto_block_t`` shrinks block_t to honor it.
+_ONEHOT_BUDGET = 1 << 19
+
+
+def _auto_block_t(tile: int, n: int) -> int:
+    """Largest divisor of ``tile`` whose one-hot stack fits the budget."""
+    bt = max(1, min(tile, _ONEHOT_BUDGET // max(1, n * n)))
+    while tile % bt:
+        bt -= 1
+    return bt
+
+
+def _expand_kernel(ft_ref, table_ref, out_ref):
+    ft = ft_ref[0]                                   # (bt, n) int32
+    table = table_ref[0].astype(jnp.float32)         # (n, k)
+    bt, n = ft.shape
+    k = table.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bt, n, n), 2)
+    onehot = (ft[:, :, None] == iota).astype(jnp.float32)    # (bt, n, n)
+    vals = jax.lax.dot_general(
+        onehot, table, (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                # (bt, n, k)
+    # Row-major (frontier, symbol) candidate order — the layout the
+    # sort-merge's delta scatter-back assumes.
+    out_ref[0] = jnp.swapaxes(vals, 1, 2).reshape(bt * k, n).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def expand_bank_pallas(
+    tables: jnp.ndarray,
+    ft: jnp.ndarray,
+    *,
+    block_t: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Frontier expansion over a bank: (B, n, k) tables, (B, T, n) frontier
+    tiles -> (B, T·k, n) candidates in row-major (frontier, symbol) order.
+    ``block_t = 0`` picks the largest tile divisor fitting the VMEM budget.
+    """
+    B, T, n = ft.shape
+    k = tables.shape[-1]
+    if block_t <= 0:
+        block_t = _auto_block_t(T, n)
+    if T % block_t:
+        raise ValueError(f"block_t ({block_t}) must divide the tile ({T})")
+    grid = (B, T // block_t)
+    return pl.pallas_call(
+        _expand_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, n), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, n, k), lambda b, t: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t * k, n), lambda b, t: (b, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T * k, n), jnp.int32),
+        interpret=interpret,
+    )(ft, tables)

@@ -17,6 +17,7 @@ from repro.core.fingerprint import BarrettConstants, fold_weights_u32
 
 from .clmul import consts_limbs_of, fingerprint_bank_pallas, fingerprint_pallas
 from .compose import compose_pallas
+from .expand import expand_bank_pallas
 from .match_scan import match_bank_chunks_pallas, match_chunks_pallas
 
 
@@ -93,6 +94,27 @@ def fingerprint_bank_stacked(
     return fingerprint_bank_pallas(
         words, weights, limbs, block_b=block_b, interpret=interpret
     )
+
+
+def expand_frontier_bank(
+    tables: jnp.ndarray,
+    ft: jnp.ndarray,
+    *,
+    block_t: int = 0,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Frontier × alphabet expansion over the pattern axis: (B, n, k)
+    transition tables and (B, T, n) frontier state-vector tiles ->
+    (B, T·k, n) candidate vectors, ``out[b, t·k + a, q] = tables[b,
+    ft[b, t, q], a]`` — bit-identical to the XLA gather ``tables[b][ft[b]]``
+    (the construction round's ``expand_backend="xla"`` stage). Formulated
+    as a one-hot MXU contraction so each pattern's table stays VMEM-resident
+    across its frontier blocks (see :mod:`repro.kernels.expand`).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    return expand_bank_pallas(tables, ft, block_t=block_t,
+                              interpret=interpret)
 
 
 def compose(

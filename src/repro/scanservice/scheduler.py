@@ -41,9 +41,12 @@ DRIVERS = ("sync", "thread")
 
 
 def _default_plan() -> ScanPlan:
+    # Union banks coalesce many requests' patterns, so they are exactly the
+    # big, size-skewed banks size-bucketed construction exists for — submit
+    # them bucketed explicitly rather than leaning on the "auto" heuristic.
     return ScanPlan(
         chunking=ChunkPolicy(bucket=True),
-        construction=ConstructionPolicy(method="batched"),
+        construction=ConstructionPolicy(method="batched", bucketing="size"),
     )
 
 

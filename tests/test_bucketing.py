@@ -1,0 +1,141 @@
+"""The shared size-bucketing helper (``repro.core.bucketing``).
+
+One partition implementation now serves the matcher (``bucket_by_size``),
+the Scanner's group partition, and bucketed batched construction — these
+tests pin the helper's contracts (edge ladder, stable partition, overflow
+policies, small-bucket merging) plus the two pre-existing wrappers'
+behavior on top of it.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.bucketing import (
+    geometric_edges,
+    merge_small_buckets,
+    partition_by_size,
+)
+from repro.core.dfa import random_dfa
+from repro.core.multipattern import bucket_by_size
+from repro.engine.scanner import _size_partition
+
+
+# --------------------------------------------------------------------------
+# geometric_edges
+# --------------------------------------------------------------------------
+
+
+def test_geometric_edges_cover_max_size():
+    assert geometric_edges(1) == (8,)
+    assert geometric_edges(8) == (8,)
+    assert geometric_edges(9) == (8, 16)
+    assert geometric_edges(87) == (8, 16, 32, 64, 128)
+    assert geometric_edges(100, start=4, growth=4) == (4, 16, 64, 256)
+    # the ladder is O(log(max_size)) long and always holds max_size
+    for m in (1, 7, 64, 1000, 12345):
+        edges = geometric_edges(m)
+        assert edges[-1] >= m
+        assert len(edges) <= 16
+
+
+def test_geometric_edges_validation():
+    with pytest.raises(ValueError):
+        geometric_edges(0)
+    with pytest.raises(ValueError):
+        geometric_edges(10, start=0)
+    with pytest.raises(ValueError):
+        geometric_edges(10, growth=1)
+
+
+# --------------------------------------------------------------------------
+# partition_by_size
+# --------------------------------------------------------------------------
+
+
+def test_partition_groups_by_smallest_holding_edge():
+    sizes = [3, 9, 8, 17, 2, 16]
+    parts = partition_by_size(sizes, (8, 16, 32))
+    assert parts == [(8, [0, 2, 4]), (16, [1, 5]), (32, [3])]
+
+
+def test_partition_preserves_input_order_and_drops_empty_buckets():
+    parts = partition_by_size([30, 1, 29], (8, 16, 32))
+    # no size lands in (8, 16]; that bucket must not appear
+    assert parts == [(8, [1]), (32, [0, 2])]
+
+
+def test_partition_overflow_policies():
+    with pytest.raises(ValueError, match="size 99"):
+        partition_by_size([1, 99], (8, 16))
+    parts = partition_by_size([1, 99, 100], (8, 16), overflow="extend")
+    assert parts == [(8, [0]), (float("inf"), [1, 2])]
+    with pytest.raises(ValueError, match="overflow"):
+        partition_by_size([1], (8,), overflow="bogus")
+    with pytest.raises(ValueError, match="edge"):
+        partition_by_size([1], ())
+
+
+def test_partition_unsorted_edges():
+    assert partition_by_size([5, 20], (32, 8)) == [(8, [0]), (32, [1])]
+
+
+# --------------------------------------------------------------------------
+# merge_small_buckets
+# --------------------------------------------------------------------------
+
+
+def test_merge_small_buckets_merges_upward():
+    parts = [(8, [0, 1]), (16, [2, 3, 4, 5]), (32, [6, 7, 8, 9])]
+    merged = merge_small_buckets(parts, 4)
+    # the undersized <=8 bucket joins <=16; its items come first
+    assert merged == [(16, [0, 1, 2, 3, 4, 5]), (32, [6, 7, 8, 9])]
+
+
+def test_merge_small_buckets_largest_merges_downward_widening_edge():
+    parts = [(8, [0, 1, 2, 3]), (64, [4])]
+    merged = merge_small_buckets(parts, 4)
+    # the undersized largest bucket widens the one below to its own edge
+    assert merged == [(64, [0, 1, 2, 3, 4])]
+
+
+def test_merge_small_buckets_terminates_at_one_bucket():
+    parts = [(8, [0]), (16, [1]), (32, [2])]
+    assert merge_small_buckets(parts, 4) == [(32, [0, 1, 2])]
+
+
+def test_merge_small_buckets_noop_cases():
+    parts = [(8, [0, 1]), (16, [2, 3])]
+    assert merge_small_buckets(parts, 1) == parts
+    assert merge_small_buckets(parts, 2) == parts
+    assert merge_small_buckets([], 4) == []
+    with pytest.raises(ValueError):
+        merge_small_buckets(parts, 0)
+
+
+# --------------------------------------------------------------------------
+# the wrappers ride the shared helper
+# --------------------------------------------------------------------------
+
+
+def test_bucket_by_size_banks_match_shared_partition():
+    dfas = [random_dfa(n, 4, seed=900 + i)
+            for i, n in enumerate((3, 9, 8, 17, 2, 16))]
+    edges = (8, 16, 32)
+    banks = bucket_by_size(dfas, edges=edges)
+    parts = partition_by_size([d.n_states for d in dfas], edges)
+    assert len(banks) == len(parts)
+    for bank, (edge, idx) in zip(banks, parts):
+        assert list(bank.ids) == [f"pattern_{i}" for i in idx]
+        assert bank.n_max <= edge
+        for j, i in enumerate(idx):
+            assert np.array_equal(bank.dfa(j).table, dfas[i].table)
+
+
+def test_bucket_by_size_raises_on_oversize_pattern():
+    dfas = [random_dfa(20, 4, seed=42)]
+    with pytest.raises(ValueError, match="pattern"):
+        bucket_by_size(dfas, edges=(8, 16))
+
+
+def test_scanner_size_partition_extends_for_oversize():
+    assert _size_partition([3, 99, 9], (8, 16)) == [[0], [2], [1]]

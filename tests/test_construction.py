@@ -16,7 +16,13 @@ Pins the PR's contracts:
 * the fixed-shape compile schedule: a repeat same-shape ``construct_bank``
   performs **zero** new jit traces/XLA compiles (answered by the process-
   wide round compile cache), and the Pallas fingerprint stage is
-  bit-identical to the reference fold on all 23 bundled signatures.
+  bit-identical to the reference fold on all 23 bundled signatures;
+* size-bucketed construction (``bucketing="size"``/``"auto"``) and the
+  gather/Pallas frontier-expansion backends are bit-identical to the flat
+  batched path — against the unbucketed bank, against all three sequential
+  membership stores, on random size-skewed banks (property test), with
+  per-pattern stats attribution intact and zero new lowerings on a repeat
+  bucketed bank.
 """
 
 import logging
@@ -32,6 +38,7 @@ from repro.construction import (
     StateBlowup,
     construct_bank,
     construct_sfa,
+    construct_sfa_sequential,
     construct_sfa_vectorized,
     dfa_cache_key,
     round_compile_cache,
@@ -360,10 +367,17 @@ def test_scanner_construction_policy_controls():
         ConstructionPolicy(fingerprint_backend="avx2").validate()
     with pytest.raises(ValueError):
         ConstructionPolicy(bucket_growth=1).validate()
+    with pytest.raises(ValueError):
+        ConstructionPolicy(expand_backend="avx2").validate()
+    with pytest.raises(ValueError):
+        ConstructionPolicy(bucketing="columns").validate()
     assert ConstructionPolicy().with_(method="batched").method == "batched"
     p = ConstructionPolicy().with_(fingerprint_backend="xla", bucket_growth=8)
     p.validate()
     assert p.fingerprint_backend == "xla" and p.bucket_growth == 8
+    p = ConstructionPolicy().with_(expand_backend="xla", bucketing="size")
+    p.validate()
+    assert p.expand_backend == "xla" and p.bucketing == "size"
 
 
 def test_scanner_shard_map_construction_matches_local():
@@ -575,3 +589,169 @@ def test_pallas_backend_round_is_bit_identical():
         construct_bank(dfas, fingerprint_backend="avx2", **kwargs)
     with pytest.raises(ValueError):
         construct_bank(dfas, bucket_growth=1, **kwargs)
+
+
+# --------------------------------------------------------------------------
+# Size-bucketed banks + gather/Pallas frontier expansion
+# --------------------------------------------------------------------------
+
+#: Six small (<=8 states) + four mid-size DFAs: two merged size buckets.
+_SKEWED_SIZES = (3, 4, 3, 5, 4, 3, 9, 10, 11, 12)
+
+
+def _skewed_bank(seed0, sizes=_SKEWED_SIZES, k=5):
+    return [random_dfa(n, k, seed=seed0 + i) for i, n in enumerate(sizes)]
+
+
+def test_bucketed_bank_bit_identical_to_unbucketed(prosite_bank,
+                                                   full_bank_result):
+    """Tentpole acceptance: the bundled bank auto-buckets (P=23, sizes
+    4..87) and is bit-identical to the flat batched path — SFAs, blowup
+    flags, and per-pattern round/candidate attribution."""
+    buckets = full_bank_result.stats.buckets
+    assert len(buckets) >= 2                      # the fixture bank bucketed
+    assert sum(b.n_patterns for b in buckets) == prosite_bank.n_patterns
+    assert full_bank_result.stats.rounds == sum(b.rounds for b in buckets)
+    assert sum(b.blown for b in buckets) == int(full_bank_result.blown.sum())
+    # bucket-local padding really is narrower than the bank's n_max
+    assert min(b.n_max for b in buckets) < prosite_bank.n_max
+
+    flat = construct_bank(prosite_bank, max_states=FULL_BANK_CAP, tile=256,
+                          bucketing="off")
+    assert not flat.stats.buckets
+    assert np.array_equal(full_bank_result.blown, flat.blown)
+    assert np.array_equal(full_bank_result.stats.pattern_rounds,
+                          flat.stats.pattern_rounds)
+    assert np.array_equal(full_bank_result.stats.pattern_candidates,
+                          flat.stats.pattern_candidates)
+    for p in range(prosite_bank.n_patterns):
+        _assert_sfa_equal(full_bank_result.sfas[p], flat.sfas[p],
+                          prosite_bank.ids[p])
+
+
+def test_bucketed_bank_agrees_with_all_membership_stores(prosite_bank,
+                                                         full_bank_result):
+    """Satellite: the (bucketed) bank agrees with the sequential engine
+    under every membership store — exhaustive vector compare, fingerprint
+    linear scan, and fingerprint hash chains — under the shared budget,
+    including the blowup verdict."""
+    assert len(full_bank_result.stats.buckets) >= 2
+    for use_fp, use_hash in ((False, False), (True, False), (True, True)):
+        closed = blown = 0
+        for p in range(prosite_bank.n_patterns):
+            try:
+                ref = construct_sfa_sequential(
+                    prosite_bank.dfa(p), max_states=SHARED_BUDGET,
+                    use_fingerprints=use_fp, use_hashing=use_hash)
+            except StateBlowup:
+                blown += 1
+                assert full_bank_result.sfas[p].n_states > SHARED_BUDGET
+                continue
+            closed += 1
+            got = full_bank_result.sfas[p]
+            ctx = (prosite_bank.ids[p], use_fp, use_hash)
+            assert np.array_equal(got.mappings, ref.mappings), ctx
+            assert np.array_equal(got.delta, ref.delta), ctx
+            if use_fp:   # the exhaustive store never fingerprints
+                assert np.array_equal(got.fingerprints, ref.fingerprints), ctx
+        assert closed >= 10 and blown >= 3
+
+
+def test_repeat_bucketed_bank_zero_new_compiles():
+    """Acceptance: a repeat same-shape *bucketed* bank — same partition,
+    same bucket-local schedules — performs zero new jit traces, XLA
+    compiles, or round-cache lowerings."""
+    dfas = _skewed_bank(820)
+    kwargs = dict(max_states=500, tile=16, bucketing="size")
+    first = construct_bank(dfas, **kwargs)        # pays any cold compiles
+    assert len(first.stats.buckets) >= 2
+    before = round_compile_cache().info.snapshot()
+
+    second, log = _logged_compiles(lambda: construct_bank(dfas, **kwargs))
+    after = round_compile_cache().info.snapshot()
+
+    assert log.compiles == []
+    assert log.traces == []
+    assert after["lowerings"] == before["lowerings"]
+    assert after["hits"] > before["hits"]
+    assert np.array_equal(first.blown, second.blown)
+    for p in range(len(dfas)):
+        if not first.blown[p]:
+            _assert_sfa_equal(first.sfas[p], second.sfas[p], p)
+
+
+def test_expand_backend_pallas_bit_identical():
+    """The gather stage's backends agree bit for bit — XLA ``jnp.take``
+    vs the Pallas one-hot MXU kernel, flat and bucketed — and the kernel
+    itself matches the gather oracle on random tables."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    dfas = _skewed_bank(840, sizes=(3, 4, 5, 3, 4, 5, 9, 10))
+    kwargs = dict(max_states=500, tile=16)
+    ref = construct_bank(dfas, expand_backend="xla", **kwargs)
+    pal = construct_bank(dfas, expand_backend="pallas", **kwargs)
+    pal_b = construct_bank(dfas, expand_backend="pallas", bucketing="size",
+                           **kwargs)
+    assert np.array_equal(ref.blown, pal.blown)
+    assert np.array_equal(ref.blown, pal_b.blown)
+    for p in range(len(dfas)):
+        if not ref.blown[p]:
+            _assert_sfa_equal(ref.sfas[p], pal.sfas[p], p)
+            _assert_sfa_equal(ref.sfas[p], pal_b.sfas[p], p)
+    with pytest.raises(ValueError):
+        construct_bank(dfas, expand_backend="avx2", **kwargs)
+    with pytest.raises(ValueError):
+        construct_bank(dfas, bucketing="columns", **kwargs)
+
+    # kernel-level oracle: out[b, t*k + a, q] == tables[b, ft[b, t, q], a]
+    rng = np.random.default_rng(7)
+    B, T, n, k = 3, 16, 11, 5
+    tables = rng.integers(0, 60_000, size=(B, n, k)).astype(np.int32)
+    ft = rng.integers(0, n, size=(B, T, n)).astype(np.int32)
+    got = np.asarray(ops.expand_frontier_bank(
+        jnp.asarray(tables), jnp.asarray(ft), interpret=True))
+    assert got.shape == (B, T * k, n)
+    for b in range(B):
+        expect = np.swapaxes(tables[b][ft[b]], 1, 2).reshape(T * k, n)
+        assert np.array_equal(got[b], expect), b
+
+
+@settings(max_examples=4, deadline=None)
+@given(sizes=st.lists(st.sampled_from((2, 3, 4, 5, 6, 10, 12, 14)),
+                      min_size=8, max_size=8),
+       seed=st.integers(min_value=0, max_value=9))
+def test_property_size_skewed_banks_bucket_roundtrip(sizes, seed):
+    """Property: random size-skewed banks round-trip through bucketing —
+    ``bucketing="size"`` equals ``"off"`` bit for bit (including blowup
+    verdicts under a tight budget), and per-pattern stats attribution
+    survives the scatter back to bank order."""
+    dfas = [random_dfa(n, 4, seed=1000 + 17 * seed + i)
+            for i, n in enumerate(sizes)]
+    kwargs = dict(max_states=500, tile=16)
+    flat = construct_bank(dfas, bucketing="off", **kwargs)
+    bkt = construct_bank(dfas, bucketing="size", **kwargs)
+
+    assert np.array_equal(bkt.blown, flat.blown)
+    assert np.array_equal(bkt.stats.pattern_rounds, flat.stats.pattern_rounds)
+    assert np.array_equal(bkt.stats.pattern_candidates,
+                          flat.stats.pattern_candidates)
+    total_rounds = int(bkt.stats.pattern_rounds.sum())
+    share_sum = closed_rounds = 0
+    for p in range(len(dfas)):
+        if bkt.blown[p]:
+            assert bkt.sfas[p] is None and flat.sfas[p] is None
+            continue
+        _assert_sfa_equal(bkt.sfas[p], flat.sfas[p], (sizes, p))
+        assert bkt.sfas[p].stats.rounds == int(bkt.stats.pattern_rounds[p])
+        assert (bkt.sfas[p].stats.candidates
+                == int(bkt.stats.pattern_candidates[p]))
+        share_sum += bkt.sfas[p].stats.wall_time_s
+        closed_rounds += int(bkt.stats.pattern_rounds[p])
+    # shares are rounds-weighted splits of the *bank* wall clock
+    assert share_sum == pytest.approx(
+        bkt.stats.wall_time_s * closed_rounds / total_rounds)
+    if bkt.stats.buckets:
+        assert sum(b.n_patterns for b in bkt.stats.buckets) == len(dfas)
+        assert bkt.stats.rounds == sum(b.rounds for b in bkt.stats.buckets)
