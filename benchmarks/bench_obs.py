@@ -1,0 +1,127 @@
+"""Observability overhead benchmark: warm scans, metrics on vs off.
+
+The obs subsystem claims to be cheap enough to leave **enabled by default**:
+every instrumented site is a counter increment or a ``perf_counter`` span
+around work that is orders of magnitude heavier. This bench puts a number
+on that claim and *asserts* it: the same warm (fully compiled, cached)
+scan is timed with observability enabled and disabled in interleaved
+repetitions, and the median overhead must stay under
+``MAX_OVERHEAD`` (2% at full size; the smoke bound is looser because a
+CI runner's scheduling jitter on millisecond scans exceeds 2% on its own).
+
+Bit-identity is asserted on the way — the disabled path must be a true
+no-op, not a different code path.
+
+Writes ``BENCH_obs.json`` (timings, overhead fraction, the disabled-mode
+per-increment cost) next to the other BENCH reports.
+"""
+
+from __future__ import annotations
+
+import json
+import statistics
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks import _config
+from repro import obs
+from repro.construction import SFACache
+from repro.core.prosite import synthetic_protein
+from repro.engine import ConstructionPolicy, ScanPlan, Scanner
+
+BANK = ["PS00016", "PS00005", "PS00001", "PS00006", "PS00009", "PS00004"]
+SMOKE_BANK = ["PS00016", "PS00005", "PS00001"]
+
+N_DOCS, SMOKE_DOCS = 64, 16
+DOC_LEN = 2048
+REPS, SMOKE_REPS = 30, 8
+
+#: Overhead budget for the enabled-vs-disabled median: the acceptance bound
+#: at full size, a looser bound under --smoke (short scans on shared CI
+#: runners jitter more than 2% with obs out of the picture entirely).
+MAX_OVERHEAD, SMOKE_MAX_OVERHEAD = 0.02, 0.25
+
+_REPORT_PATH = Path(__file__).resolve().parent.parent / "BENCH_obs.json"
+
+
+def _median_scan_s(scanner, docs, reps: int) -> tuple:
+    """-> (median enabled, median disabled), interleaved so drift (thermal,
+    noisy neighbors) hits both modes equally."""
+    on, off = [], []
+    for _ in range(reps):
+        obs.enable()
+        t0 = time.perf_counter()
+        scanner.scan(docs)
+        on.append(time.perf_counter() - t0)
+        obs.disable()
+        t0 = time.perf_counter()
+        scanner.scan(docs)
+        off.append(time.perf_counter() - t0)
+    obs.enable()
+    return statistics.median(on), statistics.median(off)
+
+
+def _disabled_inc_ns(iters: int = 200_000) -> float:
+    """Per-call cost of a disabled counter increment (the no-op claim)."""
+    obs.disable()
+    try:
+        c = obs.counter("benchmarks.obs.noop_probe")
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            c.inc()
+        return (time.perf_counter() - t0) / iters * 1e9
+    finally:
+        obs.enable()
+
+
+def run(emit) -> None:
+    bank = _config.scaled(BANK, SMOKE_BANK)
+    n_docs = _config.scaled(N_DOCS, SMOKE_DOCS)
+    reps = _config.scaled(REPS, SMOKE_REPS)
+    budget = _config.scaled(MAX_OVERHEAD, SMOKE_MAX_OVERHEAD)
+    docs = [synthetic_protein(DOC_LEN, seed=s) for s in range(n_docs)]
+
+    was_enabled = obs.enabled()
+    try:
+        plan = ScanPlan(construction=ConstructionPolicy(
+            cache=SFACache(), method="batched"))
+        scanner = Scanner.compile(bank, plan)
+
+        # Bit-identity first: obs off must change nothing but bookkeeping.
+        obs.enable()
+        hits_on = scanner.scan(docs).hits
+        obs.disable()
+        hits_off = scanner.scan(docs).hits
+        obs.enable()
+        assert np.array_equal(hits_on, hits_off), \
+            "observability changed scan results"
+
+        scanner.scan(docs)   # warm the jit/exec caches out of the timings
+        t_on, t_off = _median_scan_s(scanner, docs, reps)
+        overhead = t_on / t_off - 1.0
+        inc_ns = _disabled_inc_ns()
+
+        emit(f"obs/warm_scan_enabled/P={len(bank)}", t_on * 1e6,
+             f"docs={n_docs}")
+        emit(f"obs/warm_scan_disabled/P={len(bank)}", t_off * 1e6,
+             f"overhead={overhead * 100:.2f}%")
+        emit("obs/disabled_counter_inc", inc_ns / 1e3, "per-call ns noop")
+
+        _REPORT_PATH.write_text(json.dumps({
+            "suite": "obs_overhead",
+            "patterns": len(bank), "docs": n_docs, "doc_len": DOC_LEN,
+            "reps": reps,
+            "enabled_s": t_on, "disabled_s": t_off,
+            "overhead": overhead, "budget": budget,
+            "disabled_inc_ns": inc_ns,
+            "smoke": _config.SMOKE,
+        }, indent=1))
+
+        assert overhead < budget, (
+            f"observability overhead {overhead * 100:.2f}% exceeds the "
+            f"{budget * 100:.0f}% budget (enabled {t_on * 1e3:.2f} ms vs "
+            f"disabled {t_off * 1e3:.2f} ms median of {reps})")
+    finally:
+        obs.configure(enabled=was_enabled)

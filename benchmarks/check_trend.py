@@ -2,16 +2,24 @@
 
 CI's bench-smoke job stashes the *committed* baseline JSON, reruns the
 harness, and compares the fresh file against the stash with this script.
-Two report kinds are recognized by shape:
+Four report kinds are recognized by shape:
 
-* ``BENCH_construction.json`` (``"results"`` rows) — for every bank size
-  ``P`` present in both, the fresh ``batched_speedup`` (warm batched vs
-  sequential loop) must be within ``--max-regression`` of the baseline's;
+* ``BENCH_construction.json`` (``"results"`` rows keyed by ``P``) — for
+  every bank size ``P`` present in both, the fresh ``batched_speedup``
+  (warm batched vs sequential loop) must be within ``--max-regression``
+  of the baseline's;
 * ``BENCH_engine.json`` (``"modes"`` table) — for every mode present in
   both, the fresh throughput *relative to the same run's enumeration mode*
-  must be within ``--max-regression`` of the baseline's relative figure.
+  must be within ``--max-regression`` of the baseline's relative figure;
+* ``BENCH_service.json`` (``"suite": "scan_service"``) — every named bench
+  row (``cold_vs_warm``, ``coalesced_vs_sequential``) gates its own
+  ``speedup`` ratio: cold compile vs warm artifact-store start, and a
+  request burst served coalesced vs one-by-one;
+* ``BENCH_speculative.json`` (``"rows"`` ladder) — for every automaton
+  size ``n`` present in both, the fresh speculative-vs-enumeration
+  ``speedup`` must be within ``--max-regression`` of the baseline's.
 
-Both gates compare same-machine **ratios**, never absolute seconds, so they
+All gates compare same-machine **ratios**, never absolute seconds, so they
 transfer across runner generations; mixing report kinds between baseline
 and fresh is an input error.
 
@@ -59,7 +67,9 @@ def _load(path: Path) -> dict:
 def _rows(path: Path) -> tuple:
     """-> (kind, {label: gated ratio}). Construction reports gate the
     per-P batched speedup; engine reports gate each mode's throughput
-    relative to the same run's enumeration row."""
+    relative to the same run's enumeration row; service reports gate each
+    named bench's speedup; speculative reports gate the per-n
+    speculative-vs-enumeration speedup."""
     report = _load(path)
     if "modes" in report:
         modes = report["modes"]
@@ -72,6 +82,19 @@ def _rows(path: Path) -> tuple:
             mode: float(row["mchar_pattern_per_s"]) / float(base)
             for mode, row in modes.items()
             if isinstance(row, dict) and "mchar_pattern_per_s" in row
+        }
+    if report.get("suite") == "scan_service":
+        return "service", {
+            str(row["bench"]): float(row["speedup"])
+            for row in report.get("results", [])
+            if isinstance(row, dict) and "bench" in row and "speedup" in row
+        }
+    if "rows" in report:
+        return "speculative", {
+            f"n={int(row['n_states'])}": float(row["speedup"])
+            for row in report["rows"]
+            if isinstance(row, dict)
+            and "n_states" in row and "speedup" in row
         }
     rows = {}
     for row in report.get("results", []):

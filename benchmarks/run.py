@@ -17,13 +17,25 @@ Prints ``name,us_per_call,derived`` CSV. Figure mapping:
   service bench_service               (cold vs warm start through the
           artifact store; coalesced vs sequential submits; writes
           BENCH_service.json)
+  obs     bench_obs                   (observability overhead: warm scans
+          with metrics enabled vs disabled, writes BENCH_obs.json)
 
 ``--smoke`` caps sizes/iterations (see benchmarks/_config.py) so CI can run
 the whole harness as a smoke job without burning minutes on full figures.
 ``--profile`` wraps each module in ``jax.profiler.trace`` and writes one
 trace directory per module under ``BENCH_traces/`` (the profiling harness:
 open in TensorBoard/Perfetto to see where a bench's wall time went; the
-bench-smoke CI job uploads the smoke-size traces as an artifact).
+bench-smoke CI job uploads the smoke-size traces as an artifact), turns on
+``obs.configure(xla_annotations=True)`` so engine/construction spans land
+on the same timeline, and writes a machine-readable per-module summary
+(status, wall seconds, trace path) to ``BENCH_traces/summary.json``.
+
+Every sweep also records each module's *metric footprint*: the delta of the
+process-wide ``repro.obs`` registry snapshot across the module's run,
+appended as one JSONL record per module to ``BENCH_metrics.jsonl`` next to
+the BENCH JSONs (uploaded as a CI artifact) — construction rounds, cache
+hit/miss counts, speculative repair totals per benchmark, correlating the
+BENCH timings with what the code actually did.
 A benchmark module that fails to *import* (missing optional dep, broken
 bench) is skipped with a warning — it costs its own suites, never the sweep.
 But a sweep where **every** module failed to import ran nothing at all:
@@ -54,6 +66,7 @@ SUITES = [
     ("bench_multipattern", ("run", "run_engine_modes")),
     ("bench_speculative", ("run",)),
     ("bench_service", ("run", "run_coalesced")),
+    ("bench_obs", ("run",)),
 ]
 
 
@@ -85,17 +98,25 @@ def main() -> None:
                          "BENCH_traces/ (open with TensorBoard or Perfetto)")
     args = ap.parse_args()
 
+    from pathlib import Path
+
     from benchmarks import _config
+    from repro import obs
 
     if args.smoke:
         _config.set_smoke(True)
 
+    repo_root = Path(__file__).resolve().parents[1]
+    metrics_path = repo_root / "BENCH_metrics.jsonl"
+    metrics_path.unlink(missing_ok=True)   # one sweep, one fresh log
+
     trace_root = None
     if args.profile:
-        from pathlib import Path
-
-        trace_root = Path(__file__).resolve().parents[1] / "BENCH_traces"
+        trace_root = repo_root / "BENCH_traces"
         trace_root.mkdir(exist_ok=True)
+        # Bridge obs spans onto the XLA profiler's host timeline so the
+        # engine/construction spans show up inside each module's trace.
+        obs.configure(xla_annotations=True)
 
     modules, skipped = _resolve_suites()
     if not modules:
@@ -113,6 +134,7 @@ def main() -> None:
     failures = 0
     for mod_name, suites in modules:
         status = "ok"
+        before = obs.snapshot()
         t0 = time.perf_counter()
 
         def run_suites():
@@ -135,13 +157,34 @@ def main() -> None:
                 run_suites()
         else:
             run_suites()
-        summary.append((mod_name, status, time.perf_counter() - t0))
+        wall = time.perf_counter() - t0
+        summary.append((mod_name, status, wall))
+        # The module's metric footprint: what the registry counted while it
+        # ran (bench_obs resets the registry mid-run on purpose — its delta
+        # is the post-reset residue, still useful, just not cumulative).
+        obs.write_jsonl(metrics_path, [obs.snapshot_record(
+            obs.snapshot_delta(before, obs.snapshot()), label=mod_name,
+        )])
 
     width = max(len(name) for name, _, _ in summary)
     print("\n== sweep summary ==")
     for name, status, wall in sorted(summary, key=lambda r: -r[2]):
         print(f"{name:<{width}}  {status:<16} {wall:8.1f}s")
     sys.stdout.flush()
+    if trace_root is not None:
+        import json
+
+        # Machine-readable sweep outcome next to the traces: what ran, how
+        # long, where its trace went — the profiling run's index file.
+        (trace_root / "summary.json").write_text(json.dumps({
+            "smoke": _config.SMOKE,
+            "modules": [
+                {"module": name, "status": status, "wall_s": wall,
+                 "trace": (str(trace_root / name)
+                           if (trace_root / name).is_dir() else None)}
+                for name, status, wall in summary
+            ],
+        }, indent=1))
     if failures:
         sys.exit(1)
 

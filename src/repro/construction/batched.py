@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as PSpec
 
+from .. import obs
 from ..compat import make_mesh, shard_map as compat_shard_map
 from ..core.dfa import DFA
 from ..core.fingerprint import (
@@ -666,20 +667,29 @@ def construct_bank(
     if bucket_growth < 2:
         raise ValueError(f"bucket_growth must be >= 2, got {bucket_growth}")
 
-    if method == "loop":
-        result = _construct_loop(
-            dfas, max_states=max_states, max_retries=max_retries,
-            engine=engine, poly_index=poly_index,
-        )
-    else:
-        result = _construct_bucketed(
-            dfas, max_states=max_states, tile=tile, max_retries=max_retries,
-            poly_index=poly_index, distribution=distribution, mesh=mesh,
-            pattern_axis=pattern_axis, fp_backend=fp_backend,
-            expand_backend=exp_backend, bucketing=bucketing,
-            bucket_growth=bucket_growth,
-            weight_fn=_weight_fn or _default_weight_fn,
-        )
+    with obs.span("construct_bank", patterns=len(dfas), method=method,
+                  bucketing=bucketing):
+        if method == "loop":
+            result = _construct_loop(
+                dfas, max_states=max_states, max_retries=max_retries,
+                engine=engine, poly_index=poly_index,
+            )
+        else:
+            result = _construct_bucketed(
+                dfas, max_states=max_states, tile=tile,
+                max_retries=max_retries,
+                poly_index=poly_index, distribution=distribution, mesh=mesh,
+                pattern_axis=pattern_axis, fp_backend=fp_backend,
+                expand_backend=exp_backend, bucketing=bucketing,
+                bucket_growth=bucket_growth,
+                weight_fn=_weight_fn or _default_weight_fn,
+            )
+    obs.counter("construction.banks").inc()
+    obs.counter("construction.patterns").inc(len(dfas))
+    obs.counter("construction.rounds").inc(result.stats.rounds)
+    obs.counter("construction.retries").inc(int(result.stats.retries.sum()))
+    obs.counter("construction.blown").inc(int(result.blown.sum()))
+    obs.histogram("construction.bank_wall_s").observe(result.stats.wall_time_s)
     if on_blowup == "raise":
         result.require_all()
     return result
@@ -752,13 +762,17 @@ def _construct_bucketed(dfas, *, max_states, tile, max_retries, poly_index,
             # bucket-local; weight fns must derive weights from it alone.
             return weight_fn(_idx[p], attempt, n_words, consts)
 
-        sub = _construct_batched(
-            sub_dfas, max_states=max_states, tile=tile,
-            max_retries=max_retries, poly_index=poly_index,
-            distribution=distribution, mesh=mesh, pattern_axis=pattern_axis,
-            fp_backend=fp_backend, expand_backend=expand_backend,
-            bucket_growth=bucket_growth, weight_fn=sub_weight_fn,
-        )
+        with obs.span("construct_bank.bucket", edge=int(edge),
+                      n_patterns=len(idx),
+                      n_max=max(d.n_states for d in sub_dfas)):
+            sub = _construct_batched(
+                sub_dfas, max_states=max_states, tile=tile,
+                max_retries=max_retries, poly_index=poly_index,
+                distribution=distribution, mesh=mesh,
+                pattern_axis=pattern_axis,
+                fp_backend=fp_backend, expand_backend=expand_backend,
+                bucket_growth=bucket_growth, weight_fn=sub_weight_fn,
+            )
         ii = np.asarray(idx, dtype=np.int64)
         stats.pattern_rounds[ii] = sub.stats.pattern_rounds
         stats.retries[ii] = sub.stats.retries
@@ -932,41 +946,53 @@ def _construct_batched(dfas, *, max_states, tile, max_retries, poly_index,
             np.minimum(n_states_h[act] - frontier_h[act], tile) * k
         )
 
-        if distribution == "shard_map":
-            round_fn = _sharded_round_exe(
-                mesh, pattern_axis, tile=tile, n=n, k=k, capacity=capacity,
-                fp_backend=fp_backend, expand_backend=expand_backend,
-                interpret=interpret,
-            )
-            out = round_fn(
-                tables[jidx], states[jidx], fp_hi[jidx], fp_lo[jidx],
-                delta[jidx], n_states[jidx], frontier[jidx],
-                jact, weights[jidx], limbs[jidx], masks[jidx],
-            )
-            o_states, o_fp_hi, o_fp_lo, o_delta, o_n, o_frontier, o_coll = out
-            live = jnp.asarray(act)
-            states = states.at[live].set(o_states[: act.size])
-            fp_hi = fp_hi.at[live].set(o_fp_hi[: act.size])
-            fp_lo = fp_lo.at[live].set(o_fp_lo[: act.size])
-            delta = delta.at[live].set(o_delta[: act.size])
-            n_states = n_states.at[live].set(o_n[: act.size])
-            frontier = frontier.at[live].set(o_frontier[: act.size])
-            n_states_h[act] = np.asarray(o_n[: act.size], dtype=np.int64)
-            frontier_h[act] = np.asarray(o_frontier[: act.size], dtype=np.int64)
-            coll_np = np.asarray(o_coll[: act.size])
-        else:
-            step = _local_step_exe(
-                tile=tile, n=n, k=k, capacity=capacity, P=P, bucket=bucket,
-                fp_backend=fp_backend, expand_backend=expand_backend,
-                interpret=interpret,
-            )
-            states, fp_hi, fp_lo, delta, n_states, frontier, o_coll = step(
-                tables, states, fp_hi, fp_lo, delta, n_states, frontier,
-                weights, limbs, masks, jidx, jact,
-            )
-            n_states_h = np.asarray(n_states).astype(np.int64)
-            frontier_h = np.asarray(frontier).astype(np.int64)
-            coll_np = np.asarray(o_coll)[: act.size]
+        round_t0 = time.perf_counter()
+        with obs.span("construction.round", round=stats.rounds,
+                      bucket=bucket, capacity=capacity):
+            if distribution == "shard_map":
+                round_fn = _sharded_round_exe(
+                    mesh, pattern_axis, tile=tile, n=n, k=k,
+                    capacity=capacity,
+                    fp_backend=fp_backend, expand_backend=expand_backend,
+                    interpret=interpret,
+                )
+                out = round_fn(
+                    tables[jidx], states[jidx], fp_hi[jidx], fp_lo[jidx],
+                    delta[jidx], n_states[jidx], frontier[jidx],
+                    jact, weights[jidx], limbs[jidx], masks[jidx],
+                )
+                (o_states, o_fp_hi, o_fp_lo, o_delta, o_n, o_frontier,
+                 o_coll) = out
+                live = jnp.asarray(act)
+                states = states.at[live].set(o_states[: act.size])
+                fp_hi = fp_hi.at[live].set(o_fp_hi[: act.size])
+                fp_lo = fp_lo.at[live].set(o_fp_lo[: act.size])
+                delta = delta.at[live].set(o_delta[: act.size])
+                n_states = n_states.at[live].set(o_n[: act.size])
+                frontier = frontier.at[live].set(o_frontier[: act.size])
+                n_states_h[act] = np.asarray(o_n[: act.size], dtype=np.int64)
+                frontier_h[act] = np.asarray(
+                    o_frontier[: act.size], dtype=np.int64
+                )
+                coll_np = np.asarray(o_coll[: act.size])
+            else:
+                step = _local_step_exe(
+                    tile=tile, n=n, k=k, capacity=capacity, P=P,
+                    bucket=bucket,
+                    fp_backend=fp_backend, expand_backend=expand_backend,
+                    interpret=interpret,
+                )
+                states, fp_hi, fp_lo, delta, n_states, frontier, o_coll = \
+                    step(
+                        tables, states, fp_hi, fp_lo, delta, n_states,
+                        frontier, weights, limbs, masks, jidx, jact,
+                    )
+                n_states_h = np.asarray(n_states).astype(np.int64)
+                frontier_h = np.asarray(frontier).astype(np.int64)
+                coll_np = np.asarray(o_coll)[: act.size]
+        obs.histogram("construction.round_wall_s").observe(
+            time.perf_counter() - round_t0
+        )
 
         collided = act[coll_np]
         # Per-pattern polynomial retry, applied as ONE batched scatter per

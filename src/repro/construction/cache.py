@@ -46,6 +46,7 @@ import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
+from .. import obs
 from ..core.dfa import DFA
 from ..core.fingerprint import DEFAULT_POLY_LOW
 from .types import SFA
@@ -158,15 +159,19 @@ class SFACache:
                 ent = self._promote(key)
             if ent is None:
                 self.info.misses += 1
+                obs.counter("cache.sfa.misses").inc()
                 return None, None
             if isinstance(ent, _Blowup):
                 if ent.budget >= max_states:
                     self.info.hits += 1
+                    obs.counter("cache.sfa.hits").inc()
                     self._entries.move_to_end(key)
                     return "blowup", None
                 self.info.misses += 1  # bigger budget might close — rebuild
+                obs.counter("cache.sfa.misses").inc()
                 return None, None
             self.info.hits += 1
+            obs.counter("cache.sfa.hits").inc()
             self._entries.move_to_end(key)
             if ent.n_states > max_states:
                 return "blowup", None
@@ -226,6 +231,7 @@ class SFACache:
                     self._put(key, _Blowup(budget=int(payload)), 0)
                 self.info.disk_hits += 1
                 n += 1
+        obs.counter("cache.sfa.disk_hits").inc(n)
         return n
 
     def _promote(self, key: str):
@@ -242,6 +248,7 @@ class SFACache:
             ent = _Blowup(budget=int(payload))
             self._put(key, ent, 0)
         self.info.disk_hits += 1
+        obs.counter("cache.sfa.disk_hits").inc()
         return ent
 
     def clear(self) -> None:
@@ -261,12 +268,15 @@ class SFACache:
             self.info.current_bytes -= self._size(old)
         self._entries[key] = value
         self.info.stores += 1
+        obs.counter("cache.sfa.stores").inc()
         self.info.current_bytes += nbytes
         while (len(self._entries) > self.max_entries
                or self.info.current_bytes > self.max_bytes):
             _, victim = self._entries.popitem(last=False)
             self.info.evictions += 1
+            obs.counter("cache.sfa.evictions").inc()
             self.info.current_bytes -= self._size(victim)
+        obs.gauge("cache.sfa.bytes").set(self.info.current_bytes)
 
 
 _SHARED: SFACache | None = None
@@ -340,6 +350,7 @@ class RoundCompileCache:
             ent = self._entries.get(key)
             if ent is not None:
                 self.info.hits += 1
+                obs.counter("cache.rounds.hits").inc()
                 self._entries.move_to_end(key)
                 return ent
         ent = build()
@@ -347,9 +358,11 @@ class RoundCompileCache:
             self._entries[key] = ent
             self._entries.move_to_end(key)
             self.info.lowerings += 1
+            obs.counter("cache.rounds.lowerings").inc()
             while len(self._entries) > self.max_entries:
                 self._entries.popitem(last=False)
                 self.info.evictions += 1
+                obs.counter("cache.rounds.evictions").inc()
         return ent
 
     def __len__(self) -> int:

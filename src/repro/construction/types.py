@@ -125,6 +125,13 @@ class BankStats:
     whole-bank wall time; per-pattern ``SFAStats.wall_time_s`` is the
     rounds-weighted *share* of it — a bank's wall belongs to the bank, and a
     pattern that closed in 2 of 13 rounds must not report 13 rounds' worth.
+
+    These per-call dataclasses are the *request-scoped* view of the same
+    accounting the process-wide ``repro.obs`` registry aggregates:
+    ``construct_bank`` publishes each result's totals into the
+    ``construction.*`` counters/histograms at return, so registry values
+    are running sums of the fields reported here (field meanings and
+    values are unchanged whether observability is on or off).
     """
 
     method: str

@@ -33,6 +33,7 @@ from typing import Any, Mapping, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..compat import make_mesh
 from ..construction import SFA, StateBlowup, construct_bank
 from ..core.bucketing import partition_by_size
@@ -328,6 +329,9 @@ class Scanner:
         self.starts = np.asarray([d.start for d in dfas], dtype=np.int32)
         self._dfas = dfas
         self.last_speculation: SpeculationStats | None = None
+        #: trace id of the last traced compile/scan through this scanner —
+        #: the key ``obs.trace_summary`` (and ``describe``) correlates on.
+        self.last_trace_id: str | None = None
         self.pattern_modes = {}
         for g in groups:
             for i in g.indices:
@@ -350,39 +354,48 @@ class Scanner:
             if d.alphabet != alphabet:
                 raise ValueError("all patterns must share one alphabet")
 
-        # Resolve per-pattern mode. ``auto`` = the paper's criterion: use the
-        # SFA when construction closes under the budget, enumeration when it
-        # blows up (Mytkowicz-style fallback). Construction goes through the
-        # content-addressed cache + the batched bank closure (see
-        # repro.construction): recompiling the same patterns is free.
-        modes, sfas, report = _resolve_sfas(ids, dfas, plan)
+        trace_id = None
+        with obs.span("scanner.compile", patterns=len(dfas),
+                      mode=plan.mode, backend=plan.backend):
+            trace_id = obs.current_trace_id()
+            # Resolve per-pattern mode. ``auto`` = the paper's criterion:
+            # use the SFA when construction closes under the budget,
+            # enumeration when it blows up (Mytkowicz-style fallback).
+            # Construction goes through the content-addressed cache + the
+            # batched bank closure (see repro.construction): recompiling
+            # the same patterns is free.
+            modes, sfas, report = _resolve_sfas(ids, dfas, plan)
 
-        mesh = None
-        if plan.distribution == "shard_map":
-            mesh = plan.mesh if plan.mesh is not None else make_mesh(
-                (1,), (plan.data_axis,)
-            )
+            mesh = None
+            if plan.distribution == "shard_map":
+                mesh = plan.mesh if plan.mesh is not None else make_mesh(
+                    (1,), (plan.data_axis,)
+                )
 
-        groups = []
-        for mode in ("sfa", "enumeration", "speculative"):
-            member = [i for i, m in enumerate(modes) if m == mode]
-            if not member:
-                continue
-            if plan.chunking.bucket:
-                sizes = [
-                    sfas[i].n_states if mode == "sfa" else dfas[i].n_states
-                    for i in member
-                ]
-                parts = _size_partition(sizes, plan.chunking.bucket_edges)
-                parts = [[member[j] for j in p] for p in parts]
-            else:
-                parts = [member]
-            for part in parts:
-                groups.append(cls._build_group(
-                    part, [dfas[i] for i in part], [ids[i] for i in part],
-                    mode, [sfas.get(i) for i in part], plan, mesh,
-                ))
-        return cls(ids, dfas, groups, plan, single, mesh, report)
+            groups = []
+            for mode in ("sfa", "enumeration", "speculative"):
+                member = [i for i, m in enumerate(modes) if m == mode]
+                if not member:
+                    continue
+                if plan.chunking.bucket:
+                    sizes = [
+                        sfas[i].n_states if mode == "sfa"
+                        else dfas[i].n_states
+                        for i in member
+                    ]
+                    parts = _size_partition(sizes, plan.chunking.bucket_edges)
+                    parts = [[member[j] for j in p] for p in parts]
+                else:
+                    parts = [member]
+                for part in parts:
+                    groups.append(cls._build_group(
+                        part, [dfas[i] for i in part], [ids[i] for i in part],
+                        mode, [sfas.get(i) for i in part], plan, mesh,
+                    ))
+        obs.counter("engine.compiles").inc()
+        scanner = cls(ids, dfas, groups, plan, single, mesh, report)
+        scanner.last_trace_id = trace_id
+        return scanner
 
     @staticmethod
     def _build_group(indices, dfas, gids, mode, sfas, plan, mesh) -> PatternGroup:
@@ -601,56 +614,66 @@ class Scanner:
         starts = g.bank.starts.astype(np.int32)
         Pg = len(g.indices)
         stats = SpeculationStats()
-        if head_len:
-            spec = self._speculation_profile(g, corpus)
-            head = corpus[:, :head_len]
-            if self.mesh is not None:
-                n_dev = int(np.prod(list(self.mesh.shape.values())))
-                if D % n_dev:
-                    raise ValueError(
-                        f"shard_map distribution needs doc count ({D}) "
-                        f"divisible by the mesh's {self.plan.data_axis} "
-                        f"size ({n_dev})"
+        with obs.span("speculative.scan", patterns=Pg, docs=D):
+            if head_len:
+                spec = self._speculation_profile(g, corpus)
+                head = corpus[:, :head_len]
+                if self.mesh is not None:
+                    n_dev = int(np.prod(list(self.mesh.shape.values())))
+                    if D % n_dev:
+                        raise ValueError(
+                            f"shard_map distribution needs doc count ({D}) "
+                            f"divisible by the mesh's {self.plan.data_axis} "
+                            f"size ({n_dev})"
+                        )
+                    out = g._spec_dist_fn(
+                        g.tables, jnp.asarray(spec), jnp.asarray(starts),
+                        jnp.asarray(head),
                     )
-                out = g._spec_dist_fn(
-                    g.tables, jnp.asarray(spec), jnp.asarray(starts),
-                    jnp.asarray(head),
+                else:
+                    out = speculative_bank_finals(
+                        g.tables, jnp.asarray(spec), jnp.asarray(starts),
+                        jnp.asarray(head), n_chunks=n_chunks,
+                        max_rounds=pol.max_repair_rounds,
+                    )
+                finals, resolved, hit_n, repaired, rounds = (
+                    np.asarray(x) for x in out
                 )
+                stats = SpeculationStats(
+                    total_chunks=Pg * D * n_chunks,
+                    hit_chunks=int(hit_n),
+                    repaired_chunks=int(repaired),
+                    repair_rounds=int(rounds),
+                    fallback_lanes=int(np.sum(~resolved)),
+                )
+                if not resolved.all():
+                    finals = np.array(finals)  # device views are read-only
+                    bad = np.flatnonzero(~resolved.all(axis=0))
+                    with obs.span("speculative.fallback", lanes=len(bad)):
+                        maps = np.asarray(X.bank_doc_mappings(
+                            g.tables,
+                            jnp.asarray(np.ascontiguousarray(head[bad])),
+                            n_chunks,
+                        ))
+                    exact = np.take_along_axis(
+                        maps, starts[:, None, None].astype(np.int64), axis=2
+                    )[:, :, 0]
+                    finals[:, bad] = np.where(
+                        resolved[:, bad], finals[:, bad], exact
+                    )
             else:
-                out = speculative_bank_finals(
-                    g.tables, jnp.asarray(spec), jnp.asarray(starts),
-                    jnp.asarray(head), n_chunks=n_chunks,
-                    max_rounds=pol.max_repair_rounds,
+                finals = np.repeat(starts[:, None], D, axis=1)
+            if head_len < L:
+                finals = X.advance_states_sequential(
+                    g.bank.tables, finals, corpus[:, head_len:]
                 )
-            finals, resolved, hit_n, repaired, rounds = (
-                np.asarray(x) for x in out
-            )
-            stats = SpeculationStats(
-                total_chunks=Pg * D * n_chunks,
-                hit_chunks=int(hit_n),
-                repaired_chunks=int(repaired),
-                repair_rounds=int(rounds),
-                fallback_lanes=int(np.sum(~resolved)),
-            )
-            if not resolved.all():
-                finals = np.array(finals)  # device views are read-only
-                bad = np.flatnonzero(~resolved.all(axis=0))
-                maps = np.asarray(X.bank_doc_mappings(
-                    g.tables, jnp.asarray(np.ascontiguousarray(head[bad])),
-                    n_chunks,
-                ))
-                exact = np.take_along_axis(
-                    maps, starts[:, None, None].astype(np.int64), axis=2
-                )[:, :, 0]
-                finals[:, bad] = np.where(
-                    resolved[:, bad], finals[:, bad], exact
-                )
-        else:
-            finals = np.repeat(starts[:, None], D, axis=1)
-        if head_len < L:
-            finals = X.advance_states_sequential(
-                g.bank.tables, finals, corpus[:, head_len:]
-            )
+        obs.counter("speculative.total_chunks").inc(stats.total_chunks)
+        obs.counter("speculative.hit_chunks").inc(stats.hit_chunks)
+        obs.counter("speculative.repaired_chunks").inc(stats.repaired_chunks)
+        obs.counter("speculative.repair_rounds").inc(stats.repair_rounds)
+        obs.counter("speculative.fallback_lanes").inc(stats.fallback_lanes)
+        if stats.total_chunks:
+            obs.gauge("speculative.hit_rate").set(stats.hit_rate)
         return finals, stats
 
     # -- public scan API ----------------------------------------------------
@@ -661,34 +684,40 @@ class Scanner:
         D = len(enc)
         hits = np.zeros((self.n_patterns, D), dtype=bool)
         spec_stats: SpeculationStats | None = None
-        # Batch docs of equal length together (one fixed-shape program each).
-        by_len: dict = {}
-        for d, e in enumerate(enc):
-            by_len.setdefault(len(e), []).append(d)
-        for L, idxs in sorted(by_len.items()):
-            corpus = np.stack([enc[d] for d in idxs]) if L else \
-                np.zeros((len(idxs), 0), dtype=np.int32)
-            for g in self.groups:
-                if g.mode == "speculative" and L:
-                    finals, st = self._group_doc_finals(g, corpus)
-                    spec_stats = st if spec_stats is None \
-                        else spec_stats.merged(st)
-                else:
-                    if L:
-                        maps = self._group_doc_mappings(g, corpus)
+        with obs.span("scanner.scan", patterns=self.n_patterns, docs=D):
+            self.last_trace_id = obs.current_trace_id() or self.last_trace_id
+            # Batch docs of equal length together (one fixed-shape program
+            # each).
+            by_len: dict = {}
+            for d, e in enumerate(enc):
+                by_len.setdefault(len(e), []).append(d)
+            for L, idxs in sorted(by_len.items()):
+                corpus = np.stack([enc[d] for d in idxs]) if L else \
+                    np.zeros((len(idxs), 0), dtype=np.int32)
+                for g in self.groups:
+                    if g.mode == "speculative" and L:
+                        finals, st = self._group_doc_finals(g, corpus)
+                        spec_stats = st if spec_stats is None \
+                            else spec_stats.merged(st)
                     else:
-                        maps = np.broadcast_to(
-                            np.arange(g.n, dtype=np.int32),
-                            (len(g.indices), len(idxs), g.n),
-                        )
-                    starts = g.bank.starts                      # (Pg,)
-                    finals = np.take_along_axis(
-                        maps, starts[:, None, None].astype(np.int64), axis=2
-                    )[:, :, 0]                                  # (Pg, Dg)
-                acc = np.take_along_axis(
-                    g.bank.accepting, finals.astype(np.int64), axis=1
-                )
-                hits[np.ix_(g.indices, np.asarray(idxs))] = acc
+                        if L:
+                            maps = self._group_doc_mappings(g, corpus)
+                        else:
+                            maps = np.broadcast_to(
+                                np.arange(g.n, dtype=np.int32),
+                                (len(g.indices), len(idxs), g.n),
+                            )
+                        starts = g.bank.starts                  # (Pg,)
+                        finals = np.take_along_axis(
+                            maps, starts[:, None, None].astype(np.int64),
+                            axis=2
+                        )[:, :, 0]                              # (Pg, Dg)
+                    acc = np.take_along_axis(
+                        g.bank.accepting, finals.astype(np.int64), axis=1
+                    )
+                    hits[np.ix_(g.indices, np.asarray(idxs))] = acc
+        obs.counter("engine.scans").inc()
+        obs.counter("engine.docs_scanned").inc(D)
         self.last_speculation = spec_stats
         return ScanResult(hits=hits, ids=self.ids, speculation=spec_stats)
 
@@ -875,6 +904,19 @@ class Scanner:
                 f"{s.repaired_chunks} repaired in {s.repair_rounds} "
                 f"round(s), {s.fallback_lanes} fallback lane(s)"
             )
+        if self.last_trace_id is not None:
+            summ = obs.trace_summary(self.last_trace_id)
+            if summ["spans"]:
+                lines.append(
+                    f"  last trace {summ['trace_id']}: "
+                    f"{len(summ['spans'])} span(s), "
+                    f"wall {summ['wall_s'] * 1e3:.2f} ms"
+                )
+                for sp in summ["spans"][:8]:
+                    lines.append(
+                        f"    {sp['name']}: {sp['wall_s'] * 1e3:.2f} ms "
+                        f"{sp['attrs'] or ''}".rstrip()
+                    )
         return "\n".join(lines)
 
 

@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.fingerprint import BarrettConstants, fold_weights_u32
 
 from .clmul import consts_limbs_of, fingerprint_bank_pallas, fingerprint_pallas
@@ -28,6 +29,15 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _count(name: str) -> None:
+    # ``kernels.<op>.calls`` counts *wrapper* invocations: eager dispatches,
+    # or trace events when the wrapper is inlined into a jitted round — a
+    # cheap "which kernels does this workload reach" signal, not a per-
+    # execution count (XLA replays compiled programs without re-entering
+    # Python).
+    obs.counter(f"kernels.{name}.calls").inc()
+
+
 def fingerprint(
     words: jnp.ndarray,
     consts: BarrettConstants,
@@ -38,6 +48,7 @@ def fingerprint(
     """Batched Rabin fingerprints of packed (B, W) uint32 words -> (B, 2)."""
     if interpret is None:
         interpret = _default_interpret()
+    _count("fingerprint")
     weights = fold_weights_u32(words.shape[-1], consts)
     return fingerprint_pallas(
         words, weights, consts_limbs_of(consts), block_b=block_b, interpret=interpret
@@ -64,6 +75,7 @@ def fingerprint_bank(
     """
     if interpret is None:
         interpret = _default_interpret()
+    _count("fingerprint_bank")
     P, B, W = words.shape
     if len(consts_list) != P:
         raise ValueError(f"expected {P} per-pattern constants, got "
@@ -91,6 +103,7 @@ def fingerprint_bank_stacked(
     the fingerprint stage *inside* its AOT-compiled round."""
     if interpret is None:
         interpret = _default_interpret()
+    _count("fingerprint_bank_stacked")
     return fingerprint_bank_pallas(
         words, weights, limbs, block_b=block_b, interpret=interpret
     )
@@ -113,6 +126,7 @@ def expand_frontier_bank(
     """
     if interpret is None:
         interpret = _default_interpret()
+    _count("expand_frontier_bank")
     return expand_bank_pallas(tables, ft, block_t=block_t,
                               interpret=interpret)
 
@@ -127,6 +141,7 @@ def compose(
     """Function-composition combine (f then g): (B, n) x (B, n) -> (B, n)."""
     if interpret is None:
         interpret = _default_interpret()
+    _count("compose")
     return compose_pallas(f, g, block_q=block_q, interpret=interpret)
 
 
@@ -144,6 +159,7 @@ def match_chunks(
     """
     if interpret is None:
         interpret = _default_interpret()
+    _count("match_chunks")
     return match_chunks_pallas(table, chunks, block_b=block_b,
                                interpret=interpret)
 
@@ -158,5 +174,6 @@ def match_bank_chunks(
     """Multi-automaton chunk functions: (P, n, k), (B, L) -> (P, B, n)."""
     if interpret is None:
         interpret = _default_interpret()
+    _count("match_bank_chunks")
     return match_bank_chunks_pallas(tables, chunks, block_b=block_b,
                                     interpret=interpret)

@@ -34,6 +34,7 @@ from pathlib import Path
 
 import numpy as np
 
+from .. import obs
 from ..construction import dfa_cache_key
 from ..engine import ScanPlan, Scanner, ScanResult
 from .corpus import CorpusManifest, scan_shard
@@ -66,9 +67,14 @@ class CorpusJob:
         self.stream_threshold = stream_threshold
         self._shard_dir = self.workdir / "shards"
         self._shard_dir.mkdir(parents=True, exist_ok=True)
-        # Compilation runs through the plan's cache tiers, so a resuming
-        # process with a persistent store pays zero construction rounds.
-        self.scanner = Scanner.compile(patterns, plan)
+        # The job owns one trace id for its whole lifetime: the compile here
+        # and every shard span in run() carry it, so a resumed job's spans
+        # correlate with the original compile in the event log.
+        with obs.span("jobs.compile") as sp:
+            self.trace_id = sp.trace_id if sp is not None else None
+            # Compilation runs through the plan's cache tiers, so a resuming
+            # process with a persistent store pays zero construction rounds.
+            self.scanner = Scanner.compile(patterns, plan)
         self._check_or_write_meta()
 
     # -- metadata ------------------------------------------------------------
@@ -160,13 +166,15 @@ class CorpusJob:
         for shard in todo:
             if max_shards is not None and scanned >= max_shards:
                 break
-            hits = scan_shard(self.scanner, self.manifest, shard,
-                              stream_threshold=self.stream_threshold)
-            path = self._shard_path(shard)
-            tmp = path.with_suffix(f".tmp.{os.getpid()}")
-            with open(tmp, "wb") as f:
-                np.savez(f, hits=hits)
-            os.replace(tmp, path)   # commit point
+            with obs.span("jobs.shard", trace_id=self.trace_id, shard=shard):
+                hits = scan_shard(self.scanner, self.manifest, shard,
+                                  stream_threshold=self.stream_threshold)
+                path = self._shard_path(shard)
+                tmp = path.with_suffix(f".tmp.{os.getpid()}")
+                with open(tmp, "wb") as f:
+                    np.savez(f, hits=hits)
+                os.replace(tmp, path)   # commit point
+            obs.counter("jobs.shards_scanned").inc()
             scanned += 1
         return JobReport(
             n_shards=self.manifest.n_shards,

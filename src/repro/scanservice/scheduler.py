@@ -29,10 +29,11 @@ from __future__ import annotations
 import threading
 import time
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import numpy as np
 
+from .. import obs
 from ..construction import dfa_cache_key
 from ..core.dfa import DFA
 from ..engine import ChunkPolicy, ConstructionPolicy, ScanPlan, Scanner
@@ -64,10 +65,19 @@ class RequestResult:
 
 
 class Ticket:
-    """Handle for one submitted request; redeem with :meth:`result`."""
+    """Handle for one submitted request; redeem with :meth:`result`.
 
-    def __init__(self, scheduler: "BatchScheduler"):
+    ``trace_id`` is the request's observability correlation key (captured
+    at submit time, None with tracing disabled): every span the request's
+    flush produces — scheduler.flush, scanner.compile, construct_bank
+    rounds, store gets — carries it, so ``obs.trace_summary(t.trace_id)``
+    reconstructs where this request's time went.
+    """
+
+    def __init__(self, scheduler: "BatchScheduler",
+                 trace_id: str | None = None):
         self._scheduler = scheduler
+        self.trace_id = trace_id
         self._event = threading.Event()
         self._result: RequestResult | None = None
         self._error: BaseException | None = None
@@ -98,6 +108,16 @@ class Ticket:
 
 @dataclass
 class SchedulerStats:
+    """Point-in-time scheduler counters.
+
+    ``BatchScheduler.stats`` returns an **atomic copy** taken under the
+    scheduler's stats lock — under the thread driver, the worker increments
+    these concurrently with readers, and a field-by-field read of a live
+    object could see e.g. ``flushes`` from one flush and ``union_docs``
+    from the next. Every mutation also mirrors into the process-wide
+    ``scheduler.*`` registry metrics.
+    """
+
     requests: int = 0
     flushes: int = 0
     max_coalesced: int = 0
@@ -157,7 +177,14 @@ class BatchScheduler:
         self.window_s = window_s
         self.max_batch = max_batch
         self.max_scanners = max_scanners
-        self.stats = SchedulerStats()
+        # All counter mutations go through _bump under this lock; the
+        # ``stats`` property copies atomically under it (satisfying the
+        # thread-driver snapshot-consistency contract).
+        self._stats = SchedulerStats()
+        self._stats_lock = threading.Lock()
+        #: trace id of the most recent flush (None before any, or with
+        #: tracing disabled) — what ``ScanService.metrics`` correlates on.
+        self.last_trace_id: str | None = None
         self._pending: list = []
         self._cond = threading.Condition()
         self._first_ts: float | None = None
@@ -174,6 +201,31 @@ class BatchScheduler:
                 target=self._worker_loop, name="scan-batcher", daemon=True
             )
             self._worker.start()
+
+    # -- stats ---------------------------------------------------------------
+
+    @property
+    def stats(self) -> SchedulerStats:
+        """An atomic copy of the counters (see :class:`SchedulerStats`)."""
+        with self._stats_lock:
+            return replace(self._stats)
+
+    def _bump(self, **deltas) -> None:
+        """Apply counter deltas atomically and mirror them into the
+        ``scheduler.*`` registry namespace (``max_coalesced`` is a running
+        max, exported as a gauge)."""
+        with self._stats_lock:
+            for name, d in deltas.items():
+                if name == "max_coalesced":
+                    self._stats.max_coalesced = max(
+                        self._stats.max_coalesced, d
+                    )
+                    obs.gauge("scheduler.max_coalesced").set(
+                        self._stats.max_coalesced
+                    )
+                else:
+                    setattr(self._stats, name, getattr(self._stats, name) + d)
+                    obs.counter(f"scheduler.{name}").inc(d)
 
     # -- submission ----------------------------------------------------------
 
@@ -196,15 +248,23 @@ class BatchScheduler:
             p if isinstance(p, str) else f"pattern_{i}"
             for i, p in enumerate(patterns)
         )
+        # Capture the request's trace id on the *caller's* thread: the
+        # thread driver's worker has its own context, so _run_batch re-roots
+        # its spans with this id explicitly.
+        with obs.span("scheduler.submit", patterns=len(patterns),
+                      docs=len(docs)) as sub_span:
+            trace_id = sub_span.trace_id if sub_span is not None else None
         req = _Request(
             keys, ids, patterns, tuple(_doc_key(d) for d in docs), docs,
-            Ticket(self),
+            Ticket(self, trace_id),
         )
         with self._cond:
             if self._stop:
                 raise RuntimeError("scheduler is closed")
             self._pending.append(req)
-            self.stats.requests += 1
+            # Nested under _cond deliberately: the request must be counted
+            # before any flush that could serve it counts its own stats.
+            self._bump(requests=1)
             if self._first_ts is None:
                 self._first_ts = time.monotonic()
             self._cond.notify_all()
@@ -243,20 +303,38 @@ class BatchScheduler:
                         doc_of[key] = len(union_docs)
                         union_docs.append(doc)
 
-            scanner = self._scanner_for(tuple(col_of), union_specs)
-            result = scanner.scan(union_docs)   # ONE fused bank scan
+            # Re-root the flush's spans on the first request's trace id
+            # (submit captured it on the caller's thread; the thread
+            # driver's worker doesn't inherit contextvars). The other
+            # coalesced requests ride along as an attribute.
+            trace_ids = [
+                r.ticket.trace_id for r in batch
+                if r.ticket.trace_id is not None
+            ]
+            with obs.span(
+                "scheduler.flush",
+                trace_id=trace_ids[0] if trace_ids else None,
+                requests=len(batch),
+                coalesced_trace_ids=tuple(trace_ids[1:]),
+            ):
+                self.last_trace_id = obs.current_trace_id()
+                scanner = self._scanner_for(tuple(col_of), union_specs)
+                result = scanner.scan(union_docs)   # ONE fused bank scan
 
-            self.stats.flushes += 1
-            self.stats.max_coalesced = max(self.stats.max_coalesced, len(batch))
-            self.stats.union_patterns += len(union_specs)
-            self.stats.union_docs += len(union_docs)
-            # Over-budget patterns route to the speculative tier through the
-            # plan's auto mode (see repro.speculative); count what this
-            # batch actually served speculatively.
-            self.stats.speculative_patterns += sum(
-                1 for m in scanner.pattern_modes.values()
-                if m == "speculative"
+            self._bump(
+                flushes=1,
+                max_coalesced=len(batch),
+                union_patterns=len(union_specs),
+                union_docs=len(union_docs),
+                # Over-budget patterns route to the speculative tier through
+                # the plan's auto mode (see repro.speculative); count what
+                # this batch actually served speculatively.
+                speculative_patterns=sum(
+                    1 for m in scanner.pattern_modes.values()
+                    if m == "speculative"
+                ),
             )
+            obs.counter("scheduler.coalesced_requests").inc(len(batch))
 
             for req in batch:
                 rows = np.asarray([col_of[k] for k in req.keys])
@@ -282,15 +360,22 @@ class BatchScheduler:
             sc = self._scanners.get(key_tuple)
             if sc is not None:
                 self._scanners.move_to_end(key_tuple)
-                self.stats.scanner_memo_hits += 1
-                return sc
+                hit = True
+            else:
+                hit = False
+        if hit:
+            self._bump(scanner_memo_hits=1)
+            return sc
         sc = Scanner.compile(specs, self.plan)   # compile outside the lock
+        evicted = 0
         with self._scanners_lock:
             self._scanners[key_tuple] = sc
             self._scanners.move_to_end(key_tuple)
             while len(self._scanners) > self.max_scanners:
                 self._scanners.popitem(last=False)
-                self.stats.scanner_evictions += 1
+                evicted += 1
+        if evicted:
+            self._bump(scanner_evictions=evicted)
         return sc
 
     # -- thread driver -------------------------------------------------------

@@ -19,6 +19,9 @@ This is the serving layer's front door (also reachable as
 
 from __future__ import annotations
 
+from dataclasses import asdict
+
+from .. import obs
 from ..construction import SFACache
 from ..engine import ChunkPolicy, ConstructionPolicy, ScanPlan, Scanner
 from .corpus import CorpusManifest
@@ -91,6 +94,51 @@ class ScanService:
 
     def flush(self) -> int:
         return self.scheduler.flush()
+
+    # -- observability -------------------------------------------------------
+
+    def metrics(self, trace_id: str | None = None) -> dict:
+        """One correlated observability snapshot of the whole service.
+
+        Everything in the returned dict is read at the same moment:
+
+        * ``"cache"`` — the two-tier SFA cache counters plus the derived
+          hit rate;
+        * ``"scheduler"`` — an atomic :class:`SchedulerStats` copy (see the
+          thread-driver consistency contract there);
+        * ``"registry"`` — the full process-wide metric snapshot
+          (``construction.*``, ``speculative.*``, ``store.artifact.*`` …);
+        * ``"trace"`` — the span summary for ``trace_id`` (default: the
+          last flush's trace), with two pre-digested views: per-bucket
+          construction rounds/walls (from the ``construct_bank.bucket``
+          spans) and the speculative span walls — the "where did this
+          request's time go" answer, keyed by the same trace id the
+          request's :class:`Ticket` carries.
+        """
+        if trace_id is None:
+            trace_id = self.scheduler.last_trace_id
+        info = self.cache.info.snapshot()
+        looked = info["hits"] + info["misses"]
+        cache = {**info,
+                 "hit_rate": info["hits"] / looked if looked else 0.0}
+        trace = (obs.trace_summary(trace_id) if trace_id is not None
+                 else {"trace_id": None, "spans": [], "wall_s": 0.0})
+        buckets = [
+            {**sp["attrs"], "wall_s": sp["wall_s"]}
+            for sp in trace["spans"] if sp["name"] == "construct_bank.bucket"
+        ]
+        speculative = [
+            {**sp["attrs"], "wall_s": sp["wall_s"]}
+            for sp in trace["spans"]
+            if sp["name"].startswith("speculative.")
+        ]
+        return {
+            "trace": {**trace, "construction_buckets": buckets,
+                      "speculative_spans": speculative},
+            "cache": cache,
+            "scheduler": asdict(self.scheduler.stats),
+            "registry": obs.snapshot(),
+        }
 
     # -- corpus jobs ---------------------------------------------------------
 

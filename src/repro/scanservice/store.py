@@ -39,6 +39,7 @@ from pathlib import Path
 
 import numpy as np
 
+from .. import obs
 from ..construction.types import SFA, SFAStats
 from ..core.dfa import DFA
 
@@ -86,68 +87,89 @@ class ArtifactStore:
         Any unreadable artifact — missing payload, truncated npz, invalid
         JSON, foreign format version — is a miss, never an exception.
         """
-        side = self._sidecar_path(key)
-        try:
-            meta = json.loads(side.read_text())
-        except (OSError, ValueError):
-            return None
-        if not isinstance(meta, dict) or meta.get("version") != STORE_VERSION:
-            return None
-        kind = meta.get("kind")
-        if kind == "blowup":
-            budget = meta.get("budget")
-            if not isinstance(budget, int):
+        with obs.span("store.artifact.get", key=key[:12]):
+            side = self._sidecar_path(key)
+            try:
+                meta = json.loads(side.read_text())
+            except (OSError, ValueError):
+                obs.counter("store.artifact.misses").inc()
+                return None
+            if not isinstance(meta, dict) \
+                    or meta.get("version") != STORE_VERSION:
+                obs.counter("store.artifact.misses").inc()
+                return None
+            kind = meta.get("kind")
+            if kind == "blowup":
+                budget = meta.get("budget")
+                if not isinstance(budget, int):
+                    obs.counter("store.artifact.misses").inc()
+                    return None
+                self._touch(side)
+                obs.counter("store.artifact.hits").inc()
+                return "blowup", budget
+            if kind != "sfa":
+                obs.counter("store.artifact.misses").inc()
+                return None
+            try:
+                with np.load(self._payload_path(key)) as z:
+                    sfa = SFA(
+                        mappings=np.asarray(z["mappings"], dtype=np.int32),
+                        delta=np.asarray(z["delta"], dtype=np.int32),
+                        fingerprints=np.asarray(
+                            z["fingerprints"], dtype=np.uint32
+                        ),
+                        dfa=DFA(
+                            table=np.asarray(z["dfa_table"], dtype=np.int32),
+                            start=int(meta["start"]),
+                            accepting=np.asarray(
+                                z["dfa_accepting"], dtype=bool
+                            ),
+                            alphabet=str(meta["alphabet"]),
+                        ),
+                        stats=SFAStats(engine=str(meta.get("engine", "store"))),
+                    )
+            except Exception:
+                # partial/corrupt payload: reconstruct instead
+                obs.counter("store.artifact.misses").inc()
                 return None
             self._touch(side)
-            return "blowup", budget
-        if kind != "sfa":
-            return None
-        try:
-            with np.load(self._payload_path(key)) as z:
-                sfa = SFA(
-                    mappings=np.asarray(z["mappings"], dtype=np.int32),
-                    delta=np.asarray(z["delta"], dtype=np.int32),
-                    fingerprints=np.asarray(z["fingerprints"], dtype=np.uint32),
-                    dfa=DFA(
-                        table=np.asarray(z["dfa_table"], dtype=np.int32),
-                        start=int(meta["start"]),
-                        accepting=np.asarray(z["dfa_accepting"], dtype=bool),
-                        alphabet=str(meta["alphabet"]),
-                    ),
-                    stats=SFAStats(engine=str(meta.get("engine", "store"))),
-                )
-        except Exception:
-            return None  # partial/corrupt payload: reconstruct instead
-        self._touch(side)
-        return "sfa", sfa
+            obs.counter("store.artifact.hits").inc()
+            return "sfa", sfa
 
     def put_sfa(self, key: str, sfa: SFA) -> None:
         """Persist a positive artifact (idempotent; last write wins)."""
-        d = self._dir(key)
-        d.mkdir(parents=True, exist_ok=True)
-        payload = self._payload_path(key)
-        self._atomic_write(
-            payload,
-            lambda f: np.savez(
-                f,
-                mappings=sfa.mappings.astype(np.int32, copy=False),
-                delta=sfa.delta.astype(np.int32, copy=False),
-                fingerprints=sfa.fingerprints.astype(np.uint32, copy=False),
-                dfa_table=sfa.dfa.table.astype(np.int32, copy=False),
-                dfa_accepting=sfa.dfa.accepting.astype(bool, copy=False),
-            ),
-        )
-        meta = {
-            "version": STORE_VERSION,
-            "kind": "sfa",
-            "n_states": sfa.n_states,
-            "start": int(sfa.dfa.start),
-            "alphabet": sfa.dfa.alphabet,
-            "engine": sfa.stats.engine,
-            "nbytes": sfa.nbytes(),
-        }
-        self._write_sidecar(key, meta)  # commit point
-        self._evict()
+        with obs.span("store.artifact.put", key=key[:12],
+                      nbytes=sfa.nbytes()):
+            d = self._dir(key)
+            d.mkdir(parents=True, exist_ok=True)
+            payload = self._payload_path(key)
+            self._atomic_write(
+                payload,
+                lambda f: np.savez(
+                    f,
+                    mappings=sfa.mappings.astype(np.int32, copy=False),
+                    delta=sfa.delta.astype(np.int32, copy=False),
+                    fingerprints=sfa.fingerprints.astype(
+                        np.uint32, copy=False
+                    ),
+                    dfa_table=sfa.dfa.table.astype(np.int32, copy=False),
+                    dfa_accepting=sfa.dfa.accepting.astype(bool, copy=False),
+                ),
+            )
+            meta = {
+                "version": STORE_VERSION,
+                "kind": "sfa",
+                "n_states": sfa.n_states,
+                "start": int(sfa.dfa.start),
+                "alphabet": sfa.dfa.alphabet,
+                "engine": sfa.stats.engine,
+                "nbytes": sfa.nbytes(),
+            }
+            self._write_sidecar(key, meta)  # commit point
+            evicted = self._evict()
+        obs.counter("store.artifact.puts").inc()
+        if evicted:
+            obs.counter("store.artifact.evictions").inc(evicted)
 
     def put_blowup(self, key: str, budget: int) -> None:
         """Persist/upgrade a blowup marker (never downgrades; a positive

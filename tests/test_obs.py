@@ -1,0 +1,298 @@
+"""Observability tests: registry semantics, exporters, span tracing, and
+the integration contract.
+
+Acceptance pins (ISSUE 9):
+* disabled observability is a **true no-op**: scan/construct results on a
+  bundled pattern bank are bit-identical with obs on and off, and disabled
+  mutators change nothing;
+* histogram bucket placement follows the Prometheus ``le`` convention and
+  both exporters round-trip a live snapshot;
+* a request's trace id propagates from :meth:`BatchScheduler.submit`
+  through the worker's flush into the construction spans, and
+  :meth:`ScanService.metrics` returns one correlated snapshot keyed by it.
+"""
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.construction import SFACache
+from repro.core.prosite import synthetic_protein
+from repro.engine import ConstructionPolicy, ScanPlan, Scanner
+from repro.obs import parse_prometheus, render_prometheus, snapshot_delta
+from repro.obs.export import read_jsonl, snapshot_record, span_records, \
+    write_jsonl
+from repro.obs.tracing import _NOOP_SPAN
+from repro.scanservice import BatchScheduler, ScanService
+
+PATTERNS = ["PS00016", "PS00005"]
+
+
+@pytest.fixture(autouse=True)
+def obs_enabled():
+    """Every test starts and ends with observability on (the default)."""
+    obs.enable()
+    yield
+    obs.enable()
+
+
+@pytest.fixture(scope="module")
+def docs():
+    return [synthetic_protein(120, seed=i) for i in range(4)]
+
+
+@pytest.fixture(scope="module")
+def shared_cache():
+    """One warm SFA cache for the tests that don't need cold construction."""
+    return SFACache()
+
+
+def _plan(cache):
+    return ScanPlan(construction=ConstructionPolicy(cache=cache,
+                                                    method="batched"))
+
+
+# --------------------------------------------------------------------------
+# Registry: kinds, bucket edges, snapshots, the disabled fast path
+# --------------------------------------------------------------------------
+
+
+def test_counter_gauge_histogram_basics():
+    c = obs.counter("t.obs.c")
+    base = c.value
+    c.inc()
+    c.inc(4)
+    assert c.value == base + 5
+    g = obs.gauge("t.obs.g")
+    g.set(2)
+    g.set(1.5)
+    assert g.value == 1.5
+    # get-or-create: same name -> same object
+    assert obs.counter("t.obs.c") is c
+    assert obs.gauge("t.obs.g") is g
+
+
+def test_kind_and_edges_mismatch_raise():
+    obs.counter("t.obs.kind")
+    with pytest.raises(TypeError):
+        obs.gauge("t.obs.kind")
+    with pytest.raises(TypeError):
+        obs.histogram("t.obs.kind")
+    h = obs.histogram("t.obs.edges", edges=(1.0, 2.0))
+    with pytest.raises(ValueError):
+        obs.histogram("t.obs.edges", edges=(1.0, 3.0))
+    assert obs.histogram("t.obs.edges") is h   # edges=None reuses
+    with pytest.raises(ValueError):
+        obs.histogram("t.obs.bad_edges", edges=(2.0, 2.0))  # not increasing
+    with pytest.raises(ValueError):
+        obs.histogram("t.obs.no_edges", edges=())
+
+
+def test_histogram_bucket_placement_le_semantics():
+    h = obs.histogram("t.obs.hist", edges=(1.0, 2.0, 5.0))
+    for v in (0.5, 1.0, 1.5, 5.0, 7.0):
+        h.observe(v)
+    # v == edge lands in that edge's bucket (Prometheus le); 7.0 overflows
+    # into the implicit +Inf bucket.
+    assert h.counts == (2, 1, 1, 1)
+    assert h.count == 5
+    assert h.sum == pytest.approx(15.0)
+
+
+def test_snapshot_prefix_reset_and_delta():
+    obs.counter("t.obsdelta.a").inc(3)
+    obs.gauge("t.obsdelta.b").set(7.0)
+    before = obs.snapshot("t.obsdelta")
+    assert before == {"t.obsdelta.a": 3, "t.obsdelta.b": 7.0}
+    obs.counter("t.obsdelta.a").inc(2)
+    obs.histogram("t.obsdelta.h", edges=(1.0,)).observe(0.5)
+    delta = snapshot_delta(before, obs.snapshot("t.obsdelta"))
+    # unchanged names drop; the counter subtracts; the new histogram passes
+    assert delta["t.obsdelta.a"] == 2 and "t.obsdelta.b" not in delta
+    assert delta["t.obsdelta.h"]["count"] == 1
+    obs.reset()
+    snap = obs.snapshot("t.obsdelta")
+    assert snap["t.obsdelta.a"] == 0 and snap["t.obsdelta.h"]["count"] == 0
+
+
+def test_disabled_mutators_and_span_are_noops():
+    obs.disable()
+    try:
+        obs.counter("t.obs.off_c").inc(10)
+        obs.gauge("t.obs.off_g").set(3.0)
+        obs.histogram("t.obs.off_h", edges=(1.0,)).observe(0.5)
+        # span() hands back one shared no-op context manager
+        assert obs.span("a") is obs.span("b") is _NOOP_SPAN
+        with obs.span("t.obs.off_span") as handle:
+            assert handle is None
+            assert obs.current_trace_id() is None
+    finally:
+        obs.enable()
+    assert obs.counter("t.obs.off_c").value == 0
+    assert obs.gauge("t.obs.off_g").value == 0.0
+    assert obs.histogram("t.obs.off_h").count == 0
+    assert all(s.name != "t.obs.off_span" for s in obs.recent_spans(50))
+
+
+# --------------------------------------------------------------------------
+# Exporters: Prometheus text and JSONL round-trips
+# --------------------------------------------------------------------------
+
+
+def test_prometheus_round_trip():
+    obs.counter("t.prom.hits").inc(42)
+    obs.gauge("t.prom.rate").set(0.75)
+    h = obs.histogram("t.prom.wall", edges=(0.1, 1.0))
+    for v in (0.05, 0.5, 3.0):
+        h.observe(v)
+    snap = obs.snapshot("t.prom")
+    text = render_prometheus(snap)
+    assert "# TYPE t_prom_hits counter" in text
+    assert 't_prom_wall_bucket{le="+Inf"} 3' in text
+    back = parse_prometheus(text)
+    assert back["t_prom_hits"] == 42
+    assert back["t_prom_rate"] == 0.75
+    assert back["t_prom_wall"] == {
+        "edges": [0.1, 1.0], "counts": [1, 1, 1],
+        "sum": pytest.approx(3.55), "count": 3,
+    }
+
+
+def test_jsonl_round_trip(tmp_path):
+    path = tmp_path / "events.jsonl"
+    obs.counter("t.jsonl.c").inc(7)
+    with obs.span("t.jsonl.span", k=1):
+        pass
+    write_jsonl(path, [snapshot_record(obs.snapshot("t.jsonl"), label="x")])
+    write_jsonl(path, span_records(
+        s for s in obs.recent_spans(10) if s.name == "t.jsonl.span"))
+    records = read_jsonl(path)
+    assert records[0]["kind"] == "metrics" and records[0]["label"] == "x"
+    assert records[0]["metrics"]["t.jsonl.c"] == 7
+    assert records[-1]["kind"] == "span"
+    assert records[-1]["name"] == "t.jsonl.span"
+    assert records[-1]["attrs"] == {"k": 1}
+
+
+# --------------------------------------------------------------------------
+# Tracing: nesting, inheritance, re-rooting, error capture
+# --------------------------------------------------------------------------
+
+
+def test_span_nesting_and_trace_inheritance():
+    with obs.span("t.span.outer", who="outer") as outer:
+        assert obs.current_trace_id() == outer.trace_id
+        with obs.span("t.span.inner") as inner:
+            assert inner.trace_id == outer.trace_id
+            assert inner.parent_id == outer.span_id
+        # explicit trace_id re-roots (the cross-thread contract)
+        with obs.span("t.span.rerooted", trace_id="t-explicit") as re:
+            assert re.trace_id == "t-explicit"
+    assert obs.current_trace_id() is None
+    summ = obs.trace_summary(outer.trace_id)
+    names = [s["name"] for s in summ["spans"]]
+    assert names == ["t.span.outer", "t.span.inner"]  # start order
+    assert summ["wall_s"] >= summ["spans"][1]["wall_s"]
+
+
+def test_span_records_error_attribute():
+    with pytest.raises(RuntimeError):
+        with obs.span("t.span.err"):
+            raise RuntimeError("boom")
+    sp = obs.recent_spans(1)[0]
+    assert sp.name == "t.span.err" and sp.attrs["error"] == "RuntimeError"
+    assert obs.current_trace_id() is None   # the stack unwound
+
+
+# --------------------------------------------------------------------------
+# Integration: bit-identity, trace propagation, correlated snapshots
+# --------------------------------------------------------------------------
+
+
+def test_scan_and_construct_bit_identical_obs_on_off(docs):
+    """Acceptance: obs off must change bookkeeping only, never results."""
+    on = Scanner.compile(PATTERNS, _plan(SFACache()))
+    hits_on = on.scan(docs).hits
+    assert on.last_trace_id is not None
+    assert "last trace" in on.describe()
+    obs.disable()
+    try:
+        off = Scanner.compile(PATTERNS, _plan(SFACache()))
+        hits_off = off.scan(docs).hits
+        assert off.last_trace_id is None
+    finally:
+        obs.enable()
+    assert off.pattern_modes == on.pattern_modes
+    assert np.array_equal(hits_on, hits_off)
+
+
+def test_trace_id_propagates_submit_to_construction(docs):
+    """Acceptance: one trace id correlates scheduler -> scanner ->
+    construction, across the cold compile a cache-missing submit causes."""
+    before = obs.snapshot("construction")
+    sched = BatchScheduler(_plan(SFACache()))   # cold: flush must construct
+    ticket = sched.submit(PATTERNS, docs)
+    assert ticket.trace_id is not None
+    sched.flush()
+    ticket.result()
+    assert sched.last_trace_id == ticket.trace_id
+    summ = obs.trace_summary(ticket.trace_id)
+    names = {s["name"] for s in summ["spans"]}
+    assert {"scheduler.submit", "scheduler.flush", "scanner.compile",
+            "construct_bank"} <= names
+    assert all(s["trace_id"] == ticket.trace_id for s in summ["spans"])
+    delta = snapshot_delta(before, obs.snapshot("construction"))
+    assert delta["construction.banks"] >= 1
+    assert delta["construction.rounds"] >= 1
+
+
+def test_thread_driver_tickets_carry_trace_ids(docs, shared_cache):
+    Scanner.compile(PATTERNS, _plan(shared_cache))   # warm the cache
+    sched = BatchScheduler(_plan(shared_cache), driver="thread",
+                           window_s=0.01, max_batch=8)
+    try:
+        t1 = sched.submit(PATTERNS[:1], docs)
+        t2 = sched.submit(PATTERNS[1:], docs)
+        t1.result(), t2.result()
+    finally:
+        sched.close()
+    assert t1.trace_id and t2.trace_id and t1.trace_id != t2.trace_id
+    # the worker re-rooted its flush span on a submitted request's trace
+    assert sched.last_trace_id in {t1.trace_id, t2.trace_id}
+    flushes = [s for s in obs.recent_spans(200)
+               if s.name == "scheduler.flush"
+               and s.trace_id in {t1.trace_id, t2.trace_id}]
+    assert flushes
+    covered = {f.trace_id for f in flushes}
+    for f in flushes:
+        covered.update(f.attrs.get("coalesced_trace_ids", ()))
+    assert {t1.trace_id, t2.trace_id} <= covered
+
+
+def test_scheduler_stats_property_is_atomic_copy(docs, shared_cache):
+    sched = BatchScheduler(_plan(shared_cache))
+    sched.submit(PATTERNS[:1], docs)
+    sched.flush()
+    s1 = sched.stats
+    s1.requests += 100            # mutating the copy must not leak back
+    assert sched.stats.requests == s1.requests - 100
+    # the registry mirrors the dataclass view
+    snap = obs.snapshot("scheduler")
+    assert snap["scheduler.requests"] >= sched.stats.requests
+
+
+def test_service_metrics_is_one_correlated_snapshot(docs, shared_cache):
+    with ScanService(plan=_plan(shared_cache), cache=shared_cache) as svc:
+        ticket = svc.submit(PATTERNS, docs)
+        svc.flush()
+        ticket.result()
+        m = svc.metrics()
+    assert set(m) == {"trace", "cache", "scheduler", "registry"}
+    assert m["trace"]["trace_id"] == ticket.trace_id
+    assert {s["name"] for s in m["trace"]["spans"]} >= {"scheduler.flush"}
+    assert m["scheduler"]["requests"] >= 1
+    assert m["registry"]["scheduler.flushes"] >= 1
+    assert 0.0 <= m["cache"]["hit_rate"] <= 1.0
+    # an explicit trace id is honored
+    assert svc.metrics(ticket.trace_id)["trace"]["trace_id"] == \
+        ticket.trace_id
