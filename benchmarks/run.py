@@ -35,7 +35,18 @@ process-wide ``repro.obs`` registry snapshot across the module's run,
 appended as one JSONL record per module to ``BENCH_metrics.jsonl`` next to
 the BENCH JSONs (uploaded as a CI artifact) — construction rounds, cache
 hit/miss counts, speculative repair totals per benchmark, correlating the
-BENCH timings with what the code actually did.
+BENCH timings with what the code actually did. The log survives across
+sweeps (so local before/after comparisons keep history) but is trimmed to
+the newest ``METRICS_KEEP`` records at sweep start — it never grows
+without bound.
+
+``--serve-telemetry [PORT]`` additionally runs the sweep behind a live
+:class:`repro.scanservice.TelemetryServer` (``PORT`` 0 = ephemeral) and
+self-scrapes ``GET /metrics`` over real HTTP after every module,
+re-parsing the exposition text with ``obs.parse_prometheus`` — a scrape
+that fails to parse fails the sweep, which is exactly the guarantee the
+CI bench-smoke job wants: the endpoint Prometheus would poll is validated
+mid-sweep, under the same process load as the benchmarks themselves.
 A benchmark module that fails to *import* (missing optional dep, broken
 bench) is skipped with a warning — it costs its own suites, never the sweep.
 But a sweep where **every** module failed to import ran nothing at all:
@@ -53,6 +64,10 @@ import importlib
 import sys
 import time
 import traceback
+
+#: Newest metric-footprint records kept in BENCH_metrics.jsonl across
+#: sweeps (one record per module per sweep, so ~20 sweeps of history).
+METRICS_KEEP = 200
 
 #: (module, suite function names) — resolved one by one so an unimportable
 #: module skips with a warning instead of aborting the whole sweep.
@@ -88,6 +103,38 @@ def _resolve_suites() -> tuple:
     return modules, skipped
 
 
+def _trim_metrics_log(path, keep: int = METRICS_KEEP) -> None:
+    """Truncate the JSONL metrics log to its newest ``keep`` records.
+    Torn or non-JSON lines (a killed sweep's last append) are dropped."""
+    from repro.obs.aggregate import read_records
+
+    if not path.exists():
+        return
+    records = read_records(path)
+    if len(records) <= keep:
+        return
+    from repro import obs
+
+    tmp = path.with_suffix(".jsonl.tmp")
+    tmp.unlink(missing_ok=True)
+    obs.write_jsonl(tmp, records[-keep:])
+    tmp.replace(path)
+
+
+def _scrape_metrics(url: str):
+    """GET ``url``/metrics over real HTTP and re-parse the exposition
+    text. -> parsed snapshot dict; raises on HTTP or parse failure."""
+    from urllib.request import urlopen
+
+    from repro import obs
+
+    with urlopen(f"{url}/metrics", timeout=10) as resp:
+        if resp.status != 200:
+            raise RuntimeError(f"/metrics returned HTTP {resp.status}")
+        text = resp.read().decode("utf-8")
+    return obs.parse_prometheus(text)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -96,6 +143,12 @@ def main() -> None:
                     help="wrap each bench module in jax.profiler.trace, "
                          "writing one trace directory per module under "
                          "BENCH_traces/ (open with TensorBoard or Perfetto)")
+    ap.add_argument("--serve-telemetry", nargs="?", const=0, default=None,
+                    type=int, metavar="PORT",
+                    help="serve /metrics over HTTP for the sweep's duration "
+                         "(PORT omitted or 0 = ephemeral) and self-scrape + "
+                         "parse it after every module; a scrape that fails "
+                         "to parse fails the sweep")
     args = ap.parse_args()
 
     from pathlib import Path
@@ -108,7 +161,14 @@ def main() -> None:
 
     repo_root = Path(__file__).resolve().parents[1]
     metrics_path = repo_root / "BENCH_metrics.jsonl"
-    metrics_path.unlink(missing_ok=True)   # one sweep, one fresh log
+    _trim_metrics_log(metrics_path)   # bounded history, not a fresh unlink
+
+    telemetry = None
+    if args.serve_telemetry is not None:
+        from repro.scanservice import TelemetryServer
+
+        telemetry = TelemetryServer(port=args.serve_telemetry).start()
+        print(f"telemetry: serving {telemetry.url}/metrics", file=sys.stderr)
 
     trace_root = None
     if args.profile:
@@ -158,6 +218,15 @@ def main() -> None:
         else:
             run_suites()
         wall = time.perf_counter() - t0
+        if telemetry is not None:
+            # Mid-sweep scrape over real HTTP: the exposition text the
+            # endpoint serves under benchmark load must stay parseable.
+            try:
+                _scrape_metrics(telemetry.url)
+            except Exception:
+                failures += 1
+                status = "FAILED (scrape)"
+                traceback.print_exc()
         summary.append((mod_name, status, wall))
         # The module's metric footprint: what the registry counted while it
         # ran (bench_obs resets the registry mid-run on purpose — its delta
@@ -185,6 +254,8 @@ def main() -> None:
                 for name, status, wall in summary
             ],
         }, indent=1))
+    if telemetry is not None:
+        telemetry.close()
     if failures:
         sys.exit(1)
 

@@ -84,6 +84,19 @@ from .types import (
 
 _U32MAX = jnp.uint32(0xFFFFFFFF)
 
+# /metrics HELP descriptions, registered once; callsites publish by name.
+obs.counter("construction.banks", help="construct_bank calls completed")
+obs.counter("construction.patterns", help="patterns constructed in banks")
+obs.counter("construction.rounds", help="batched construction rounds run")
+obs.counter("construction.retries",
+            help="per-pattern fingerprint-collision retries")
+obs.counter("construction.blown",
+            help="patterns abandoned to the state-budget blowup verdict")
+obs.histogram("construction.bank_wall_s",
+              help="construct_bank wall seconds per bank")
+obs.histogram("construction.round_wall_s",
+              help="wall seconds per batched construction round")
+
 #: Fingerprint-stage backends of the batched round. ``"auto"`` resolves to
 #: ``"pallas"`` on a real TPU runtime and ``"xla"`` elsewhere (interpret-mode
 #: Pallas would dominate a CPU round).

@@ -51,6 +51,22 @@ from ..core.dfa import DFA
 from ..core.fingerprint import DEFAULT_POLY_LOW
 from .types import SFA
 
+# /metrics HELP descriptions, registered once; hot paths increment by name.
+obs.counter("cache.sfa.hits", help="SFA cache lookups answered in memory")
+obs.counter("cache.sfa.misses", help="SFA cache lookups that missed")
+obs.counter("cache.sfa.disk_hits",
+            help="misses answered by the backing store (promoted to memory)")
+obs.counter("cache.sfa.stores", help="SFA entries written to the cache")
+obs.counter("cache.sfa.evictions", help="SFA entries evicted (LRU)")
+obs.gauge("cache.sfa.bytes",
+          help="resident SFA bytes in memory (fleet merges by sum)")
+obs.counter("cache.rounds.hits",
+            help="AOT round-compile cache hits (zero new XLA compiles)")
+obs.counter("cache.rounds.lowerings",
+            help="round closures lowered + AOT-compiled on miss")
+obs.counter("cache.rounds.evictions",
+            help="compiled round closures evicted (LRU)")
+
 
 def dfa_cache_key(dfa: DFA, poly_low: int = DEFAULT_POLY_LOW) -> str:
     """Canonical content hash of a DFA + fingerprint base polynomial.

@@ -51,6 +51,22 @@ from . import executors as X
 from .plan import ChunkPolicy, ScanPlan
 from .streaming import StreamResult, StreamSession
 
+# /metrics HELP descriptions, registered once; hot paths increment by name.
+obs.counter("engine.compiles", help="Scanner.compile calls")
+obs.counter("engine.scans", help="Scanner scan/census calls")
+obs.counter("engine.docs_scanned", help="documents scanned")
+obs.counter("speculative.total_chunks",
+            help="chunks executed speculatively")
+obs.counter("speculative.hit_chunks",
+            help="speculative chunks whose entry state was predicted")
+obs.counter("speculative.repaired_chunks",
+            help="misspeculated chunks re-scanned in the repair loop")
+obs.counter("speculative.repair_rounds", help="repair rounds executed")
+obs.counter("speculative.fallback_lanes",
+            help="lanes handed to the exact enumeration fallback")
+obs.gauge("speculative.hit_rate",
+          help="speculation hit rate of the last scan")
+
 
 # --------------------------------------------------------------------------
 # Pattern normalization

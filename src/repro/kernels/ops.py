@@ -35,7 +35,8 @@ def _count(name: str) -> None:
     # cheap "which kernels does this workload reach" signal, not a per-
     # execution count (XLA replays compiled programs without re-entering
     # Python).
-    obs.counter(f"kernels.{name}.calls").inc()
+    obs.counter(f"kernels.{name}.calls",
+                help=f"dispatches of the {name} kernel wrapper").inc()
 
 
 def fingerprint(

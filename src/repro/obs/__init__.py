@@ -43,11 +43,11 @@ from __future__ import annotations
 from .export import (  # noqa: F401
     parse_prometheus,
     read_jsonl,
-    render_prometheus,
     snapshot_record,
     span_records,
     write_jsonl,
 )
+from .export import render_prometheus as _render_prometheus
 from .registry import (  # noqa: F401
     DEFAULT_EDGES,
     Counter,
@@ -63,6 +63,22 @@ from .tracing import Span, Tracer  # noqa: F401
 _state = ObsState()
 registry = MetricsRegistry(_state)
 tracer = Tracer(_state)
+
+# Fleet-layer helpers build on the globals above, so they import after.
+from .flight import FlightRecorder, read_flight  # noqa: E402,F401
+
+#: Lazily re-exported from :mod:`repro.obs.aggregate` (PEP 562): eager
+#: package import would trip runpy's double-import warning every time the
+#: aggregation CLI runs as ``python -m repro.obs.aggregate``.
+_AGGREGATE_NAMES = ("DEFAULT_GAUGE_POLICIES", "merge_records",
+                    "merge_snapshots")
+
+
+def __getattr__(name: str):
+    if name in _AGGREGATE_NAMES:
+        from . import aggregate
+        return getattr(aggregate, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def enable() -> None:
@@ -85,16 +101,25 @@ def configure(*, enabled: bool | None = None,
         _state.xla_annotations = xla_annotations
 
 
-def counter(name: str) -> Counter:
-    return registry.counter(name)
+def counter(name: str, help: str | None = None) -> Counter:
+    return registry.counter(name, help=help)
 
 
-def gauge(name: str) -> Gauge:
-    return registry.gauge(name)
+def gauge(name: str, help: str | None = None) -> Gauge:
+    return registry.gauge(name, help=help)
 
 
-def histogram(name: str, edges=None) -> Histogram:
-    return registry.histogram(name, edges)
+def histogram(name: str, edges=None, help: str | None = None) -> Histogram:
+    return registry.histogram(name, edges, help=help)
+
+
+def render_prometheus(snapshot: dict, help_texts: dict | None = None) -> str:
+    """Prometheus text for ``snapshot``; ``# HELP`` lines default to the
+    live registry's registered descriptions (pass ``help_texts={}`` to
+    suppress, or an explicit mapping to override)."""
+    if help_texts is None:
+        help_texts = registry.help_texts()
+    return _render_prometheus(snapshot, help_texts)
 
 
 def span(name: str, trace_id: str | None = None, **attrs):

@@ -2,11 +2,13 @@
 
 Two formats, two audiences:
 
-* :func:`render_prometheus` — the text scrape format a future HTTP
-  ``/metrics`` endpoint would serve (ROADMAP follow-up). Dots in metric
-  names become underscores; histograms emit cumulative ``_bucket{le=...}``
-  series plus ``_sum``/``_count``. :func:`parse_prometheus` inverts it
-  (used by round-trip tests and by tooling that diffs scrapes).
+* :func:`render_prometheus` — the text scrape format the
+  :class:`repro.scanservice.TelemetryServer` ``/metrics`` endpoint serves.
+  Dots in metric names become underscores; histograms emit cumulative
+  ``_bucket{le=...}`` series plus ``_sum``/``_count``; registered ``help``
+  descriptions emit as ``# HELP`` lines. :func:`parse_prometheus` inverts
+  it (used by round-trip tests, the bench-smoke scrape gate, and tooling
+  that diffs scrapes; HELP lines are ignored on the way back).
 * :func:`write_jsonl` / :func:`read_jsonl` — append-only event logs for
   offline analysis: ``benchmarks/run.py`` appends one snapshot record per
   benchmark module, and span dumps ride the same format.
@@ -15,11 +17,18 @@ Two formats, two audiences:
 from __future__ import annotations
 
 import json
+import os
+import socket
 import time
 
 
 def _prom_name(name: str) -> str:
     return name.replace(".", "_").replace("-", "_")
+
+
+def _escape_help(text: str) -> str:
+    # Prometheus exposition-format escaping for HELP lines.
+    return text.replace("\\", "\\\\").replace("\n", "\\n")
 
 
 def _fmt(v: float) -> str:
@@ -29,17 +38,24 @@ def _fmt(v: float) -> str:
     return repr(float(v))
 
 
-def render_prometheus(snapshot: dict) -> str:
+def render_prometheus(snapshot: dict, help_texts: dict | None = None) -> str:
     """Render a :meth:`MetricsRegistry.snapshot` dict as Prometheus text.
 
     Counters (ints) and gauges (floats) are told apart by Python type —
     the snapshot preserves it. Histogram buckets are cumulated here; the
-    snapshot stores per-bucket counts.
+    snapshot stores per-bucket counts. ``help_texts`` maps metric names
+    (dotted, as in the snapshot) to ``# HELP`` descriptions — pass
+    ``MetricsRegistry.help_texts()`` (the ``repro.obs`` module-level
+    wrapper does) to emit what ``counter/gauge/histogram(name, help=...)``
+    registered.
     """
+    help_texts = help_texts or {}
     lines = []
     for name in sorted(snapshot):
         v = snapshot[name]
         pname = _prom_name(name)
+        if name in help_texts:
+            lines.append(f"# HELP {pname} {_escape_help(help_texts[name])}")
         if isinstance(v, dict):  # histogram
             lines.append(f"# TYPE {pname} histogram")
             cum = 0
@@ -130,8 +146,11 @@ def read_jsonl(path) -> list:
 
 def snapshot_record(snapshot: dict, *, label: str | None = None,
                     kind: str = "metrics") -> dict:
-    """Wrap a snapshot as one JSONL event record with a wall-clock stamp."""
-    rec = {"kind": kind, "ts": time.time(), "metrics": snapshot}
+    """Wrap a snapshot as one JSONL event record with a wall-clock stamp
+    and the writing process's ``host``/``pid`` — the attribution a merged
+    fleet view (:mod:`repro.obs.aggregate`) preserves per source."""
+    rec = {"kind": kind, "ts": time.time(), "host": socket.gethostname(),
+           "pid": os.getpid(), "metrics": snapshot}
     if label is not None:
         rec["label"] = label
     return rec

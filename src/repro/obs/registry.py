@@ -183,12 +183,16 @@ class MetricsRegistry:
     def __init__(self, state: ObsState | None = None):
         self.state = state or ObsState()
         self._metrics: dict = {}
+        self._help: dict = {}
         self._lock = threading.Lock()
 
     # -- get-or-create --------------------------------------------------------
 
-    def _get(self, name: str, kind, **kwargs):
+    def _get(self, name: str, kind, help=None, **kwargs):
         with self._lock:
+            if help is not None:
+                # First description wins; later sites may omit it freely.
+                self._help.setdefault(name, str(help))
             m = self._metrics.get(name)
             if m is None:
                 m = kind(name, self.state, **kwargs)
@@ -207,20 +211,29 @@ class MetricsRegistry:
             )
         return m
 
-    def counter(self, name: str) -> Counter:
-        return self._get(name, Counter)
+    def counter(self, name: str, help: str | None = None) -> Counter:
+        return self._get(name, Counter, help=help)
 
-    def gauge(self, name: str) -> Gauge:
-        return self._get(name, Gauge)
+    def gauge(self, name: str, help: str | None = None) -> Gauge:
+        return self._get(name, Gauge, help=help)
 
-    def histogram(self, name: str, edges=None) -> Histogram:
+    def histogram(self, name: str, edges=None,
+                  help: str | None = None) -> Histogram:
         if edges is None:
             with self._lock:
+                if help is not None:
+                    self._help.setdefault(name, str(help))
                 m = self._metrics.get(name)
             if isinstance(m, Histogram):
                 return m
             edges = DEFAULT_EDGES
-        return self._get(name, Histogram, edges=edges)
+            help = None   # already registered above
+        return self._get(name, Histogram, help=help, edges=edges)
+
+    def help_texts(self) -> dict:
+        """Registered metric descriptions (name -> ``# HELP`` text)."""
+        with self._lock:
+            return dict(self._help)
 
     # -- reading --------------------------------------------------------------
 

@@ -23,6 +23,11 @@ extends it across processes, requests, and corpora:
   results, and byte-identical aggregates across kill/resume.
 * :mod:`.service` — :class:`ScanService`, the facade tying the three
   together (also reachable as ``Scanner.service(...)``).
+* :mod:`.telemetry` — :class:`TelemetryServer`, the stdlib HTTP front
+  serving ``/metrics`` (Prometheus text of the live registry),
+  ``/healthz`` (scheduler + cache + store state), and ``/traces``
+  (recent per-trace span summaries); owned via
+  ``ScanService.serve_telemetry(port=...)``.
 """
 
 from .corpus import CorpusManifest, default_stream_threshold, scan_shard
@@ -36,6 +41,7 @@ from .scheduler import (
 )
 from .service import ScanService
 from .store import STORE_VERSION, ArtifactStore
+from .telemetry import TelemetryServer
 
 __all__ = [
     "ArtifactStore",
@@ -49,6 +55,7 @@ __all__ = [
     "STORE_VERSION",
     "ScanService",
     "SchedulerStats",
+    "TelemetryServer",
     "Ticket",
     "default_stream_threshold",
     "scan_shard",

@@ -18,10 +18,23 @@ The job digest deliberately excludes the execution plan: plans change *how*
 from ``distribution="local"`` to ``"shard_map"`` without invalidating
 finished shards.
 
+Every shard checkpoint also carries its *telemetry*: a
+:class:`~repro.obs.FlightRecorder` in the work directory appends one
+registry delta record per scanned shard (plus the shard's spans), so a
+worker killed mid-job leaves a merge-ready trail behind. Because the
+deterministic per-shard metrics (``jobs.shards_scanned``,
+``jobs.items_scanned``, the ``jobs.shard_items`` histogram) move by
+exactly the shard's item count, merging the per-shard deltas
+(:meth:`CorpusJob.flight_totals`, via :func:`repro.obs.merge_records`)
+reproduces the uninterrupted job's ``jobs.*`` totals bit-exactly however
+the job was killed and resumed — the multi-host aggregation story,
+executed locally first.
+
 Layout::
 
     <workdir>/job.json               # version, digest, ids, n_shards
     <workdir>/shards/shard_00007.npz # hits: (P, shard_items) bool
+    <workdir>/flight/flight.jsonl    # per-shard metric deltas + spans
 """
 
 from __future__ import annotations
@@ -37,9 +50,17 @@ import numpy as np
 from .. import obs
 from ..construction import dfa_cache_key
 from ..engine import ScanPlan, Scanner, ScanResult
+from ..obs.aggregate import merge_records
+from ..obs.flight import FlightRecorder, read_flight
 from .corpus import CorpusManifest, scan_shard
 
 JOB_VERSION = 1
+
+#: ``jobs.shard_items`` bucket edges: shard sizes are item counts, not
+#: seconds, so the default (time) edges don't apply. Powers of two up to
+#: the largest shards a manifest realistically cuts.
+SHARD_ITEM_EDGES = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512,
+                    1024, 4096, 16384, 65536)
 
 
 @dataclass(frozen=True)
@@ -61,7 +82,9 @@ class CorpusJob:
 
     def __init__(self, patterns, manifest: CorpusManifest, workdir,
                  plan: ScanPlan | None = None,
-                 stream_threshold: int | None = None):
+                 stream_threshold: int | None = None,
+                 flight: bool = True,
+                 flight_interval_s: float | None = None):
         self.manifest = manifest
         self.workdir = Path(workdir)
         self.stream_threshold = stream_threshold
@@ -76,6 +99,14 @@ class CorpusJob:
             # process with a persistent store pays zero construction rounds.
             self.scanner = Scanner.compile(patterns, plan)
         self._check_or_write_meta()
+        # Flight recorder: created *after* the compile so its delta base
+        # excludes construction — shard records then carry exactly shard
+        # work, the additivity the kill/resume merge acceptance relies on.
+        # ``flight_interval_s`` additionally ticks a background record
+        # during long shards (run() starts/stops the thread).
+        self.flight = FlightRecorder(
+            self.flight_path, interval_s=flight_interval_s, label="corpus_job"
+        ) if flight else None
 
     # -- metadata ------------------------------------------------------------
 
@@ -116,6 +147,10 @@ class CorpusJob:
             "n_items": self.manifest.n_items,
         }, indent=1))
         os.replace(tmp, meta_path)
+
+    @property
+    def flight_path(self) -> Path:
+        return self.workdir / "flight" / "flight.jsonl"
 
     # -- shard bookkeeping ---------------------------------------------------
 
@@ -159,23 +194,50 @@ class CorpusJob:
 
     def run(self, max_shards: int | None = None) -> JobReport:
         """Scan up to ``max_shards`` pending shards (all, by default),
-        checkpointing each one atomically as it finishes."""
+        checkpointing each one atomically as it finishes. With the flight
+        recorder on (default), every checkpoint also appends the shard's
+        registry delta to the work directory's flight trail."""
         todo = self.pending()
         done_before = self.manifest.n_shards - len(todo)
         scanned = 0
-        for shard in todo:
-            if max_shards is not None and scanned >= max_shards:
-                break
-            with obs.span("jobs.shard", trace_id=self.trace_id, shard=shard):
-                hits = scan_shard(self.scanner, self.manifest, shard,
-                                  stream_threshold=self.stream_threshold)
-                path = self._shard_path(shard)
-                tmp = path.with_suffix(f".tmp.{os.getpid()}")
-                with open(tmp, "wb") as f:
-                    np.savez(f, hits=hits)
-                os.replace(tmp, path)   # commit point
-            obs.counter("jobs.shards_scanned").inc()
-            scanned += 1
+        if self.flight is not None:
+            # Flush anything that moved since the last record (other work
+            # between construction and run) into a non-shard record, so
+            # each shard record below is the shard's work alone.
+            self.flight.record(label="jobs.pre_run", force=False)
+            if self.flight.interval_s is not None:
+                self.flight.start()
+        try:
+            for shard in todo:
+                if max_shards is not None and scanned >= max_shards:
+                    break
+                start, stop = self.manifest.shard_range(shard)
+                with obs.span("jobs.shard", trace_id=self.trace_id,
+                              shard=shard):
+                    hits = scan_shard(self.scanner, self.manifest, shard,
+                                      stream_threshold=self.stream_threshold)
+                    path = self._shard_path(shard)
+                    tmp = path.with_suffix(f".tmp.{os.getpid()}")
+                    with open(tmp, "wb") as f:
+                        np.savez(f, hits=hits)
+                    os.replace(tmp, path)   # commit point
+                obs.counter("jobs.shards_scanned",
+                            help="corpus shards scanned to completion").inc()
+                # Deterministic per-shard quantities: these move by exactly
+                # the shard's item count, so per-shard flight deltas merge
+                # to the same totals however a job is killed and resumed.
+                obs.counter("jobs.items_scanned",
+                            help="corpus items (documents or windows) "
+                                 "scanned").inc(stop - start)
+                obs.histogram("jobs.shard_items", edges=SHARD_ITEM_EDGES,
+                              help="items per scanned shard"
+                              ).observe(stop - start)
+                if self.flight is not None:
+                    self.flight.record(shard=shard, items=stop - start)
+                scanned += 1
+        finally:
+            if self.flight is not None:
+                self.flight.stop()
         return JobReport(
             n_shards=self.manifest.n_shards,
             done_before=done_before,
@@ -184,6 +246,28 @@ class CorpusJob:
         )
 
     # -- aggregation ---------------------------------------------------------
+
+    def flight_records(self) -> list:
+        """Every record on this job's flight trail (rotations included,
+        oldest first) — shard deltas, span records, periodic ticks."""
+        return read_flight(self.flight_path)
+
+    def flight_totals(self, prefix: str | None = "jobs",
+                      shards_only: bool = True) -> dict:
+        """Merge the flight trail's shard deltas into one fleet record.
+
+        The default view keeps only shard-stamped records and the
+        deterministic ``jobs.*`` metrics, which is the exact-reproduction
+        contract: however the job was killed and resumed (even across
+        processes appending to the same trail), the merged counters and
+        histograms equal the uninterrupted run's bit-for-bit. Pass
+        ``prefix=None``/``shards_only=False`` for the kitchen-sink merge
+        (wall-time histograms included — informative, not deterministic).
+        """
+        recs = [r for r in self.flight_records()
+                if r.get("kind") == "flight"
+                and (not shards_only or "shard" in r)]
+        return merge_records(recs, prefix=prefix)
 
     def aggregate(self) -> ScanResult:
         """Concatenate every shard's hits -> ``(P, n_items)``

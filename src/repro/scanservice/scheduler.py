@@ -128,6 +128,20 @@ class SchedulerStats:
     speculative_patterns: int = 0  # union columns routed to speculation
 
 
+#: ``# HELP`` text for the mirrored ``scheduler.*`` counters (the gauge
+#: describes itself at its callsite).
+_STAT_HELP = {
+    "requests": "scan requests submitted",
+    "flushes": "coalesced batch flushes executed",
+    "union_patterns": "distinct pattern columns compiled/scanned in "
+                      "union banks",
+    "union_docs": "distinct documents scanned in union batches",
+    "scanner_memo_hits": "union batches answered by the memoized scanner",
+    "scanner_evictions": "scanners dropped by the memo's LRU lid",
+    "speculative_patterns": "union columns routed through speculation",
+}
+
+
 class _Request:
     __slots__ = ("keys", "ids", "specs", "doc_keys", "docs", "ticket")
 
@@ -210,6 +224,13 @@ class BatchScheduler:
         with self._stats_lock:
             return replace(self._stats)
 
+    @property
+    def closed(self) -> bool:
+        """True once :meth:`close` ran — new submits are refused. The
+        telemetry ``/healthz`` endpoint reports this as the status."""
+        with self._cond:
+            return self._stop
+
     def _bump(self, **deltas) -> None:
         """Apply counter deltas atomically and mirror them into the
         ``scheduler.*`` registry namespace (``max_coalesced`` is a running
@@ -220,12 +241,16 @@ class BatchScheduler:
                     self._stats.max_coalesced = max(
                         self._stats.max_coalesced, d
                     )
-                    obs.gauge("scheduler.max_coalesced").set(
+                    obs.gauge("scheduler.max_coalesced",
+                              help="largest request count coalesced into "
+                                   "one flush (running max; fleet merges "
+                                   "by max)").set(
                         self._stats.max_coalesced
                     )
                 else:
                     setattr(self._stats, name, getattr(self._stats, name) + d)
-                    obs.counter(f"scheduler.{name}").inc(d)
+                    obs.counter(f"scheduler.{name}",
+                                help=_STAT_HELP.get(name)).inc(d)
 
     # -- submission ----------------------------------------------------------
 
@@ -334,7 +359,9 @@ class BatchScheduler:
                     if m == "speculative"
                 ),
             )
-            obs.counter("scheduler.coalesced_requests").inc(len(batch))
+            obs.counter("scheduler.coalesced_requests",
+                        help="requests answered by a coalesced union-bank "
+                             "flush").inc(len(batch))
 
             for req in batch:
                 rows = np.asarray([col_of[k] for k in req.keys])

@@ -28,6 +28,7 @@ from .corpus import CorpusManifest
 from .jobs import CorpusJob
 from .scheduler import BatchScheduler, Ticket
 from .store import ArtifactStore
+from .telemetry import TelemetryServer
 
 
 class ScanService:
@@ -76,6 +77,7 @@ class ScanService:
             self.plan, driver=driver, window_s=window_s, max_batch=max_batch,
             max_scanners=max_scanners,
         )
+        self.telemetry: TelemetryServer | None = None
 
     # -- cache tiers ---------------------------------------------------------
 
@@ -96,6 +98,21 @@ class ScanService:
         return self.scheduler.flush()
 
     # -- observability -------------------------------------------------------
+
+    def serve_telemetry(self, port: int = 0,
+                        host: str = "127.0.0.1") -> TelemetryServer:
+        """Start the HTTP telemetry front (``/metrics``, ``/healthz``,
+        ``/traces``) bound to this service. ``port=0`` picks an ephemeral
+        port — read it off the returned server's ``.port``/``.url``. The
+        server stops with :meth:`close` (or its own ``.close()``); starting
+        a second one while the first runs raises."""
+        if self.telemetry is not None and self.telemetry.running:
+            raise RuntimeError(
+                f"telemetry already serving on {self.telemetry.url}; "
+                "close it before starting another"
+            )
+        self.telemetry = TelemetryServer(self, host=host, port=port).start()
+        return self.telemetry
 
     def metrics(self, trace_id: str | None = None) -> dict:
         """One correlated observability snapshot of the whole service.
@@ -150,6 +167,9 @@ class ScanService:
     # -- lifecycle -----------------------------------------------------------
 
     def close(self) -> None:
+        if self.telemetry is not None:
+            self.telemetry.close()
+            self.telemetry = None
         self.scheduler.close()
 
     def __enter__(self) -> "ScanService":

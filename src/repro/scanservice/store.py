@@ -43,6 +43,15 @@ from .. import obs
 from ..construction.types import SFA, SFAStats
 from ..core.dfa import DFA
 
+# /metrics HELP descriptions, registered once; hot paths increment by name.
+obs.counter("store.artifact.hits",
+            help="artifact-store gets that found a valid artifact")
+obs.counter("store.artifact.misses",
+            help="artifact-store gets that missed (or hit a broken file)")
+obs.counter("store.artifact.puts", help="artifacts written to the store")
+obs.counter("store.artifact.evictions",
+            help="artifacts evicted by the byte-budget LRU")
+
 #: On-disk format version. Bump on any layout change; readers ignore
 #: artifacts from other versions (a stale store degrades to a cold one).
 STORE_VERSION = 1

@@ -10,18 +10,36 @@ Acceptance pins (ISSUE 9):
 * a request's trace id propagates from :meth:`BatchScheduler.submit`
   through the worker's flush into the construction spans, and
   :meth:`ScanService.metrics` returns one correlated snapshot keyed by it.
+
+Plus the fleet-telemetry layer (ISSUE 10): cross-process snapshot
+aggregation (:mod:`repro.obs.aggregate` + its CLI), the flight recorder's
+rotated delta trail, and the delta-additivity property that merging
+per-shard snapshot deltas reproduces the whole-run delta bit-exactly.
 """
+
+import json
+import os
+import socket
+import sys
 
 import numpy as np
 import pytest
+from _strategies import given, settings, st
 
 from repro import obs
 from repro.construction import SFACache
 from repro.core.prosite import synthetic_protein
 from repro.engine import ConstructionPolicy, ScanPlan, Scanner
 from repro.obs import parse_prometheus, render_prometheus, snapshot_delta
+from repro.obs.aggregate import (
+    DEFAULT_GAUGE_POLICIES,
+    main as aggregate_main,
+    merge_records,
+    merge_snapshots,
+)
 from repro.obs.export import read_jsonl, snapshot_record, span_records, \
     write_jsonl
+from repro.obs.flight import FlightRecorder, read_flight
 from repro.obs.tracing import _NOOP_SPAN
 from repro.scanservice import BatchScheduler, ScanService
 
@@ -296,3 +314,241 @@ def test_service_metrics_is_one_correlated_snapshot(docs, shared_cache):
     # an explicit trace id is honored
     assert svc.metrics(ticket.trace_id)["trace"]["trace_id"] == \
         ticket.trace_id
+
+
+# --------------------------------------------------------------------------
+# HELP descriptions and record attribution (host/pid)
+# --------------------------------------------------------------------------
+
+
+def test_help_lines_render_and_round_trip():
+    obs.counter("t.help.c", help="counted things")
+    obs.gauge("t.help.g", help="a level")
+    obs.histogram("t.help.h", edges=(1.0,), help="a spread\nsecond line")
+    obs.counter("t.help.c", help="a later, losing description")
+    text = obs.render_prometheus(obs.snapshot("t.help"))
+    assert "# HELP t_help_c counted things" in text
+    assert "# HELP t_help_g a level" in text
+    assert "# HELP t_help_h a spread\\nsecond line" in text   # escaped
+    assert "losing description" not in text   # first registration wins
+    # the round-trip contract survives HELP lines
+    back = parse_prometheus(text)
+    assert back["t_help_c"] == 0
+    assert back["t_help_h"]["edges"] == [1.0]
+
+
+def test_snapshot_record_carries_host_and_pid():
+    rec = snapshot_record({"t.rec.c": 1}, label="w")
+    assert rec["host"] == socket.gethostname()
+    assert rec["pid"] == os.getpid()
+    assert rec["kind"] == "metrics" and rec["label"] == "w"
+
+
+# --------------------------------------------------------------------------
+# Aggregation: merge semantics, per-metric gauge policies, the CLI
+# --------------------------------------------------------------------------
+
+
+def test_merge_snapshots_counters_histograms_gauges():
+    h = {"edges": [1.0, 2.0], "counts": [1, 0, 2], "sum": 7.0, "count": 3}
+    a = {"c": 3, "g": 1.5, "h": h}
+    b = {"c": 4, "g": 2.5,
+         "h": {"edges": [1.0, 2.0], "counts": [0, 5, 1], "sum": 9.0,
+               "count": 6}}
+    m = merge_snapshots([a, b])
+    assert m["c"] == 7
+    assert m["g"] == 2.5   # default policy: last
+    assert m["h"] == {"edges": [1.0, 2.0], "counts": [1, 5, 3],
+                      "sum": 16.0, "count": 9}
+    # inputs unmutated
+    assert a["h"]["counts"] == [1, 0, 2]
+    # per-metric and default policies
+    assert merge_snapshots([{"g": 5.0}, {"g": 2.0}],
+                           gauge_policy="max")["g"] == 5.0
+    assert merge_snapshots([{"g": 5.0}, {"g": 2.0}],
+                           gauge_policies={"g": "sum"})["g"] == 7.0
+    assert DEFAULT_GAUGE_POLICIES["scheduler.max_coalesced"] == "max"
+    assert merge_snapshots([{"scheduler.max_coalesced": 9.0},
+                            {"scheduler.max_coalesced": 4.0}]
+                           )["scheduler.max_coalesced"] == 9.0
+
+
+def test_merge_snapshots_rejects_incompatible_schemas():
+    with pytest.raises(TypeError):
+        merge_snapshots([{"x": 1}, {"x": 1.5}])   # counter vs gauge
+    h1 = {"edges": [1.0], "counts": [0, 0], "sum": 0.0, "count": 0}
+    h2 = {"edges": [2.0], "counts": [0, 0], "sum": 0.0, "count": 0}
+    with pytest.raises(ValueError):
+        merge_snapshots([{"h": h1}, {"h": h2}])   # edge mismatch
+    with pytest.raises(ValueError):
+        merge_snapshots([{"h": {"edges": [1.0], "counts": [0],
+                                "sum": 0.0, "count": 0}}])  # counts != edges+1
+    with pytest.raises(ValueError):
+        merge_snapshots([], gauge_policy="median")
+    with pytest.raises(ValueError):
+        merge_snapshots([], gauge_policies={"g": "median"})
+    with pytest.raises(TypeError):
+        merge_snapshots([{"x": True}])
+
+
+def test_merge_records_orders_by_ts_and_attributes_sources():
+    r1 = snapshot_record({"c": 1, "g": 10.0}, label="w0")
+    r2 = snapshot_record({"c": 2, "g": 20.0}, label="w1")
+    r1["host"], r1["pid"], r1["ts"] = "hostA", 1, 200.0
+    r2["host"], r2["pid"], r2["ts"] = "hostB", 2, 100.0
+    # pass newest first: ts ordering must still make hostA's gauge win
+    fleet = merge_records([r1, r2, {"kind": "span", "name": "x"}])
+    assert fleet["kind"] == "fleet" and fleet["n_records"] == 2
+    assert fleet["ts"] == 200.0
+    assert fleet["metrics"] == {"c": 3, "g": 10.0}
+    assert {(s["host"], s["pid"]) for s in fleet["sources"]} == \
+        {("hostA", 1), ("hostB", 2)}
+    # prefix restricts the namespace
+    r3 = snapshot_record({"jobs.n": 1, "other.n": 1})
+    assert merge_records([r3], prefix="jobs")["metrics"] == {"jobs.n": 1}
+
+
+def test_aggregate_cli_merges_worker_files(tmp_path, capsys):
+    w0, w1 = tmp_path / "w0.jsonl", tmp_path / "w1.jsonl"
+    write_jsonl(w0, [snapshot_record({"jobs.n": 3, "other": 1.0})])
+    write_jsonl(w1, [snapshot_record({"jobs.n": 4})])
+    with open(w1, "a") as f:
+        f.write('{"torn": ')   # a killed writer's partial line
+    out = tmp_path / "fleet.json"
+    assert aggregate_main([str(w0), str(w1), "-o", str(out)]) == 0
+    fleet = json.loads(out.read_text())
+    assert fleet["metrics"]["jobs.n"] == 7 and fleet["n_records"] == 2
+    # --format prom emits parseable exposition text
+    assert aggregate_main([str(w0), str(w1), "--format", "prom",
+                           "--prefix", "jobs"]) == 0
+    text = capsys.readouterr().out
+    assert parse_prometheus(text) == {"jobs_n": 7}
+    # missing file -> 1; no metric records -> 2
+    assert aggregate_main([str(tmp_path / "nope.jsonl")]) == 1
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    assert aggregate_main([str(empty)]) == 2
+
+
+def test_aggregate_module_is_runnable(tmp_path):
+    """`python -m repro.obs.aggregate` works without a runpy double-import
+    warning (the package re-exports lazily for exactly this reason)."""
+    import subprocess
+    w = tmp_path / "w.jsonl"
+    write_jsonl(w, [snapshot_record({"jobs.n": 5})])
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-W", "error::RuntimeWarning",
+         "-m", "repro.obs.aggregate", str(w)],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.abspath(src)},
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert json.loads(proc.stdout)["metrics"]["jobs.n"] == 5
+
+
+# --------------------------------------------------------------------------
+# Flight recorder: delta trail, rotation, idle skip, torn tails
+# --------------------------------------------------------------------------
+
+
+def test_flight_recorder_records_deltas_and_spans(tmp_path):
+    path = tmp_path / "flight" / "flight.jsonl"
+    obs.counter("t.flight.pre").inc(5)   # before the recorder: not its story
+    fr = FlightRecorder(path, label="worker")
+    obs.counter("t.flight.c").inc(2)
+    with obs.span("t.flight.span"):
+        pass
+    rec = fr.record(shard=3)
+    assert rec["kind"] == "flight" and rec["label"] == "worker"
+    assert rec["shard"] == 3
+    assert rec["metrics"]["t.flight.c"] == 2
+    assert "t.flight.pre" not in rec["metrics"]
+    assert rec["host"] == socket.gethostname() and rec["pid"] == os.getpid()
+    records = read_flight(path)
+    assert [r["kind"] for r in records] == ["flight", "span"]
+    assert records[1]["name"] == "t.flight.span"
+    # idle tick: force=False skips, force=True writes an empty delta
+    assert fr.record(force=False) is None
+    assert fr.record(force=True)["metrics"] == {}
+
+
+def test_flight_recorder_rotation_bounds_disk(tmp_path):
+    path = tmp_path / "flight.jsonl"
+    fr = FlightRecorder(path, max_bytes=400, max_files=3)
+    for i in range(60):
+        obs.counter("t.flightrot.c").inc()
+        fr.record(i=i)
+    files = sorted(p.name for p in tmp_path.iterdir())
+    assert files == ["flight.jsonl", "flight.jsonl.1", "flight.jsonl.2"]
+    assert all(p.stat().st_size < 400 + 300 for p in tmp_path.iterdir())
+    records = [r for r in read_flight(path) if r["kind"] == "flight"]
+    # oldest files dropped, order preserved, newest retained
+    idx = [r["i"] for r in records]
+    assert idx == sorted(idx) and idx[-1] == 59
+    # the retained contiguous stretch still merges exactly
+    merged = merge_records(records, prefix="t.flightrot")
+    assert merged["metrics"]["t.flightrot.c"] == len(records)
+
+
+def test_flight_recorder_periodic_thread_and_close(tmp_path):
+    path = tmp_path / "flight.jsonl"
+    with pytest.raises(ValueError):
+        FlightRecorder(path).start()   # periodic mode needs interval_s
+    with FlightRecorder(path, interval_s=0.01) as fr:
+        fr.start()
+        obs.counter("t.flightbg.c").inc(4)
+        import time
+        deadline = time.time() + 5.0
+        while time.time() < deadline:
+            recs = [r for r in read_flight(path)
+                    if r.get("kind") == "flight"
+                    and "t.flightbg.c" in r.get("metrics", {})]
+            if recs:
+                break
+            time.sleep(0.01)
+        assert recs, "periodic thread never recorded the delta"
+    assert fr._thread is None   # close() joined the thread
+
+
+def test_read_flight_skips_torn_tail(tmp_path):
+    path = tmp_path / "flight.jsonl"
+    fr = FlightRecorder(path)
+    obs.counter("t.flighttorn.c").inc()
+    fr.record()
+    with open(path, "a") as f:
+        f.write('{"kind": "flight", "metr')   # the kill -9 tail
+    records = read_flight(path)
+    assert len(records) == 1
+    assert records[0]["metrics"]["t.flighttorn.c"] == 1
+
+
+# --------------------------------------------------------------------------
+# The additivity property: per-shard deltas merge to the whole-run delta
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(shards=st.lists(
+    st.lists(st.tuples(st.integers(min_value=0, max_value=2),
+                       st.integers(min_value=1, max_value=50)),
+             min_size=0, max_size=6),
+    min_size=1, max_size=5,
+))
+def test_merged_shard_deltas_equal_whole_run_snapshot(shards):
+    """Acceptance: snapshot deltas taken per shard merge (bit-exactly, for
+    counters and histograms) to the delta of the uninterrupted run —
+    however the work was cut into shards."""
+    start = obs.snapshot("t.prop")
+    prev = start
+    deltas = []
+    for ops in shards:
+        for which, amount in ops:
+            obs.counter(f"t.prop.c{which}").inc(amount)
+            obs.histogram("t.prop.h", edges=(8.0, 32.0)).observe(
+                float(amount))
+        cur = obs.snapshot("t.prop")
+        deltas.append(snapshot_delta(prev, cur))
+        prev = cur
+    whole = snapshot_delta(start, obs.snapshot("t.prop"))
+    assert merge_snapshots(deltas) == whole

@@ -1,0 +1,247 @@
+"""Fleet-telemetry tests: the HTTP front and the corpus-job flight trail.
+
+Acceptance pins (ISSUE 10):
+* a live ``/metrics`` scrape taken **during** an active coalesced
+  scheduler burst parses with ``obs.parse_prometheus`` and round-trips —
+  concurrent scrapes from several threads included;
+* merging the per-shard flight-recorder deltas of a corpus job that was
+  killed after N shards and resumed by a fresh process reproduces the
+  uninterrupted job's deterministic ``jobs.*`` counter and histogram
+  totals exactly.
+"""
+
+import json
+import threading
+import urllib.error
+from urllib.request import urlopen
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.construction import SFACache
+from repro.core.prosite import synthetic_protein
+from repro.engine import ConstructionPolicy, ScanPlan, Scanner
+from repro.scanservice import (
+    CorpusJob,
+    CorpusManifest,
+    ScanService,
+    TelemetryServer,
+)
+from repro.scanservice.telemetry import PROM_CONTENT_TYPE
+
+PATTERNS = ["PS00016", "PS00005"]
+
+
+@pytest.fixture(autouse=True)
+def obs_enabled():
+    obs.enable()
+    yield
+    obs.enable()
+
+
+@pytest.fixture(scope="module")
+def docs():
+    return [synthetic_protein(120, seed=i) for i in range(4)]
+
+
+@pytest.fixture(scope="module")
+def shared_cache():
+    return SFACache()
+
+
+def _plan(cache):
+    return ScanPlan(construction=ConstructionPolicy(cache=cache,
+                                                    method="batched"))
+
+
+def _get(url: str):
+    """-> (status, content-type, body text)."""
+    with urlopen(url, timeout=10) as resp:
+        return resp.status, resp.headers.get("Content-Type"), \
+            resp.read().decode("utf-8")
+
+
+# --------------------------------------------------------------------------
+# TelemetryServer: lifecycle and the three endpoints
+# --------------------------------------------------------------------------
+
+
+def test_server_lifecycle_and_metrics_endpoint():
+    obs.counter("t.tele.c", help="a described counter").inc(3)
+    srv = TelemetryServer()
+    assert not srv.running and srv.port is None and srv.url is None
+    with srv:
+        assert srv.running and srv.port > 0
+        assert srv.start() is srv   # idempotent
+        status, ctype, body = _get(f"{srv.url}/metrics")
+        assert status == 200 and ctype == PROM_CONTENT_TYPE
+        assert "# HELP t_tele_c a described counter" in body
+        parsed = obs.parse_prometheus(body)
+        assert parsed["t_tele_c"] == 3
+        # the parse->render->parse fixpoint (the round-trip contract, over
+        # the live scrape rather than a hand-built snapshot)
+        assert obs.parse_prometheus(obs.render_prometheus(parsed)) == parsed
+    assert not srv.running
+    srv.close()   # idempotent after close
+
+
+def test_healthz_without_service_and_traces_and_404():
+    with TelemetryServer() as srv:
+        status, ctype, body = _get(f"{srv.url}/healthz")
+        health = json.loads(body)
+        assert status == 200 and ctype == "application/json"
+        assert health["status"] == "ok" and health["pid"] > 0
+        assert "scheduler" not in health   # bare server: process identity only
+
+        with obs.span("t.tele.span"):
+            pass
+        status, _, body = _get(f"{srv.url}/traces?limit=5")
+        traces = json.loads(body)
+        assert status == 200
+        assert any("t.tele.span" in t["names"] for t in traces["traces"])
+        assert len(traces["traces"]) <= 5
+
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(f"{srv.url}/nope")
+        assert ei.value.code == 404
+        assert "/metrics" in json.loads(ei.value.read().decode())["routes"]
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(f"{srv.url}/traces?limit=banana")
+        assert ei.value.code == 400
+
+
+def test_service_owns_telemetry_and_healthz_reports_state(tmp_path, docs,
+                                                          shared_cache):
+    svc = ScanService(tmp_path / "store", plan=_plan(shared_cache),
+                      cache=shared_cache)
+    with svc:
+        srv = svc.serve_telemetry()
+        assert svc.telemetry is srv and srv.running
+        with pytest.raises(RuntimeError):
+            svc.serve_telemetry()   # one server per service
+        ticket = svc.submit(PATTERNS, docs)
+        svc.flush()
+        ticket.result()
+        health = json.loads(_get(f"{srv.url}/healthz")[2])
+        assert health["status"] == "ok"
+        assert health["scheduler"]["requests"] >= 1
+        assert health["scheduler"]["driver"] == "sync"
+        assert 0.0 <= health["cache"]["hit_rate"] <= 1.0
+        assert health["store"]["entries"] >= 0
+        assert health["store"]["root"] == str(tmp_path / "store")
+        url = srv.url
+    # close() stopped the server and released the slot
+    assert svc.telemetry is None and not srv.running
+    with pytest.raises(OSError):
+        _get(f"{url}/healthz")
+
+
+def test_concurrent_scrapes_during_active_bursts(docs, shared_cache):
+    """Acceptance: /metrics stays parseable while the scheduler is mid-
+    burst, under several scraping threads — every scrape round-trips."""
+    svc = ScanService(plan=_plan(shared_cache), cache=shared_cache,
+                      driver="thread", window_s=0.001, max_batch=8)
+    with svc:
+        srv = svc.serve_telemetry()
+        stop = threading.Event()
+        failures: list = []
+
+        def scrape_loop():
+            while not stop.is_set():
+                try:
+                    _, ctype, body = _get(f"{srv.url}/metrics")
+                    assert ctype == PROM_CONTENT_TYPE
+                    parsed = obs.parse_prometheus(body)
+                    assert obs.parse_prometheus(
+                        obs.render_prometheus(parsed)) == parsed
+                except Exception as e:   # pragma: no cover - failure path
+                    failures.append(e)
+                    return
+
+        scrapers = [threading.Thread(target=scrape_loop) for _ in range(3)]
+        for t in scrapers:
+            t.start()
+        try:
+            # Keep the scheduler genuinely busy under the scrapes.
+            tickets = [svc.submit(PATTERNS[i % 2:i % 2 + 1], docs)
+                       for i in range(12)]
+            results = [t.result() for t in tickets]
+        finally:
+            stop.set()
+            for t in scrapers:
+                t.join()
+        assert not failures, failures[0]
+        # coalescing under scrapes stayed bit-identical to direct scans
+        direct = Scanner.compile(PATTERNS, _plan(shared_cache))
+        full = direct.scan(docs).hits
+        for i, res in enumerate(results):
+            assert np.array_equal(res.hits, full[i % 2:i % 2 + 1])
+        snap = obs.parse_prometheus(_get(f"{srv.url}/metrics")[2])
+        assert snap["scheduler_requests"] >= 12
+
+
+# --------------------------------------------------------------------------
+# CorpusJob flight trail: kill/resume merges to the whole-job view
+# --------------------------------------------------------------------------
+
+
+def _job(tmp_path, name, cache, docs, **kwargs):
+    man = CorpusManifest.from_docs(docs, shard_docs=3)
+    return CorpusJob(PATTERNS, man, tmp_path / name, plan=_plan(cache),
+                     **kwargs)
+
+
+def test_killed_and_resumed_job_flight_merge_is_exact(tmp_path,
+                                                      shared_cache):
+    """Acceptance: per-shard flight deltas of a killed-then-resumed job
+    merge to the uninterrupted job's jobs.* totals bit-exactly."""
+    docs = [synthetic_protein(60, seed=i) for i in range(20)]
+
+    straight = _job(tmp_path, "straight", shared_cache, docs)
+    assert straight.run().complete
+    want = straight.flight_totals()["metrics"]
+    assert want["jobs.shards_scanned"] == straight.manifest.n_shards
+    assert want["jobs.items_scanned"] == len(docs)
+    assert want["jobs.shard_items"]["count"] == straight.manifest.n_shards
+
+    # "Kill" after 3 shards; a fresh job object (fresh process stand-in,
+    # same workdir) resumes and appends to the same flight trail.
+    first = _job(tmp_path, "resumed", shared_cache, docs)
+    first.run(max_shards=3)
+    assert not first.complete
+    second = _job(tmp_path, "resumed", shared_cache, docs)
+    assert second.run().complete
+    got = second.flight_totals()["metrics"]
+    assert got == want   # counters AND histogram, bit-exact
+
+    # the scan results match too (the pre-existing kill/resume contract)
+    assert np.array_equal(straight.aggregate().hits,
+                          second.aggregate().hits)
+
+
+def test_flight_records_are_per_shard_and_attributed(tmp_path, shared_cache,
+                                                     docs):
+    job = _job(tmp_path, "attributed", shared_cache, docs)
+    job.run()
+    shard_recs = [r for r in job.flight_records()
+                  if r.get("kind") == "flight" and "shard" in r]
+    assert len(shard_recs) == job.manifest.n_shards
+    for rec in shard_recs:
+        start, stop = job.manifest.shard_range(rec["shard"])
+        assert rec["items"] == stop - start
+        assert rec["metrics"]["jobs.shards_scanned"] == 1
+        assert rec["metrics"]["jobs.items_scanned"] == stop - start
+        assert rec["host"] and rec["pid"] > 0
+    # each shard's spans rode along on the trail
+    span_names = {r["name"] for r in job.flight_records()
+                  if r.get("kind") == "span"}
+    assert "jobs.shard" in span_names
+
+
+def test_flight_can_be_disabled(tmp_path, shared_cache, docs):
+    job = _job(tmp_path, "noflight", shared_cache, docs, flight=False)
+    assert job.flight is None
+    job.run()
+    assert not job.flight_path.exists()
+    assert job.flight_records() == []
